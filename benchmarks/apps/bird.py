@@ -1,0 +1,77 @@
+"""BIRD [Feng et al. 2025]: Bayesian inference from abduction and
+deduction — an LLM abduces factors for a query, multiple LLM calls assess
+each factor's evidence (the parallelizable hyperparameter of paper §8.4),
+and a small Bayesian combination produces a calibrated probability."""
+
+from repro.core import poppy, sequential
+from repro.core.ai import llm
+
+NAME = "BIRD"
+OUT = []
+
+
+@sequential
+def emit(line):
+    OUT.append(line)
+    return None
+
+
+N_FACTORS = 4
+N_ASSESSMENTS = 3   # LLM calls per factor (paper varies this 1..20)
+
+
+@poppy
+def abduce_factors(query):
+    r = llm(f"list {N_FACTORS} factors relevant to: {query}", max_tokens=24)
+    words = r.split()
+    factors = tuple()
+    for i in range(N_FACTORS):
+        if i < len(words):
+            factors += (words[i],)
+        else:
+            factors += (f"factor{i}",)
+    return factors
+
+
+@poppy
+def assess_factor(query, factor, n):
+    votes = tuple()
+    for i in range(n):
+        r = llm(f"does factor '{factor}' support '{query}'? "
+                f"assessment {i}", max_tokens=6)
+        votes += (len(r) % 2,)
+    return votes
+
+
+@poppy
+def bird(query):
+    factors = abduce_factors(query)
+    all_votes = tuple()
+    for f in factors:
+        votes = assess_factor(query, f, N_ASSESSMENTS)
+        s = 0
+        for v in votes:
+            s += v
+        emit(f"factor {f}: {s}/{N_ASSESSMENTS}")
+        all_votes += (s,)
+    # Bayesian-ish combination: product of per-factor odds
+    num = 1.0
+    den = 1.0
+    for s in all_votes:
+        p = (s + 1) / (N_ASSESSMENTS + 2)
+        num *= p
+        den *= (1 - p)
+    prob = num / (num + den)
+    emit(f"p = {prob:.3f}")
+    return prob
+
+
+DEFAULT_INPUT = "will it rain tomorrow in Seattle?"
+ENTRY = bird
+FUNCS = [bird, abduce_factors, assess_factor]
+EXTERNALS = ["llm", "emit"]
+
+
+def run(query=DEFAULT_INPUT):
+    OUT.clear()
+    return ENTRY(query)

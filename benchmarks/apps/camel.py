@@ -1,0 +1,152 @@
+"""CaMeL-style generated programs [Debenedetti et al. 2026].
+
+CaMeL has an LLM emit a small Python program per AgentDojo "workspace"
+task and executes it.  We reproduce the *shape* of that suite: 30 small
+generated programs over a mock workspace (files, calendar, email) —
+some make zero LLM calls, some fan out over drive files, some chain
+dependent calls — matching Table 1's ranges (LoC 2–114, 0–8 externals).
+Programs are generated deterministically from their index."""
+
+from repro.core import poppy, readonly, sequential, unordered
+from repro.core.ai import llm
+
+NAME = "CaMeL"
+OUT = []
+
+
+class Workspace:
+    def __init__(self):
+        self.files = {
+            f"file{i}.txt": f"contents of file {i} "
+                            + ("vacation plans june" if i == 3 else "notes")
+            for i in range(6)
+        }
+        self.calendar = [f"meeting {i} on day {i}" for i in range(4)]
+        self.sent = []
+
+
+WS = Workspace()
+
+
+@sequential
+def emit(line):
+    OUT.append(line)
+    return None
+
+
+@readonly
+def list_files():
+    return tuple(sorted(WS.files))
+
+
+@readonly
+def read_file(name):
+    return WS.files.get(name, "")
+
+
+@sequential
+def write_file(name, contents):
+    WS.files[name] = contents
+    return None
+
+
+@readonly
+def get_calendar():
+    return tuple(WS.calendar)
+
+
+@sequential
+def send_email(to, body):
+    WS.sent.append((to, body))
+    return None
+
+
+def _make_program(i: int):
+    """Deterministically build program variant i (0..29)."""
+    kind = i % 6
+
+    if kind == 0:
+        # no LLM calls: pure workspace manipulation (PopPy overhead case)
+        @poppy
+        def prog():
+            names = list_files()
+            n = 0
+            for name in names:
+                body = read_file(name)
+                n += len(body)
+            emit(f"total {n}")
+            return n
+    elif kind == 1:
+        # single LLM call (CaMeL-28-like: overhead hidden by the call)
+        @poppy
+        def prog():
+            doc = read_file("file1.txt")
+            score = llm(f"extract feedback score from: {doc}", max_tokens=4)
+            emit(score)
+            return score
+    elif kind == 2:
+        # fan-out over drive files (CaMeL-36-like: parallelizable)
+        @poppy
+        def prog():
+            names = list_files()
+            found = tuple()
+            for name in names:
+                body = read_file(name)
+                verdict = llm(f"is this a vacation plan? {body}",
+                              max_tokens=3)
+                if len(verdict) % 2 == 0:
+                    found += (name,)
+            emit(f"candidates: {found}")
+            return found
+    elif kind == 3:
+        # two independent generations from one source + a write
+        @poppy
+        def prog():
+            body = read_file("file3.txt")
+            summary = llm(f"what happens on june 13 per: {body}",
+                          max_tokens=16)
+            packing = llm(f"make a packing list from: {body}",
+                          max_tokens=16)
+            write_file("packing.txt", packing)
+            emit(summary)
+            return (summary, packing)
+    elif kind == 4:
+        # dependent chain (not parallelizable)
+        @poppy
+        def prog():
+            events = get_calendar()
+            pick = llm(f"which event matters most: {events}", max_tokens=8)
+            draft = llm(f"draft an email about {pick}", max_tokens=16)
+            send_email("boss@example.com", draft)
+            emit("sent")
+            return draft
+    else:
+        # mixed: calendar fan-out + summary reduction
+        @poppy
+        def prog():
+            events = get_calendar()
+            notes = tuple()
+            for e in events:
+                note = llm(f"one-line prep note for {e}", max_tokens=8)
+                notes += (note,)
+            combined = llm(f"merge notes: {notes}", max_tokens=16)
+            emit(combined)
+            return combined
+
+    prog.original.__qualname__ = f"camel_{i:02d}"
+    return prog
+
+
+PROGRAMS = {f"C-{i+1}": _make_program(i) for i in range(30)}
+
+
+def makes_llm_calls(key: str) -> bool:
+    i = int(key.split("-")[1]) - 1
+    return i % 6 != 0
+
+
+def run(key: str):
+    OUT.clear()
+    global WS
+    WS = Workspace()
+    return PROGRAMS[key]()

@@ -1,0 +1,66 @@
+"""Diverse Agent Entropy [Feng et al. 2025]: several agents answer a
+question from diverse perspectives, debate in rounds while seeing each
+other's answers, and converge; uncertainty is the answer-distribution
+entropy."""
+
+from repro.core import poppy, sequential
+from repro.core.ai import llm
+
+NAME = "DAE"
+OUT = []
+
+
+@sequential
+def emit(line):
+    OUT.append(line)
+    return None
+
+
+N_AGENTS = 5
+N_ROUNDS = 2
+PERSPECTIVES = ("scientist", "historian", "engineer", "economist", "critic")
+
+
+@poppy
+def agent_answer(question, persona, context):
+    r = llm(f"as a {persona}, answer briefly: {question} | context: "
+            f"{context}", max_tokens=12)
+    return r.split()[0] if r else "unknown"
+
+
+@poppy
+def debate(question):
+    answers = tuple()
+    for i in range(N_AGENTS):
+        a = agent_answer(question, PERSPECTIVES[i], "")
+        answers += (a,)
+    for rnd in range(N_ROUNDS):
+        emit(f"round {rnd}: {answers}")
+        revised = tuple()
+        for i in range(N_AGENTS):
+            others = answers[:i] + answers[i + 1:]
+            a = agent_answer(question, PERSPECTIVES[i],
+                             f"other agents said {others}")
+            revised += (a,)
+        answers = revised
+    counts = {}
+    for a in answers:
+        counts[a] = counts.get(a, 0) + 1
+    best = None
+    best_n = 0
+    for a, n in sorted(counts.items()):
+        if n > best_n:
+            best, best_n = a, n
+    emit(f"final: {best} ({best_n}/{N_AGENTS})")
+    return (best, best_n, len(counts))
+
+
+DEFAULT_INPUT = "what is the boiling point of water at sea level?"
+ENTRY = debate
+FUNCS = [debate, agent_answer]
+EXTERNALS = ["llm", "emit"]
+
+
+def run(question=DEFAULT_INPUT):
+    OUT.clear()
+    return ENTRY(question)

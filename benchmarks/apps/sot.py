@@ -1,0 +1,44 @@
+"""Skeleton of Thought [Ning et al. 2024]: one LLM call drafts an answer
+skeleton; each skeleton point expands with an independent LLM call.  The
+original implementation never actually ran in parallel (paper §9) —
+PopPy extracts the intended parallelism from the sequential code."""
+
+from repro.core import poppy, sequential
+from repro.core.ai import llm
+
+NAME = "SoT"
+OUT = []
+
+
+@sequential
+def emit(line):
+    OUT.append(line)
+    return None
+
+
+N_POINTS = 6
+
+
+@poppy
+def skeleton_of_thought(question):
+    skeleton = llm(f"outline {N_POINTS} short bullet points for: "
+                   f"{question}", max_tokens=32)
+    points = skeleton.split()
+    answer = tuple()
+    for idx, point in enumerate(points[:N_POINTS]):
+        expansion = llm(f"expand point '{point}' of question {question}",
+                        max_tokens=48)
+        emit(f"point {idx} done")
+        answer += ((point, expansion),)
+    return answer
+
+
+DEFAULT_INPUT = "how do solar panels work?"
+ENTRY = skeleton_of_thought
+FUNCS = [skeleton_of_thought]
+EXTERNALS = ["llm", "emit"]
+
+
+def run(question=DEFAULT_INPUT):
+    OUT.clear()
+    return ENTRY(question)

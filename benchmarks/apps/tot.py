@@ -1,0 +1,82 @@
+"""Tree of Thoughts [Yao et al. 2023] — paper Fig. 1, faithfully:
+beam search where an LLM proposes successor states and scores them, with a
+value cache and ordered logging."""
+
+from repro.core import poppy, sequential
+from repro.core.ai import llm
+
+NAME = "ToT"
+OUT = []
+
+
+@sequential
+def emit(line):
+    OUT.append(line)
+    return None
+
+
+NUM_STEPS = 3
+BEAM_WIDTH = 5
+
+
+@poppy
+def tree_of_thoughts(task):
+    states = ("",)
+    for step in range(NUM_STEPS):
+        new_states = tuple()
+        for s in states:
+            new_states += llm_get_proposals(task, s)
+        values = get_values(task, new_states)
+        states = topk(new_states, values, BEAM_WIDTH)
+        emit(f"step {step}: {states}")
+    return states
+
+
+@poppy
+def get_values(task, states):
+    value_cache = frozenset()
+    values = tuple()
+    for idx, state in enumerate(states):
+        if state in value_cache:
+            value = 0
+            emit(f"{idx}: duplicate")
+        else:
+            value = llm_get_value(task, state)
+            value_cache |= {state}
+            emit(f"{idx}: {value}")
+        values += (value,)
+    return values
+
+
+@poppy
+def llm_get_proposals(task, state):
+    r = llm(f"propose next thoughts | task: {task} | state: {state}",
+            max_tokens=24)
+    return tuple(r.split())
+
+
+@poppy
+def llm_get_value(task, state):
+    r = llm(f"rate 1-10 | task: {task} | state: {state}", max_tokens=4)
+    return len(r)
+
+
+@poppy
+def topk(states, values, k):
+    pairs = sorted(zip(values, states), reverse=True)
+    out = tuple()
+    for v, s in pairs[:k]:
+        out += (s,)
+    return out
+
+
+DEFAULT_INPUT = "solve 24 with 4 4 6 8"
+ENTRY = tree_of_thoughts
+FUNCS = [tree_of_thoughts, get_values, llm_get_proposals, llm_get_value,
+         topk]
+EXTERNALS = ["llm", "emit"]
+
+
+def run(task=DEFAULT_INPUT):
+    OUT.clear()
+    return ENTRY(task)

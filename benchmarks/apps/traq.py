@@ -1,0 +1,78 @@
+"""TRAQ [Li et al. 2024]: trustworthy retrieval-augmented QA — embed the
+query, retrieve top-k documents from a vector store (embedding calls
+parallelize), generate multiple answers per document (parallel LLM calls),
+cluster the answers, and emit a conformal answer set."""
+
+from repro.core import poppy, readonly, sequential, unordered
+from repro.core.ai import embed, llm
+
+NAME = "TRAQ"
+OUT = []
+
+_DOCS = tuple(
+    f"document {i} about topic {t}"
+    for i, t in enumerate(("solar", "wind", "hydro", "nuclear", "coal",
+                           "gas", "geothermal", "biomass")))
+
+
+@sequential
+def emit(line):
+    OUT.append(line)
+    return None
+
+
+@unordered
+def dot(a, b):
+    return sum(x * y for x, y in zip(a, b))
+
+
+TOP_K = 3
+GEN_PER_DOC = 2
+
+
+@poppy
+def retrieve(query_vec):
+    scored = tuple()
+    for idx, doc in enumerate(_DOCS):
+        v = embed(doc)
+        scored += ((dot(query_vec, v), idx),)
+    ranked = sorted(scored, reverse=True)
+    out = tuple()
+    for s, idx in ranked[:TOP_K]:
+        out += (idx,)
+    return out
+
+
+@poppy
+def traq(question):
+    qv = embed(question)
+    doc_ids = retrieve(qv)
+    answers = tuple()
+    for d in doc_ids:
+        for j in range(GEN_PER_DOC):
+            a = llm(f"answer '{question}' using {_DOCS[d]} (sample {j})",
+                    max_tokens=8)
+            answers += (a.split()[0],)
+    clusters = {}
+    for a in answers:
+        clusters[a] = clusters.get(a, 0) + 1
+    conformal = tuple()
+    for a, n in sorted(clusters.items()):
+        if n >= 2:
+            conformal += (a,)
+    if not conformal:
+        for a, n in sorted(clusters.items()):
+            conformal += (a,)
+    emit(f"conformal set: {conformal}")
+    return conformal
+
+
+DEFAULT_INPUT = "which renewable energy source is most reliable?"
+ENTRY = traq
+FUNCS = [traq, retrieve]
+EXTERNALS = ["llm", "embed", "dot", "emit"]
+
+
+def run(question=DEFAULT_INPUT):
+    OUT.clear()
+    return ENTRY(question)

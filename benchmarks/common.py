@@ -1,0 +1,85 @@
+"""Shared benchmark runner: executes an app under standard Python and under
+PopPy with a deterministic latency-modeled LLM backend, checking result
+equality and ≡_A trace equivalence on every trial (so every benchmark run
+is also a soundness test)."""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.core import equivalent, recording, sequential_mode
+from repro.core.ai import SimulatedBackend, use_backend
+from repro.core.registry import force_sequential_annotations
+
+# latency model reported in EXPERIMENTS.md: base 30 ms + 2 ms/token with
+# ±30% deterministic per-prompt jitter (time_scale rescales the whole model
+# for quick runs; speedup ratios are scale-invariant modulo the fixed
+# interpreter overhead, which *understates* PopPy at small scales)
+DEFAULT_BACKEND = dict(base_s=0.03, per_token_s=0.002, jitter_frac=0.3)
+
+
+def make_backend(scale=1.0):
+    return SimulatedBackend(time_scale=scale, **DEFAULT_BACKEND)
+
+
+def run_once(run_fn, arg, *, mode, scale=1.0):
+    be = make_backend(scale)
+    with use_backend(be), recording() as tr:
+        t0 = time.perf_counter()
+        if mode == "plain":
+            with sequential_mode():
+                result = run_fn(arg) if arg is not None else run_fn()
+        elif mode == "poppy_seq":
+            with force_sequential_annotations():
+                result = run_fn(arg) if arg is not None else run_fn()
+        else:
+            result = run_fn(arg) if arg is not None else run_fn()
+        dt = time.perf_counter() - t0
+    return result, dt, tr, be
+
+
+def bench_app(run_fn, arg=None, *, trials=3, scale=1.0, check=True):
+    """Returns dict with median plain/poppy times, speedup, #llm calls."""
+    plain_times, poppy_times = [], []
+    n_calls = 0
+    for t in range(trials):
+        r1, dt1, tr1, be1 = run_once(run_fn, arg, mode="plain", scale=scale)
+        r2, dt2, tr2, be2 = run_once(run_fn, arg, mode="poppy", scale=scale)
+        plain_times.append(dt1)
+        poppy_times.append(dt2)
+        n_calls = len(be1.calls)
+        if check:
+            assert r1 == r2, f"results diverge: {r1!r} vs {r2!r}"
+            ok, why = equivalent(tr1, tr2)
+            assert ok, f"trace not ≡_A: {why}"
+            assert len(be1.calls) == len(be2.calls)
+    plain = statistics.median(plain_times)
+    poppy = statistics.median(poppy_times)
+    return {
+        "plain_s": plain,
+        "poppy_s": poppy,
+        "speedup": plain / poppy if poppy > 0 else float("inf"),
+        "llm_calls": n_calls,
+        "trials": trials,
+    }
+
+
+def overhead_of(run_fn, arg=None, *, trials=3, scale=1.0):
+    """Paper Fig. 7: absolute overhead of the λ^O interpreter+runtime with
+    all externals forced sequential (zero extracted parallelism)."""
+    plain, seq = [], []
+    for t in range(trials):
+        _, dt1, _, _ = run_once(run_fn, arg, mode="plain", scale=scale)
+        _, dt2, _, _ = run_once(run_fn, arg, mode="poppy_seq", scale=scale)
+        plain.append(dt1)
+        seq.append(dt2)
+    p = statistics.median(plain)
+    s = statistics.median(seq)
+    return {"plain_s": p, "poppy_seq_s": s, "overhead_s": s - p,
+            "overhead_rel": (s - p) / p if p > 0 else 0.0}
+
+
+def all_apps():
+    from benchmarks.apps import bird, dae, sot, tot, traq
+    return [(m.NAME, m.run, None) for m in (bird, dae, tot, sot, traq)]

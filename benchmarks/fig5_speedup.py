@@ -1,0 +1,53 @@
+"""Fig. 5: median speedup of PopPy over standard Python execution for the
+five literature apps and the CaMeL suite (LLM-calling programs).  Every
+trial also asserts result equality and ≡_A trace equivalence."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import all_apps, bench_app
+
+
+def run(out_dir="experiments/apps", trials=3, scale=1.0, camel_count=30):
+    from benchmarks.apps import camel
+
+    results = {}
+    for name, fn, arg in all_apps():
+        r = bench_app(fn, arg, trials=trials, scale=scale)
+        results[name] = r
+        print(f"{name:8s} plain {r['plain_s']:.3f}s  poppy "
+              f"{r['poppy_s']:.3f}s  speedup {r['speedup']:.2f}×  "
+              f"({r['llm_calls']} llm calls)", flush=True)
+
+    camel_speedups = []
+    for key in list(camel.PROGRAMS)[:camel_count]:
+        if not camel.makes_llm_calls(key):
+            continue  # Fig. 5 includes only LLM-calling CaMeL programs
+        r = bench_app(camel.run, key, trials=max(trials - 1, 1), scale=scale)
+        results[f"CaMeL-{key}"] = r
+        camel_speedups.append(r["speedup"])
+        print(f"{key:8s} plain {r['plain_s']:.3f}s  poppy "
+              f"{r['poppy_s']:.3f}s  speedup {r['speedup']:.2f}×",
+              flush=True)
+
+    speedups = [r["speedup"] for r in results.values()]
+    geo = 1.0
+    for s in speedups:
+        geo *= s
+    geo **= 1.0 / len(speedups)
+    summary = {"geomean": geo, "min": min(speedups), "max": max(speedups),
+               "n_programs": len(speedups)}
+    print(f"\nspeedup geomean {geo:.2f}×  min {summary['min']:.2f}×  "
+          f"max {summary['max']:.2f}×  over {len(speedups)} programs")
+
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig5.json").write_text(json.dumps(
+        {"results": results, "summary": summary}, indent=1))
+    return results, summary
+
+
+if __name__ == "__main__":
+    run()

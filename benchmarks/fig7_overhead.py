@@ -1,0 +1,38 @@
+"""Fig. 7: absolute execution-time overhead of PopPy's interpreter+runtime
+vs plain Python, with all external calls forced @sequential (zero extracted
+parallelism — isolates the λ^O interpreter cost)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import all_apps, overhead_of
+
+
+def run(out_dir="experiments/apps", trials=3, scale=1.0):
+    from benchmarks.apps import camel
+
+    results = {}
+    for name, fn, arg in all_apps():
+        r = overhead_of(fn, arg, trials=trials, scale=scale)
+        results[name] = r
+        print(f"{name:8s} plain {r['plain_s']*1e3:8.1f} ms  "
+              f"all-seq poppy {r['poppy_seq_s']*1e3:8.1f} ms  "
+              f"overhead {r['overhead_s']*1e3:+7.1f} ms "
+              f"({r['overhead_rel']*100:+.2f}%)", flush=True)
+    # a no-LLM CaMeL program isolates pure interpreter overhead
+    r = overhead_of(camel.run, "C-1", trials=trials, scale=scale)
+    results["CaMeL-C-1 (no LLM)"] = r
+    print(f"{'C-1':8s} plain {r['plain_s']*1e3:8.1f} ms  "
+          f"all-seq poppy {r['poppy_seq_s']*1e3:8.1f} ms  "
+          f"overhead {r['overhead_s']*1e3:+7.1f} ms")
+
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig7.json").write_text(json.dumps(results, indent=1))
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Fig. 8: speedup as a function of available parallelism — ToT's
+BEAM_WIDTH and BIRD's per-factor assessment count."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import bench_app
+
+
+def run(out_dir="experiments/apps", trials=2, scale=1.0,
+        beams=(1, 2, 5, 10, 20), assessments=(1, 3, 5, 10, 20)):
+    from benchmarks.apps import bird, tot
+
+    results = {"ToT": {}, "BIRD": {}}
+    old = tot.BEAM_WIDTH
+    try:
+        for b in beams:
+            tot.BEAM_WIDTH = b
+            r = bench_app(tot.run, trials=trials, scale=scale)
+            results["ToT"][b] = r
+            print(f"ToT beam={b:3d}: {r['speedup']:.2f}× "
+                  f"({r['llm_calls']} calls)", flush=True)
+    finally:
+        tot.BEAM_WIDTH = old
+
+    old = bird.N_ASSESSMENTS
+    try:
+        for n in assessments:
+            bird.N_ASSESSMENTS = n
+            r = bench_app(bird.run, trials=trials, scale=scale)
+            results["BIRD"][n] = r
+            print(f"BIRD n={n:3d}: {r['speedup']:.2f}× "
+                  f"({r['llm_calls']} calls)", flush=True)
+    finally:
+        bird.N_ASSESSMENTS = old
+
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig8.json").write_text(json.dumps(
+        {k: {str(kk): vv for kk, vv in v.items()}
+         for k, v in results.items()}, indent=1))
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,113 @@
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count"
+                                 "=512")
+
+"""Perf hillclimb harness (§Perf): measure one (arch × shape) cell's
+roofline terms under config overrides, logging
+hypothesis → change → before → after to experiments/perf/.
+
+    python -m benchmarks.hillclimb --arch yi-34b --shape train_4k \
+        --set param_strategy=zero2 --note "ZeRO-2 weights"
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import hardware_constants, make_production_mesh
+
+HW = hardware_constants()
+
+
+def measure(arch, shape_name, overrides: dict, mesh=None):
+    from benchmarks.roofline import cell_costs, model_flops
+    from repro.models import build_model
+    import repro.configs as C
+
+    mesh = mesh or make_production_mesh(multi_pod=False)
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    # route the overridden cfg through cell_costs by registry patching
+    orig = C.REGISTRY[arch]
+    C.REGISTRY[arch] = cfg
+    try:
+        costs, _ = cell_costs(arch, shape_name, mesh)
+    finally:
+        C.REGISTRY[arch] = orig
+    t_c = costs["flops"] / HW["peak_flops_bf16"]
+    t_m = costs["bytes"] / HW["hbm_bandwidth"]
+    t_x = costs["coll_bytes"] / HW["ici_link_bandwidth"]
+    mf = model_flops(cfg, SHAPES[shape_name], build_model(cfg).num_params())
+    bound = max(t_c, t_m, t_x)
+    return {
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "bound_s": bound,
+        "dominant": max(("compute", t_c), ("memory", t_m),
+                        ("collective", t_x), key=lambda kv: kv[1])[0],
+        "roofline_fraction": (mf / (256 * HW["peak_flops_bf16"])) / bound,
+        "flops_per_dev": costs["flops"], "bytes_per_dev": costs["bytes"],
+        "coll_bytes_per_dev": costs["coll_bytes"],
+    }
+
+
+def _parse_val(v):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            continue
+    return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE")
+    ap.add_argument("--note", default="")
+    ap.add_argument("--baseline", action="store_true",
+                    help="also measure without overrides for comparison")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = _parse_val(v)
+
+    mesh = make_production_mesh(multi_pod=False)
+    rows = []
+    if args.baseline or not overrides:
+        t0 = time.time()
+        base = measure(args.arch, args.shape, {}, mesh)
+        base.update(variant="baseline", note="paper-faithful defaults",
+                    measure_s=round(time.time() - t0, 1))
+        rows.append(base)
+        print(json.dumps(base, indent=1))
+    if overrides:
+        t0 = time.time()
+        rec = measure(args.arch, args.shape, overrides, mesh)
+        rec.update(variant=str(overrides), note=args.note,
+                   measure_s=round(time.time() - t0, 1))
+        rows.append(rec)
+        print(json.dumps(rec, indent=1))
+
+    out = Path("experiments/perf")
+    out.mkdir(parents=True, exist_ok=True)
+    log = out / f"hillclimb_{args.arch}__{args.shape}.jsonl"
+    with log.open("a") as f:
+        for r in rows:
+            f.write(json.dumps({"arch": args.arch, "shape": args.shape,
+                                **r}) + "\n")
+    print(f"appended {len(rows)} rows to {log}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count"
+                                 "=512")
+
+"""Roofline analysis per (architecture × shape) on the single-pod mesh.
+
+Three terms derived from compiled dry-run artifacts (TPU v5e targets:
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+    T_compute    = HLO_FLOPs/device ÷ peak_FLOPs
+    T_memory     = HLO_bytes/device ÷ HBM_bw
+    T_collective = collective_bytes/device ÷ link_bw
+
+XLA's ``cost_analysis()`` counts a ``while`` (lax.scan) body once, so a
+full-depth scanned lowering under-reports by ~L×.  We therefore use
+**block-delta costing**: lower depth-1 and depth-2 *unrolled* variants;
+per-layer-group cost = (depth-2 − depth-1); fixed cost (embed/logits/loss/
+non-layer optimizer work) = depth-1 − delta; total = fixed + n_groups·delta.
+This is exact for homogeneous stacks (hybrid tail blocks approximated as a
+pattern fraction; encoder/decoder deltas measured independently).
+
+Also reports MODEL_FLOPS = 6·N·D (dense train; 6·N_active·D for MoE,
+2·N·D for prefill/decode) and the useful-compute roofline fraction
+MODEL_TIME / max(T_c, T_m, T_coll).
+"""
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.launch.dryrun import collective_stats
+from repro.launch.mesh import hardware_constants
+from repro.launch.steps import lower_cell
+
+HW = hardware_constants()
+
+
+def _measure(cfg, shape, mesh):
+    lowered, model, rls = lower_cell(cfg, shape, mesh)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll["total_bytes"]),
+        "model": model,
+        "strategy": rls.tp_strategy,
+    }
+
+
+def _depth_variants(cfg):
+    """(cfg_d1, cfg_d2, n_groups, tail_fraction) for block-delta costing."""
+    if cfg.family == "hybrid":
+        pat = len(cfg.block_pattern)
+        n_groups = cfg.num_layers // pat
+        tail = cfg.num_layers - n_groups * pat
+        return (cfg.replace(num_layers=pat, scan_layers=False,
+                            microbatches=1),
+                cfg.replace(num_layers=2 * pat, scan_layers=False,
+                            microbatches=1),
+                n_groups, tail / pat)
+    return (cfg.replace(num_layers=1, scan_layers=False, microbatches=1),
+            cfg.replace(num_layers=2, scan_layers=False, microbatches=1),
+            cfg.num_layers, 0.0)
+
+
+def cell_costs(arch, shape_name, mesh):
+    """Block-delta extrapolated per-device costs for the full config."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+
+    if cfg.family == "enc_dec":
+        base = cfg.replace(enc_layers=1, num_layers=1, scan_layers=False,
+                           microbatches=1)
+        if shape.kind == "train" or shape.kind == "prefill":
+            m11 = _measure(base, shape, mesh)
+            m21 = _measure(base.replace(enc_layers=2), shape, mesh)
+            m12 = _measure(base.replace(num_layers=2), shape, mesh)
+            out = {}
+            for key in ("flops", "bytes", "coll_bytes"):
+                de = m21[key] - m11[key]
+                dd = m12[key] - m11[key]
+                fixed = m11[key] - de - dd
+                out[key] = fixed + cfg.enc_layers * de + cfg.num_layers * dd
+            out["strategy"] = m11["strategy"]
+            return out, _measure(base, shape, mesh)["model"]
+        # decode touches only decoder layers
+        m1 = _measure(base, shape, mesh)
+        m2 = _measure(base.replace(num_layers=2), shape, mesh)
+        out = {}
+        for key in ("flops", "bytes", "coll_bytes"):
+            d = m2[key] - m1[key]
+            out[key] = (m1[key] - d) + cfg.num_layers * d
+        out["strategy"] = m1["strategy"]
+        return out, m1["model"]
+
+    c1, c2, n_groups, tail_frac = _depth_variants(cfg)
+    m1 = _measure(c1, shape, mesh)
+    m2 = _measure(c2, shape, mesh)
+    out = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        d = m2[key] - m1[key]
+        out[key] = (m1[key] - d) + (n_groups + tail_frac) * d
+    out["strategy"] = m1["strategy"]
+    return out, m1["model"]
+
+
+def model_flops(cfg, shape, n_params):
+    """Useful-compute convention: 6·N·D train, 2·N·D inference (global)."""
+    if cfg.num_experts:
+        # active params: replace full expert stack by top-k experts
+        expert = 3 * cfg.d_model * cfg.d_ff
+        n_active = n_params - cfg.num_layers * cfg.num_experts * expert \
+            + cfg.num_layers * cfg.num_experts_per_tok * expert
+    else:
+        n_active = n_params
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n_active * tokens
+
+
+def roofline_cell(arch, shape_name, mesh, n_devices=256):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    costs, _ = cell_costs(arch, shape_name, mesh)
+    t_c = costs["flops"] / HW["peak_flops_bf16"]
+    t_m = costs["bytes"] / HW["hbm_bandwidth"]
+    t_x = costs["coll_bytes"] / HW["ici_link_bandwidth"]
+    dominant = max(("compute", t_c), ("memory", t_m),
+                   ("collective", t_x), key=lambda kv: kv[1])
+    from repro.models import build_model
+    mf = model_flops(cfg, shape, build_model(cfg).num_params())
+    t_model = mf / (n_devices * HW["peak_flops_bf16"])
+    bound = max(t_c, t_m, t_x)
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "strategy": costs["strategy"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dominant[0],
+        "model_flops": mf,
+        "hlo_flops_global": costs["flops"] * n_devices,
+        "useful_flops_ratio": mf / max(costs["flops"] * n_devices, 1.0),
+        "roofline_fraction": t_model / bound if bound > 0 else 0.0,
+        "step_lower_bound_s": bound,
+    }
+
+
+def run(out_dir="experiments/roofline", archs=None, shapes=None):
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.configs import ARCH_IDS
+
+    mesh = make_production_mesh(multi_pod=False)
+    rows = []
+    for arch in (archs or ARCH_IDS):
+        for shape_name in (shapes or list(SHAPES)):
+            try:
+                rec = roofline_cell(arch, shape_name, mesh)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape_name, "status": "error",
+                       "error": f"{type(e).__name__}: {e}"}
+            rows.append(rec)
+            if rec["status"] == "ok":
+                print(f"{arch:22s} {shape_name:12s} {rec['strategy']:8s} "
+                      f"C {rec['t_compute_s']*1e3:9.2f}ms "
+                      f"M {rec['t_memory_s']*1e3:9.2f}ms "
+                      f"X {rec['t_collective_s']*1e3:9.2f}ms "
+                      f"→ {rec['dominant']:10s} "
+                      f"useful {rec['useful_flops_ratio']*100:5.1f}% "
+                      f"roofline {rec['roofline_fraction']*100:5.1f}%",
+                      flush=True)
+            elif rec["status"] == "skipped":
+                print(f"{arch:22s} {shape_name:12s} [skip]", flush=True)
+            else:
+                print(f"{arch:22s} {shape_name:12s} [ERR] {rec['error']}",
+                      flush=True)
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "roofline.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    args = ap.parse_args()
+    run(archs=args.arch, shapes=args.shape)

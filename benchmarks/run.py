@@ -1,0 +1,89 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure:
+
+    Table 1  program characteristics       table1_characteristics
+    Fig. 5   PopPy vs Python speedups      fig5_speedup
+    Fig. 6   ToT execution trace           fig6_trace
+    Fig. 7   interpreter overhead          fig7_overhead
+    Fig. 8   parallelism scaling           fig8_scaling
+    §Roofline  per-(arch×shape) terms      roofline (subprocess, 512 devs)
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-roofline]
+
+Results land in experiments/apps/ and experiments/roofline/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer trials / smaller sweeps")
+    ap.add_argument("--skip-roofline", action="store_true",
+                    help="skip the 512-device roofline subprocess")
+    ap.add_argument("--roofline-arch", action="append", default=None)
+    args = ap.parse_args()
+
+    trials = 2 if args.quick else 3
+    t0 = time.time()
+
+    from benchmarks import (fig5_speedup, fig6_trace, fig7_overhead,
+                            fig8_scaling, table1_characteristics)
+
+    print("=" * 72)
+    print("Table 1 — benchmark program characteristics")
+    print("=" * 72)
+    table1_characteristics.run(trials=trials)
+
+    print("\n" + "=" * 72)
+    print("Fig. 5 — median speedup of PopPy over standard Python")
+    print("=" * 72)
+    fig5_speedup.run(trials=trials,
+                     camel_count=6 if args.quick else 30)
+
+    print("\n" + "=" * 72)
+    print("Fig. 6 — ToT execution trace (queue → dispatch → resolve)")
+    print("=" * 72)
+    fig6_trace.run()
+
+    print("\n" + "=" * 72)
+    print("Fig. 7 — interpreter overhead (all externals forced sequential)")
+    print("=" * 72)
+    fig7_overhead.run(trials=trials)
+
+    print("\n" + "=" * 72)
+    print("Fig. 8 — speedup vs available parallelism")
+    print("=" * 72)
+    if args.quick:
+        fig8_scaling.run(trials=1, beams=(1, 5, 10), assessments=(1, 5, 10))
+    else:
+        fig8_scaling.run(trials=trials)
+
+    if not args.skip_roofline:
+        print("\n" + "=" * 72)
+        print("§Roofline — per-(arch × shape) terms from the compiled "
+              "dry-run (512-device subprocess)")
+        print("=" * 72)
+        sys.stdout.flush()  # keep tee ordering across the subprocess
+        cmd = [sys.executable, "-m", "benchmarks.roofline"]
+        for a in (args.roofline_arch or []):
+            cmd += ["--arch", a]
+        if args.quick:
+            for a in ("qwen3-14b", "olmoe-1b-7b", "mamba2-2.7b"):
+                cmd += ["--arch", a]
+        r = subprocess.run(cmd)
+        if r.returncode != 0:
+            print("roofline subprocess failed", file=sys.stderr)
+            return 1
+
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

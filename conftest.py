@@ -1,0 +1,7 @@
+import pathlib
+import sys
+
+_root = pathlib.Path(__file__).parent
+for _p in (str(_root), str(_root / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

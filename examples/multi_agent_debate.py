@@ -1,0 +1,35 @@
+"""Multi-agent debate (DiverseAgentEntropy-style) under PopPy: agents
+answer in parallel within each round; rounds stay ordered.
+
+    PYTHONPATH=src:. python examples/multi_agent_debate.py
+"""
+
+import time
+
+from benchmarks.apps import dae
+from repro.core import sequential_mode
+from repro.core.ai import SimulatedBackend, use_backend
+
+
+def main():
+    backend = SimulatedBackend(base_s=0.15, per_token_s=0.01)
+    with use_backend(backend):
+        t0 = time.perf_counter()
+        with sequential_mode():
+            r1 = dae.run()
+        t_plain = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        r2 = dae.run()
+        t_poppy = time.perf_counter() - t0
+
+    assert r1 == r2
+    answer, votes, distinct = r2
+    print(f"consensus answer: {answer!r} ({votes}/{dae.N_AGENTS} agents, "
+          f"{distinct} distinct answers)")
+    print(f"standard Python : {t_plain:.2f}s")
+    print(f"PopPy           : {t_poppy:.2f}s ({t_plain/t_poppy:.2f}×)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""PopPy quickstart: write sequential Python, get parallel external calls.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+from repro.core import poppy, sequential, sequential_mode
+from repro.core.ai import SimulatedBackend, llm, use_backend
+
+
+@sequential
+def report(line):
+    print(line)
+    return None
+
+
+@poppy
+def research(topic):
+    # Three independent LLM calls: PopPy dispatches them the moment their
+    # prompts are ready — in parallel — while `report` stays in order.
+    summary = llm(f"summarize {topic}", max_tokens=32)
+    pros = llm(f"arguments in favor of {topic}", max_tokens=32)
+    cons = llm(f"arguments against {topic}", max_tokens=32)
+    report(f"summary: {summary}")
+    report(f"pros:    {pros}")
+    report(f"cons:    {cons}")
+    verdict = llm(f"given pros '{pros}' and cons '{cons}', verdict on "
+                  f"{topic}?", max_tokens=16)
+    report(f"verdict: {verdict}")
+    return verdict
+
+
+def main():
+    backend = SimulatedBackend(base_s=0.2, per_token_s=0.01)
+    with use_backend(backend):
+        t0 = time.perf_counter()
+        with sequential_mode():
+            research("solar panels on every roof")
+        t_plain = time.perf_counter() - t0
+
+        print("\n--- now opportunistically, same program ---\n")
+        t0 = time.perf_counter()
+        research("solar panels on every roof")
+        t_poppy = time.perf_counter() - t0
+
+    print(f"\nstandard Python : {t_plain:.2f}s")
+    print(f"PopPy           : {t_poppy:.2f}s  "
+          f"({t_plain/t_poppy:.2f}× faster, same outputs, same order)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end driver: serve a small JAX model with batched requests.
+
+A PopPy compound-AI program fans out `@unordered` llm() calls; the
+LocalEngineBackend routes them into the continuous-batching serving engine
+running a real (reduced-config) model — PopPy's extracted parallelism
+becomes decode-batch occupancy on the engine.
+
+    PYTHONPATH=src:. python examples/serve_llm.py [--arch stablelm-3b]
+"""
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core import poppy, sequential, sequential_mode
+from repro.core.ai import llm, use_backend
+from repro.models import build_model
+from repro.serving import LocalEngineBackend, ServingEngine
+
+
+@sequential
+def report(line):
+    print(line)
+    return None
+
+
+@poppy
+def summarize_documents(n_docs):
+    summaries = tuple()
+    for i in range(n_docs):
+        s = llm(f"summarize document {i}", max_tokens=8)
+        report(f"doc {i}: {len(s)} chars")
+        summaries += (s,)
+    overall = llm(f"combine: {summaries}", max_tokens=12)
+    report(f"combined: {len(overall)} chars")
+    return overall
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--docs", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, max_slots=4, max_len=96)
+    backend = LocalEngineBackend(engine)
+    print(f"serving reduced {args.arch} "
+          f"({model.num_params()/1e6:.1f}M params), "
+          f"{engine.max_slots} slots\n")
+
+    with use_backend(backend):
+        t0 = time.perf_counter()
+        summarize_documents(args.docs)
+        dt = time.perf_counter() - t0
+
+    occ = engine.batch_occupancy
+    print(f"\n{args.docs}+1 LLM calls in {dt:.2f}s — "
+          f"{engine.decode_tokens} tokens over {engine.steps} decode steps, "
+          f"mean batch occupancy {sum(occ)/max(len(occ),1):.2f} "
+          f"(max {max(occ, default=0)}): PopPy's parallel calls shared "
+          "decode batches")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Tree-of-Thoughts under PopPy (the paper's motivating application),
+against the deterministic latency-modeled LLM.
+
+    PYTHONPATH=src:. python examples/tree_of_thoughts.py
+"""
+
+import time
+
+from benchmarks.apps import tot
+from repro.core import sequential_mode
+from repro.core.ai import SimulatedBackend, use_backend
+
+
+def main():
+    backend = SimulatedBackend(base_s=0.1, per_token_s=0.005)
+    with use_backend(backend):
+        t0 = time.perf_counter()
+        with sequential_mode():
+            r1 = tot.run()
+        t_plain = time.perf_counter() - t0
+        log_plain = list(tot.OUT)
+
+        t0 = time.perf_counter()
+        r2 = tot.run()
+        t_poppy = time.perf_counter() - t0
+        log_poppy = list(tot.OUT)
+
+    assert r1 == r2 and log_plain == log_poppy
+    print("\n".join(log_poppy[-4:]))
+    print(f"\nresult: {r2}")
+    print(f"standard Python : {t_plain:.2f}s")
+    print(f"PopPy           : {t_poppy:.2f}s  "
+          f"({t_plain/t_poppy:.2f}× — identical results and log order)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Architecture config registry: one module per assigned architecture."""
+
+from .base import ModelConfig  # noqa: F401
+from .shapes import SHAPES, ShapeSpec, input_specs, shape_applicable  # noqa: F401
+
+from . import (  # noqa: E402
+    mamba2_2_7b,
+    olmoe_1b_7b,
+    pixtral_12b,
+    qwen2_5_32b,
+    qwen3_14b,
+    qwen3_moe_30b_a3b,
+    recurrentgemma_9b,
+    stablelm_3b,
+    whisper_medium,
+    yi_34b,
+)
+
+REGISTRY = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        qwen3_14b, stablelm_3b, yi_34b, qwen2_5_32b, pixtral_12b,
+        qwen3_moe_30b_a3b, olmoe_1b_7b, whisper_medium, recurrentgemma_9b,
+        mamba2_2_7b,
+    )
+}
+
+ARCH_IDS = list(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_IDS}")
+    return REGISTRY[name]

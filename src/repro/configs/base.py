@@ -1,0 +1,178 @@
+"""Model configuration schema.
+
+One frozen dataclass covers all assigned architecture families (dense GQA /
+MoE / encoder–decoder / hybrid RG-LRU / SSD / VLM backbone).  Full-size
+configs are exercised only via the dry-run (abstract shapes); ``reduced()``
+derives a CPU-runnable smoke config of the same family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | enc_dec | hybrid | ssm | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # attention options
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_type: str = "rmsnorm"    # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    attn_window: int = 0          # 0 = global; >0 = sliding window
+    use_rope: bool = True
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    # dispatch layout:
+    #   "shard_map" (default) — explicit per-(data,model)-shard dispatch
+    #     region; tokens are replicated over `model` under the heads
+    #     strategy, so only the row-parallel output psum remains
+    #     (§Perf A5: 33× less MoE collective traffic).  Falls back to
+    #     "global" on 1-device meshes or when E % model_size != 0.
+    #   "global" — pure-pjit scatter into one global expert buffer
+    #     (paper-faithful pjit baseline; GSPMD emits expert-buffer
+    #     all-reduces over data).
+    #   "grouped" — documented-failure variant (§Perf A3).
+    moe_dispatch: str = "shard_map"
+
+    # encoder–decoder (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 0              # fixed encoder memory length (1500 frames)
+
+    # hybrid (recurrentgemma): repeating block pattern, e.g. ("rglru",
+    # "rglru", "attn"); num_layers counts *all* blocks
+    block_pattern: tuple = ()
+    lru_width: int = 0
+    conv_width: int = 4
+
+    # ssm (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+
+    # modality frontend stub ("" | "patch_stub" | "audio_stub"):
+    # input_specs() provides precomputed patch/frame embeddings
+    frontend: str = ""
+
+    # numerics / compilation
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    attention_impl: str = "xla"   # xla | pallas | pallas_interpret
+    scan_layers: bool = True
+    remat: str = "full"           # none | full | dots
+    # gradient-accumulation microbatches per step (fit activations in HBM)
+    microbatches: int = 1
+    # weight-sharding strategy over the data axis:
+    #   fsdp  — ZeRO-3: weights sharded over data; all-gather on use
+    #           (per microbatch!), reduce-scatter grads
+    #   zero2 — weights replicated over data (still TP-sharded over model);
+    #           only optimizer moments shard over data; one grad
+    #           reduce-scatter + one param all-gather per step
+    param_strategy: str = "fsdp"
+    # KV cache dtype: "" = activation dtype; "int8" = per-vector-scaled
+    # int8 (KIVI-style) — halves decode cache bandwidth
+    kv_cache_dtype: str = ""
+    # parameter dtype used by serving steps (prefill/decode).  bf16 halves
+    # weight reads and weight collectives; measured in §Perf cell C —
+    # nobody serves f32 masters, so bf16 is the default.
+    serve_param_dtype: str = "bfloat16"
+    # sharding strategy: auto | heads | ulysses  (see repro.sharding.rules)
+    tp_strategy: str = "auto"
+
+    # -- derived -----------------------------------------------------------
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/head tables padded to a multiple of 256 so the vocab
+        dim shards over any reasonable model-axis size (whisper's 51865 and
+        mamba's 50280 don't divide 16); logits beyond vocab_size are masked
+        to −inf (standard MaxText-style padding)."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Supports very long contexts with bounded state (long_500k)."""
+        if self.family == "ssm":
+            return True
+        if self.family == "hybrid" and self.attn_window > 0:
+            return True
+        return False
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        kw = dict(
+            num_layers=2,
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 4) or 4,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=512,
+            enc_layers=2 if self.enc_layers else 0,
+            enc_seq=16 if self.enc_seq else 0,
+            lru_width=64 if self.lru_width else 0,
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_headdim=16 if self.ssm_state else 64,
+            ssm_chunk=8,
+            num_experts=8 if self.num_experts else 0,
+            num_experts_per_tok=min(self.num_experts_per_tok, 2),
+            # dropless at smoke scale so prefill/decode exactly match the
+            # teacher-forcing forward (capacity ≥ worst-case expert load)
+            moe_capacity_factor=8.0 if self.num_experts else 1.25,
+            scan_layers=self.scan_layers,
+            dtype="float32",
+            remat="none",
+        )
+        if self.block_pattern:
+            kw["block_pattern"] = ("rglru", "rglru", "attn")
+            kw["num_layers"] = 3
+        if self.family == "ssm":
+            kw["num_heads"] = 0
+            kw["num_kv_heads"] = 0
+            kw["head_dim"] = 0
+        return self.replace(**kw)

@@ -1,0 +1,82 @@
+"""Assigned input-shape sets and abstract input specs.
+
+Four shapes per LM architecture (seq_len × global_batch):
+  train_4k     4,096 × 256   — training step
+  prefill_32k  32,768 × 32   — inference prefill
+  decode_32k   32,768 × 128  — one decode token against a 32k KV cache
+  long_500k    524,288 × 1   — long-context decode; only sub-quadratic archs
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token with a KV
+cache of seq_len), NOT ``train_step``.  ``input_specs`` returns
+ShapeDtypeStruct stand-ins — weak-type-correct, shardable, no allocation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Is this (arch × shape) cell runnable?  (DESIGN.md §Arch-applicability)"""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skip: pure full-attention architecture — quadratic "
+                       "attention at 524k context; run only for "
+                       "SSM/hybrid archs (documented in DESIGN.md)")
+    return True, ""
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract inputs for train_step / prefill_step / decode_step."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": _tok(b, s), "targets": _tok(b, s)}
+        if cfg.family == "enc_dec":
+            specs["encoder_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        elif cfg.frontend == "patch_stub":
+            # VLM: a prefix of precomputed patch embeddings + text tokens
+            n_patches = min(1024, s // 4)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _tok(b, s)}
+        if cfg.family == "enc_dec":
+            specs["encoder_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        elif cfg.frontend == "patch_stub":
+            n_patches = min(1024, s // 4)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    # decode: one new token against a cache of length s
+    specs = {
+        "tokens": _tok(b, 1),
+        "positions": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+    return specs

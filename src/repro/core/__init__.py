@@ -1,0 +1,49 @@
+"""repro.core — PopPy: opportunistic parallelism for compound-AI Python.
+
+Public API::
+
+    from repro.core import poppy, unordered, readonly, sequential
+
+    @poppy
+    def app(task):
+        ...
+
+    app("...")          # runs opportunistically, external calls in parallel
+
+See DESIGN.md for the compiler (frontend → Bezoar → λ^O) and runtime
+(opportunistic engine + concurrency controllers) architecture.
+"""
+
+from .annotations import (  # noqa: F401
+    PoppyFn,
+    external,
+    in_sequential_mode,
+    poppy,
+    readonly,
+    sequential,
+    sequential_mode,
+    unordered,
+)
+from .errors import (  # noqa: F401
+    ExternalCallError,
+    PoppyCompileError,
+    PoppyError,
+    PoppyRuntimeError,
+    PoppyUnboundLocalError,
+)
+from .registry import (  # noqa: F401
+    READONLY,
+    SEQUENTIAL,
+    UNORDERED,
+    register_immutable_type,
+)
+from .trace import Trace, equivalent, recording  # noqa: F401
+
+__all__ = [
+    "poppy", "unordered", "readonly", "sequential", "external",
+    "sequential_mode", "in_sequential_mode", "PoppyFn",
+    "PoppyError", "PoppyCompileError", "PoppyRuntimeError",
+    "PoppyUnboundLocalError", "ExternalCallError",
+    "UNORDERED", "READONLY", "SEQUENTIAL", "register_immutable_type",
+    "Trace", "recording", "equivalent",
+]

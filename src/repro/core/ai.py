@@ -1,0 +1,173 @@
+"""PopPy AI component library (paper §6.1).
+
+Annotated, asynchronous clients for the external components compound-AI
+applications call: LLMs, text-embedding models, and a generic async HTTP
+method for arbitrary stateless remote APIs.  All are ``@unordered`` —
+stateless remote requests — so the opportunistic engine dispatches them the
+moment their prompts are ready, which is where the end-to-end speedups come
+from.
+
+Backends
+--------
+* ``SimulatedBackend`` — deterministic latency-modeled responses; used by the
+  benchmark harness (this container has no network).  The latency model and
+  its parameters are reported in EXPERIMENTS.md.
+* ``LocalEngineBackend`` (repro.serving) — a real JAX model served by the
+  continuous-batching engine; PopPy's burst of parallel calls share decode
+  batches (the beyond-paper batching co-design, DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import contextvars
+import hashlib
+import math
+from dataclasses import dataclass, field
+
+from .annotations import sequential, unordered
+
+
+class Backend:
+    """Interface for LLM/embedding backends."""
+
+    async def generate(self, prompt: str, *, max_tokens: int,
+                       temperature: float, stop) -> str:
+        raise NotImplementedError
+
+    async def embed(self, text: str) -> tuple:
+        raise NotImplementedError
+
+
+@dataclass
+class SimulatedBackend(Backend):
+    """Deterministic latency-modeled LLM.
+
+    latency = base + per_prompt_char · len(prompt) + per_token · n_tokens,
+    with a deterministic per-prompt jitter of ±jitter_frac drawn from the
+    prompt hash.  Responses are a deterministic function of the prompt so
+    PopPy and plain-Python runs are comparable call-for-call.
+    """
+
+    base_s: float = 0.02
+    per_prompt_char_s: float = 0.0
+    per_token_s: float = 0.002
+    jitter_frac: float = 0.3
+    vocab: tuple = ("alpha", "beta", "gamma", "delta", "epsilon", "zeta",
+                    "eta", "theta", "iota", "kappa")
+    # observability for tests/benchmarks
+    calls: list = field(default_factory=list)
+    max_in_flight: int = 0
+    _in_flight: int = 0
+    time_scale: float = 1.0
+    responder: object = None   # optional callable(prompt, max_tokens) -> str
+
+    def _digest(self, prompt: str) -> int:
+        return int.from_bytes(
+            hashlib.sha256(prompt.encode()).digest()[:8], "big")
+
+    def latency(self, prompt: str, n_tokens: int) -> float:
+        d = self._digest(prompt)
+        jitter = 1.0 + self.jitter_frac * (((d >> 8) % 1000) / 500.0 - 1.0)
+        lat = (self.base_s + self.per_prompt_char_s * len(prompt)
+               + self.per_token_s * n_tokens) * jitter
+        return lat * self.time_scale
+
+    def response(self, prompt: str, max_tokens: int) -> str:
+        if self.responder is not None:
+            return self.responder(prompt, max_tokens)
+        d = self._digest(prompt)
+        n = min(max_tokens, 1 + d % 7)
+        words = [self.vocab[(d >> (4 * i)) % len(self.vocab)]
+                 for i in range(n)]
+        return " ".join(words)
+
+    async def generate(self, prompt, *, max_tokens, temperature, stop):
+        n_out = min(max_tokens, 1 + self._digest(prompt) % 7)
+        self._in_flight += 1
+        self.max_in_flight = max(self.max_in_flight, self._in_flight)
+        self.calls.append(prompt)
+        try:
+            await asyncio.sleep(self.latency(prompt, n_out))
+        finally:
+            self._in_flight -= 1
+        return self.response(prompt, max_tokens)
+
+    async def embed(self, text):
+        self._in_flight += 1
+        self.max_in_flight = max(self.max_in_flight, self._in_flight)
+        self.calls.append(text)
+        try:
+            await asyncio.sleep(self.base_s * self.time_scale)
+        finally:
+            self._in_flight -= 1
+        d = self._digest(text)
+        return tuple(
+            math.sin((d % 997) * (i + 1) / 97.0) for i in range(8))
+
+
+_backend: contextvars.ContextVar[Backend | None] = contextvars.ContextVar(
+    "poppy_ai_backend", default=None)
+
+
+def set_backend(b: Backend):
+    _backend.set(b)
+
+
+def get_backend() -> Backend:
+    b = _backend.get()
+    if b is None:
+        b = SimulatedBackend()
+        _backend.set(b)
+    return b
+
+
+class use_backend:
+    def __init__(self, b: Backend):
+        self.b = b
+
+    def __enter__(self):
+        self._tok = _backend.set(self.b)
+        return self.b
+
+    def __exit__(self, *exc):
+        _backend.reset(self._tok)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# annotated external components
+
+
+@unordered
+async def llm(prompt: str, *, max_tokens: int = 64, temperature: float = 0.0,
+              stop=None) -> str:
+    """Stateless LLM completion — @unordered: dispatches the moment the
+    prompt is ready, in parallel with anything else in flight."""
+    return await get_backend().generate(
+        prompt, max_tokens=max_tokens, temperature=temperature, stop=stop)
+
+
+@unordered
+async def embed(text: str) -> tuple:
+    """Text-embedding model call."""
+    return await get_backend().embed(text)
+
+
+@unordered
+async def http(url: str, payload=None) -> str:
+    """Generic asynchronous HTTP method for arbitrary stateless remote APIs.
+    Offline container: served by the simulated backend keyed on the URL."""
+    return await get_backend().generate(
+        f"{url}::{payload}", max_tokens=32, temperature=0.0, stop=None)
+
+
+# console output must stay in program order
+console_print = sequential(print)
+console_print.__name__ = "console_print"
+
+
+@sequential
+def log(*parts):
+    """Ordered log sink (a sequential external, like the paper's print)."""
+    print(*parts)

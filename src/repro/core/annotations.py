@@ -1,0 +1,206 @@
+"""PopPy user-facing annotations (paper §4).
+
+* ``@poppy`` — marks *internal* code (the expressive Python fragment).
+  Calling a decorated function runs it under the opportunistic engine; its
+  external calls execute early/in parallel as the annotations allow.
+* ``@unordered`` / ``@readonly`` / ``@sequential`` — mark *external* code
+  with its reordering class.  Unannotated externals default to sequential.
+* ``sequential_mode()`` — context manager forcing standard Python execution
+  (used as the differential-testing baseline and by ``fig7`` overhead runs).
+
+If a function does not fit the supported fragment, ``@poppy`` falls back to
+treating it as a sequential external (paper §4.1) and records why.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import contextvars
+import functools
+import warnings
+
+from . import registry
+from .engine import current_runtime, run_poppy, run_poppy_async
+from .errors import PoppyCompileError
+from .frontend import compile_function
+from .lower import lower_function
+from .trace import current_trace, safe_repr
+
+_plain_mode: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "poppy_plain_mode", default=False)
+
+
+class sequential_mode:
+    """Force standard sequential Python execution of @poppy functions."""
+
+    def __enter__(self):
+        self._tok = _plain_mode.set(True)
+        return self
+
+    def __exit__(self, *exc):
+        _plain_mode.reset(self._tok)
+        return False
+
+
+def in_sequential_mode() -> bool:
+    return _plain_mode.get()
+
+
+class PoppyFn:
+    """A compiled internal function."""
+
+    __poppy_internal__ = True
+
+    def __init__(self, fn, *, strict=False):
+        functools.update_wrapper(self, fn)
+        self.original = fn
+        self.strict = strict
+        self._lfunc = None
+        self._bezoar = None
+        self._compile_error = None
+        self._compiled = False
+
+    # -- compilation (lazy, cached) ------------------------------------------
+
+    def _compile(self):
+        if self._compiled:
+            return
+        self._compiled = True
+        try:
+            self._bezoar = compile_function(self.original)
+            self._lfunc = lower_function(self._bezoar, self.original)
+        except PoppyCompileError as e:
+            if self.strict:
+                raise
+            self._compile_error = e
+            warnings.warn(
+                f"@poppy: {self.original.__qualname__} is outside the "
+                f"supported fragment ({e}); falling back to sequential "
+                "external execution", stacklevel=2)
+
+    @property
+    def lfunc(self):
+        self._compile()
+        if self._lfunc is None:
+            raise self._compile_error
+        return self._lfunc
+
+    @property
+    def bezoar(self):
+        self._compile()
+        if self._bezoar is None:
+            raise self._compile_error
+        return self._bezoar
+
+    @property
+    def compiles(self) -> bool:
+        self._compile()
+        return self._lfunc is not None
+
+    # -- calling ------------------------------------------------------------------
+
+    def __call__(self, *args, **kwargs):
+        if in_sequential_mode():
+            return self.original(*args, **kwargs)
+        if current_runtime() is not None:
+            # invoked *from external code* during an opportunistic run
+            # (e.g. as a callback): execute sequentially — its own external
+            # calls still trace through their wrappers.
+            return self.original(*args, **kwargs)
+        self._compile()
+        if self._lfunc is None:
+            return self.original(*args, **kwargs)  # fragment fallback
+        return run_poppy(self, args, kwargs)
+
+    async def async_call(self, *args, **kwargs):
+        if in_sequential_mode():
+            return self.original(*args, **kwargs)
+        self._compile()
+        if self._lfunc is None:
+            return self.original(*args, **kwargs)
+        return await run_poppy_async(self, args, kwargs)
+
+    def __repr__(self):
+        return f"<@poppy {self.original.__qualname__}>"
+
+
+def poppy(fn=None, *, strict=False):
+    """Mark a function as internal PopPy code."""
+    if fn is None:
+        return lambda f: PoppyFn(f, strict=strict)
+    return PoppyFn(fn, strict=strict)
+
+
+# ---------------------------------------------------------------------------
+# external annotations
+
+
+def _external(info_factory):
+    def deco(fn):
+        info = info_factory(fn)
+
+        def record(args, kwargs):
+            tr = current_trace()
+            if tr is not None and current_runtime() is None:
+                cls = info.cls if info.cls is not None else \
+                    info.classify(args, kwargs, ())
+                tr.record_direct(info.name, cls,
+                                 args_repr=safe_repr((args, kwargs)))
+
+        if registry.is_async_callable(fn):
+            # Called under standard sequential Python (no event loop): drive
+            # the coroutine to completion — blocking-call semantics, the
+            # paper's baseline.  Called from async external code (a loop is
+            # running): return the coroutine to be awaited.  The engine never
+            # calls this wrapper; it dispatches __poppy_dispatch__ directly.
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                record(args, kwargs)
+                try:
+                    asyncio.get_running_loop()
+                except RuntimeError:
+                    return asyncio.run(fn(*args, **kwargs))
+                return fn(*args, **kwargs)
+        else:
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                record(args, kwargs)
+                return fn(*args, **kwargs)
+        wrapper.__poppy_external__ = info
+        wrapper.__poppy_dispatch__ = fn
+        return wrapper
+    return deco
+
+
+def _static_info(cls_name):
+    return lambda fn: registry.ExternalInfo(
+        cls=cls_name, name=registry.callable_name(fn))
+
+
+def unordered(fn):
+    """External call that may execute in any order (stateless externals,
+    pure operations on immutable data)."""
+    return _external(_static_info(registry.UNORDERED))(fn)
+
+
+def readonly(fn):
+    """External call reorderable among other readonly calls but ordered with
+    respect to sequential calls (reads of mutable state)."""
+    return _external(_static_info(registry.READONLY))(fn)
+
+
+def sequential(fn):
+    """External call that must execute in original program order (mutation,
+    I/O).  This is also the default for unannotated externals."""
+    return _external(_static_info(registry.SEQUENTIAL))(fn)
+
+
+def external(fn=None, *, classify):
+    """External call with a *dynamic* classifier: ``classify(args, kwargs,
+    fresh_mask) -> 'unordered'|'readonly'|'sequential'``."""
+    def info_factory(f):
+        return registry.ExternalInfo(classify=classify,
+                                     name=registry.callable_name(f))
+    if fn is None:
+        return _external(info_factory)
+    return _external(info_factory)(fn)

@@ -1,0 +1,132 @@
+"""Dynamic concurrency control (paper §6.2).
+
+Every queued external call is owned by a *concurrency controller* — a
+lightweight asyncio task that (1) learns which function is actually being
+called (solving dynamic dispatch), (2) classifies it (``unordered`` /
+``readonly`` / ``sequential``) via the annotation registry, and (3) follows
+the lock protocol over the sequence-variable futures:
+
+  F_R  — all preceding @sequential calls resolved         ("read lock")
+  F_W  — all preceding @sequential and @readonly resolved ("write lock")
+
+  sequential: await F_R ∧ F_W → dispatch → resolve → fulfill F_R', F_W'
+  readonly:   await F_R → fulfill F_R' (forward) → dispatch → resolve →
+              await F_W → fulfill F_W'
+  unordered:  forward both immediately; dispatch as soon as args resolve.
+
+Passing locks through the sequence variables is extensible — finer-grained
+reorderability = finer-grained locks.
+"""
+
+from __future__ import annotations
+
+import asyncio
+
+from . import registry
+from .errors import ExternalCallError, PoppyRuntimeError
+from .trace import safe_repr
+from .values import SeqState, check_bound, deep_resolve, shallow
+
+UNORDERED = registry.UNORDERED
+READONLY = registry.READONLY
+SEQUENTIAL = registry.SEQUENTIAL
+
+
+def _resolve_lock(f):
+    if f is not None and not f.done():
+        f.set_result(None)
+
+
+def _chain_lock(src, dst):
+    """dst resolves when src does (src may already be resolved/None)."""
+    if dst is None:
+        return
+    if src is None or src.done():
+        _resolve_lock(dst)
+    else:
+        src.add_done_callback(lambda _: _resolve_lock(dst))
+
+
+async def _await_lock(f):
+    if f is not None and not f.done():
+        await f
+
+
+def unwrap_external(fn):
+    """The engine dispatches the *inner* function of an annotation wrapper so
+    plain-mode trace recording in the wrapper doesn't double-fire."""
+    inner = getattr(fn, "__poppy_dispatch__", None)
+    return inner if inner is not None else fn
+
+
+async def invoke_external(rt, fn, pos, kw, ev):
+    """Dispatch an external call with fully resolved arguments."""
+    pos = [check_bound(await deep_resolve(a)) for a in pos]
+    kw = {k: check_bound(await deep_resolve(v)) for k, v in kw.items()}
+    if rt.trace is not None:
+        rt.trace.dispatched(ev, args_repr=safe_repr((tuple(pos), kw)))
+    target = unwrap_external(fn)
+    try:
+        if registry.is_async_callable(target):
+            result = await target(*pos, **kw)
+        else:
+            # synchronous externals execute inline on the loop — the paper's
+            # single-interpreter semantics (§6.1); long-running calls should
+            # be async
+            result = target(*pos, **kw)
+    except Exception as e:
+        raise ExternalCallError(registry.callable_name(fn), e) from e
+    if rt.trace is not None:
+        rt.trace.resolved(ev)
+    return result
+
+
+async def external_controller(rt, fn, pos, kw, fresh, s_in, out_state: SeqState,
+                              dfut: asyncio.Future, callsite: str):
+    """The controller coroutine for one queued external call."""
+    ev = rt.trace.queued(registry.callable_name(fn), callsite,
+                         wrapped=hasattr(fn, "__poppy_dispatch__")) \
+        if rt.trace is not None else None
+
+    s_in = await shallow(s_in)
+    if not isinstance(s_in, SeqState):
+        raise PoppyRuntimeError(
+            f"internal: sequence variable resolved to {type(s_in)}")
+
+    info = getattr(fn, "__poppy_external__", None)
+    if registry.sequential_forced():
+        cls = SEQUENTIAL
+    elif info is not None and info.cls is not None:
+        cls = info.cls
+    else:
+        # dynamic dispatch: classification needs argument *types* — await
+        # the spine of each argument (not its contents)
+        cpos = [check_bound(await shallow(a)) for a in pos]
+        ckw = {k: await shallow(v) for k, v in kw.items()}
+        cls = registry.get_callable_class(fn, cpos, ckw, fresh)
+        pos = cpos
+        kw = ckw
+    if ev is not None:
+        rt.trace.classified(ev, cls)
+
+    if cls == UNORDERED:
+        _chain_lock(s_in.f_r, out_state.f_r)
+        _chain_lock(s_in.f_w, out_state.f_w)
+        result = await invoke_external(rt, fn, pos, kw, ev)
+        dfut.set_result(result)
+    elif cls == READONLY:
+        await s_in.wait_r()
+        _resolve_lock(out_state.f_r)  # forward before dispatching
+        result = await invoke_external(rt, fn, pos, kw, ev)
+        dfut.set_result(result)
+        await s_in.wait_w()
+        _resolve_lock(out_state.f_w)
+    elif cls == SEQUENTIAL:
+        await s_in.wait_r()
+        await s_in.wait_w()
+        result = await invoke_external(rt, fn, pos, kw, ev)
+        dfut.set_result(result)
+        _resolve_lock(out_state.f_r)
+        _resolve_lock(out_state.f_w)
+    else:  # pragma: no cover
+        raise PoppyRuntimeError(f"unknown reordering class {cls!r}")

@@ -1,0 +1,523 @@
+"""The opportunistic (λ^O) execution engine (paper §3.1, §6.2).
+
+Executes compiled λ^O graphs with *opportunistic evaluation*: internal
+operations run eagerly as soon as their inputs are available — execution
+continues past outstanding external calls, whose results are placeholder
+``Pending`` values.  External calls enter the *queued* state and are owned
+by concurrency controllers (``controllers.py``).
+
+The engine is a single asyncio event loop.  The scheduler is "inline-first":
+an operation whose inputs are ready executes synchronously with no task
+overhead (this keeps interpreter overhead in the paper's reported 0.15–11%
+band); an operation blocked on a placeholder defers to a lightweight task.
+Confluence of λ^O guarantees any such order is equivalent (paper §3.1).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import contextvars
+import sys
+
+from . import registry
+from .controllers import external_controller, invoke_external
+from .errors import PoppyRuntimeError
+from .lambda_o import (
+    CARRY,
+    ITEM,
+    LBlock,
+    LCallOp,
+    LClosure,
+    LConst,
+    LFor,
+    LFunc,
+    LGlobal,
+    LIte,
+    LPrim,
+    LWhile,
+    PoppyClosure,
+)
+from .trace import Trace, current_trace
+from .values import (
+    S_READY,
+    UNBOUND,
+    Pending,
+    SeqState,
+    check_bound,
+    deep_ready,
+    deep_resolve,
+    is_pending,
+    shallow,
+)
+
+import builtins as _builtins
+
+_current_runtime: contextvars.ContextVar["Runtime | None"] = \
+    contextvars.ContextVar("poppy_runtime", default=None)
+
+
+def current_runtime() -> "Runtime | None":
+    return _current_runtime.get()
+
+
+class Frame:
+    """One block instance: a register file plus its owning λ^O function."""
+
+    __slots__ = ("regs", "lfunc")
+
+    def __init__(self, lfunc: LFunc, nregs: int):
+        self.lfunc = lfunc
+        self.regs = [None] * nregs
+
+
+def _fulfill(fut: asyncio.Future, value):
+    """Set ``fut`` from ``value``, chaining if value is itself Pending."""
+    if is_pending(value):
+        value.fut.add_done_callback(
+            lambda f: fut.done() or fut.set_result(f.result()))
+    else:
+        if not fut.done():
+            fut.set_result(value)
+
+
+def _is_internal(fn) -> bool:
+    return getattr(fn, "__poppy_internal__", False)
+
+
+class Runtime:
+    """One opportunistic execution of a ``@poppy`` entry point."""
+
+    def __init__(self, *, trace: Trace | None = None,
+                 inline_fast_path: bool = True):
+        self.trace = trace
+        self.inline_fast_path = inline_fast_path
+        self.tasks: set[asyncio.Task] = set()
+        self.loop: asyncio.AbstractEventLoop | None = None
+        self.error: BaseException | None = None
+        self._err_evt: asyncio.Event | None = None
+
+    # -- task management ---------------------------------------------------
+
+    def spawn(self, coro):
+        task = self.loop.create_task(coro)
+        self.tasks.add(task)
+        task.add_done_callback(self._task_done)
+        return task
+
+    def _task_done(self, task):
+        self.tasks.discard(task)
+        if task.cancelled():
+            return
+        exc = task.exception()
+        if exc is not None:
+            self.fail(exc)
+
+    def fail(self, exc: BaseException):
+        if self.error is None:
+            self.error = exc
+        if self._err_evt is not None:
+            self._err_evt.set()
+
+    def new_future(self) -> asyncio.Future:
+        return self.loop.create_future()
+
+    # -- execution -------------------------------------------------------------
+
+    async def run(self, poppy_fn, args, kwargs):
+        self.loop = asyncio.get_running_loop()
+        self._err_evt = asyncio.Event()
+        if self.trace is None:
+            self.trace = current_trace()
+        old_limit = sys.getrecursionlimit()
+        sys.setrecursionlimit(max(old_limit, 20000))
+        tok = _current_runtime.set(self)
+        try:
+            inputs = self._bind(poppy_fn, list(args), dict(kwargs))
+            outs = self.instantiate(poppy_fn.lfunc,
+                                    poppy_fn.lfunc.block, inputs)
+            ret_task = self.loop.create_task(deep_resolve(outs[0]))
+            err_task = self.loop.create_task(self._err_evt.wait())
+            try:
+                await asyncio.wait({ret_task, err_task},
+                                   return_when=asyncio.FIRST_COMPLETED)
+                if self.error is not None:
+                    ret_task.cancel()
+                    await self._abort()
+                    raise self.error
+                result = check_bound(ret_task.result())
+                # drain remaining external calls so all side effects land
+                # (sequential semantics: the program "finishes" after its
+                # trailing externals)
+                while self.tasks:
+                    await asyncio.wait(set(self.tasks),
+                                       return_when=asyncio.FIRST_COMPLETED)
+                    if self.error is not None:
+                        await self._abort()
+                        raise self.error
+                return result
+            finally:
+                err_task.cancel()
+        finally:
+            _current_runtime.reset(tok)
+            sys.setrecursionlimit(old_limit)
+
+    async def _abort(self):
+        for t in list(self.tasks):
+            t.cancel()
+        if self.tasks:
+            await asyncio.gather(*list(self.tasks), return_exceptions=True)
+
+    # -- internal call binding ----------------------------------------------------
+
+    def _bind(self, fn_obj, pos, kw):
+        lf: LFunc = fn_obj.lfunc
+        captured = getattr(fn_obj, "captured_vals", ())
+        if lf.signature is not None:
+            ba = lf.signature.bind(*pos, **kw)
+            ba.apply_defaults()
+            vals = [ba.arguments[p] for p in lf.params]
+        else:
+            if kw:
+                vals = list(pos) + [None] * (len(lf.params) - len(pos))
+                for k, v in kw.items():
+                    vals[lf.params.index(k)] = v
+            else:
+                if len(pos) != len(lf.params):
+                    raise TypeError(
+                        f"{lf.name}() takes {len(lf.params)} arguments "
+                        f"({len(pos)} given)")
+                vals = list(pos)
+        return vals + list(captured) + [S_READY]
+
+    # -- block instantiation ----------------------------------------------------
+
+    def instantiate(self, lfunc: LFunc, block: LBlock, inputs) -> list:
+        frame = Frame(lfunc, block.nregs)
+        regs = frame.regs
+        for reg, val in zip(block.input_regs, inputs):
+            regs[reg] = val
+        for op in block.ops:
+            self._step(op, frame)
+        return [regs[r] for r in block.outputs]
+
+    def _block_inputs(self, block: LBlock, frame: Frame, item=None,
+                      carries=None):
+        vals = []
+        for src in block.input_srcs:
+            if isinstance(src, int):
+                vals.append(frame.regs[src])
+            elif src == ITEM:
+                vals.append(item)
+            elif src[0] == "carry":
+                vals.append(carries[src[1]])
+            else:  # pragma: no cover
+                raise PoppyRuntimeError(f"bad input src {src}")
+        return vals
+
+    # -- op stepping -----------------------------------------------------------------
+
+    def _step(self, op, frame: Frame):
+        t = type(op)
+        if t is LCallOp:
+            self._step_call(op, frame)
+        elif t is LConst:
+            frame.regs[op.dst] = op.value
+        elif t is LGlobal:
+            frame.regs[op.dst] = self._resolve_global(frame.lfunc, op.name)
+        elif t is LPrim:
+            self._step_prim(op, frame)
+        elif t is LIte:
+            self._step_ite(op, frame)
+        elif t is LFor:
+            self._step_for(op, frame)
+        elif t is LWhile:
+            self._step_while(op, frame)
+        elif t is LClosure:
+            frame.regs[op.dst] = PoppyClosure(
+                op.lfunc, tuple(frame.regs[r] for r in op.captured))
+        else:  # pragma: no cover
+            raise PoppyRuntimeError(f"unknown op {op!r}")
+
+    def _resolve_global(self, lfunc: LFunc, name: str):
+        cell = lfunc.closure_map.get(name)
+        if cell is not None:
+            return cell.cell_contents
+        g = lfunc.globals_ref or {}
+        if name in g:
+            return g[name]
+        try:
+            return getattr(_builtins, name)
+        except AttributeError:
+            raise NameError(f"name {name!r} is not defined") from None
+
+    # -- prims -------------------------------------------------------------------------
+
+    def _step_prim(self, op: LPrim, frame: Frame):
+        regs = frame.regs
+        vals = [regs[a] for a in op.args]
+        kind = op.op
+        if kind == "tuple" or kind == "list" or kind == "slice":
+            for v in vals:
+                if v is UNBOUND:
+                    check_bound(v)
+            if kind == "tuple":
+                regs[op.dst] = tuple(vals)
+            elif kind == "list":
+                regs[op.dst] = list(vals)
+            else:
+                regs[op.dst] = slice(*vals)
+            return
+        # set/dict need hashable (resolved) keys; proj needs the spine
+        if all(deep_ready(v) for v in vals):
+            regs[op.dst] = self._finish_prim(kind, vals)
+        else:
+            fut = self.new_future()
+            regs[op.dst] = Pending(fut)
+            self.spawn(self._prim_async(kind, vals, fut))
+
+    def _finish_prim(self, kind, vals):
+        for v in vals:
+            if v is UNBOUND:
+                check_bound(v)
+        if kind == "set":
+            return set(vals)
+        if kind == "dict":
+            return dict(zip(vals[0::2], vals[1::2]))
+        if kind == "proj":
+            return vals[0][vals[1]]
+        raise PoppyRuntimeError(f"unknown prim {kind}")  # pragma: no cover
+
+    async def _prim_async(self, kind, vals, fut):
+        vals = [await deep_resolve(v) for v in vals]
+        fut.set_result(self._finish_prim(kind, vals))
+
+    # -- conditionals ------------------------------------------------------------------
+
+    def _expand_branch(self, op: LIte, frame: Frame, cond) -> list:
+        blk = op.then_block if cond else op.else_block
+        return self.instantiate(frame.lfunc, blk,
+                                self._block_inputs(blk, frame))
+
+    def _step_ite(self, op: LIte, frame: Frame):
+        cond = frame.regs[op.cond]
+        if not is_pending(cond):
+            outs = self._expand_branch(op, frame, check_bound(cond))
+            for r, v in zip(op.outs, outs):
+                frame.regs[r] = v
+            return
+        futs = [self.new_future() for _ in op.outs]
+        for r, f in zip(op.outs, futs):
+            frame.regs[r] = Pending(f)
+
+        async def later():
+            c = check_bound(await shallow(cond))
+            outs = self._expand_branch(op, frame, c)
+            for f, v in zip(futs, outs):
+                _fulfill(f, v)
+
+        self.spawn(later())
+
+    # -- fold (for loops) ----------------------------------------------------------------
+
+    def _run_fold(self, op: LFor, frame: Frame, spine) -> list:
+        carries = [frame.regs[r] for r in op.init]
+        body = op.body
+        for item in spine:
+            carries = self.instantiate(
+                frame.lfunc, body,
+                self._block_inputs(body, frame, item=item, carries=carries))
+        return carries
+
+    def _step_for(self, op: LFor, frame: Frame):
+        spine = frame.regs[op.spine]
+        if not is_pending(spine):
+            outs = self._run_fold(op, frame, check_bound(spine))
+            for r, v in zip(op.outs, outs):
+                frame.regs[r] = v
+            return
+        futs = [self.new_future() for _ in op.outs]
+        for r, f in zip(op.outs, futs):
+            frame.regs[r] = Pending(f)
+
+        async def later():
+            sp = check_bound(await shallow(spine))
+            outs = self._run_fold(op, frame, sp)
+            for f, v in zip(futs, outs):
+                _fulfill(f, v)
+
+        self.spawn(later())
+
+    # -- while loops ------------------------------------------------------------------------
+
+    def _step_while(self, op: LWhile, frame: Frame):
+        carries = [frame.regs[r] for r in op.init]
+        outs_bound = False
+        futs = None
+
+        def bind(vals):
+            if futs is None:
+                for r, v in zip(op.outs, vals):
+                    frame.regs[r] = v
+            else:
+                for f, v in zip(futs, vals):
+                    _fulfill(f, v)
+
+        # inline iterations while the condition resolves synchronously
+        while True:
+            couts = self.instantiate(
+                frame.lfunc, op.cond_block,
+                self._block_inputs(op.cond_block, frame, carries=carries))
+            cond, carries_after = couts[0], couts[1:]
+            if is_pending(cond):
+                break
+            if not check_bound(cond):
+                bind(carries_after)
+                return
+            carries = self.instantiate(
+                frame.lfunc, op.body_block,
+                self._block_inputs(op.body_block, frame,
+                                   carries=carries_after))
+
+        futs = [self.new_future() for _ in op.outs]
+        for r, f in zip(op.outs, futs):
+            frame.regs[r] = Pending(f)
+
+        async def later(cond, carries_after):
+            while True:
+                c = check_bound(await shallow(cond))
+                if not c:
+                    bind(carries_after)
+                    return
+                carries = self.instantiate(
+                    frame.lfunc, op.body_block,
+                    self._block_inputs(op.body_block, frame,
+                                       carries=carries_after))
+                couts = self.instantiate(
+                    frame.lfunc, op.cond_block,
+                    self._block_inputs(op.cond_block, frame, carries=carries))
+                cond, carries_after = couts[0], couts[1:]
+
+        self.spawn(later(cond, carries_after))
+
+    # -- calls ----------------------------------------------------------------------------------
+
+    def _split_args(self, op: LCallOp, frame: Frame):
+        vals = [frame.regs[a] for a in op.args]
+        npos = len(vals) - len(op.kwnames)
+        pos = vals[:npos]
+        kw = dict(zip(op.kwnames, vals[npos:]))
+        fresh = op.fresh[:npos] if op.fresh else ()
+        return pos, kw, fresh
+
+    def _step_call(self, op: LCallOp, frame: Frame):
+        regs = frame.regs
+        fnv = regs[op.fn]
+        s_in = regs[op.s_in]
+        pos, kw, fresh = self._split_args(op, frame)
+
+        if not is_pending(fnv):
+            fn = check_bound(fnv)
+            if _is_internal(fn):
+                inputs = self._bind_graph_call(fn, pos, kw, s_in)
+                outs = self.instantiate(fn.lfunc, fn.lfunc.block, inputs)
+                regs[op.dst] = outs[0]
+                regs[op.s_out] = outs[1]
+                return
+            # external: inline fast path for ready unordered sync calls
+            from .controllers import unwrap_external
+            if (self.inline_fast_path
+                    and not is_pending(s_in)
+                    and all(deep_ready(a) for a in pos)
+                    and all(deep_ready(v) for v in kw.values())
+                    and not registry.is_async_callable(unwrap_external(fn))):
+                cls = registry.get_callable_class(fn, pos, kw, fresh)
+                if cls == registry.UNORDERED:
+                    regs[op.dst] = self._dispatch_inline(fn, pos, kw,
+                                                         op.callsite)
+                    regs[op.s_out] = s_in  # forward locks unchanged
+                    return
+            # queued external call: spawn a concurrency controller
+            dfut = self.new_future()
+            out_state = SeqState(self.new_future(), self.new_future())
+            regs[op.dst] = Pending(dfut)
+            regs[op.s_out] = out_state
+            self.spawn(external_controller(
+                self, fn, pos, kw, fresh, s_in, out_state, dfut,
+                op.callsite))
+            return
+
+        # unknown callee: defer everything
+        dfut = self.new_future()
+        sfut = self.new_future()
+        regs[op.dst] = Pending(dfut)
+        regs[op.s_out] = Pending(sfut)
+        self.spawn(self._deferred_call(op, fnv, pos, kw, fresh, s_in,
+                                       dfut, sfut))
+
+    def _dispatch_inline(self, fn, pos, kw, callsite):
+        from .controllers import unwrap_external
+        from .trace import safe_repr
+        pos = [check_bound(a) for a in pos]
+        ev = None
+        if self.trace is not None:
+            ev = self.trace.queued(registry.callable_name(fn), callsite,
+                                   wrapped=hasattr(fn, "__poppy_dispatch__"))
+            self.trace.classified(ev, registry.UNORDERED)
+            self.trace.dispatched(ev, args_repr=safe_repr((tuple(pos), kw)))
+        try:
+            result = unwrap_external(fn)(*pos, **kw)
+        except Exception as e:
+            from .errors import ExternalCallError
+            raise ExternalCallError(registry.callable_name(fn), e) from e
+        if ev is not None:
+            self.trace.resolved(ev)
+        return result
+
+    def _bind_graph_call(self, fn, pos, kw, s_in):
+        lf: LFunc = fn.lfunc
+        captured = getattr(fn, "captured_vals", ())
+        if lf.signature is not None:
+            ba = lf.signature.bind(*pos, **kw)
+            ba.apply_defaults()
+            vals = [ba.arguments[p] for p in lf.params]
+        else:
+            vals = list(pos)
+            if kw:
+                vals = vals + [None] * (len(lf.params) - len(vals))
+                for k, v in kw.items():
+                    vals[lf.params.index(k)] = v
+            elif len(vals) != len(lf.params):
+                raise TypeError(
+                    f"{lf.name}() takes {len(lf.params)} arguments "
+                    f"({len(vals)} given)")
+        return vals + list(captured) + [s_in]
+
+    async def _deferred_call(self, op, fnv, pos, kw, fresh, s_in, dfut, sfut):
+        fn = check_bound(await shallow(fnv))
+        if _is_internal(fn):
+            inputs = self._bind_graph_call(fn, pos, kw, s_in)
+            outs = self.instantiate(fn.lfunc, fn.lfunc.block, inputs)
+            _fulfill(dfut, outs[0])
+            _fulfill(sfut, outs[1])
+            return
+        out_state = SeqState(self.new_future(), self.new_future())
+        sfut.set_result(out_state)
+        await external_controller(self, fn, pos, kw, fresh, s_in, out_state,
+                                  dfut, op.callsite)
+
+
+def run_poppy(poppy_fn, args, kwargs, *, trace=None):
+    """Run a compiled @poppy function to completion (blocking entry point)."""
+    rt = Runtime(trace=trace)
+    try:
+        asyncio.get_running_loop()
+    except RuntimeError:
+        return asyncio.run(rt.run(poppy_fn, args, kwargs))
+    raise PoppyRuntimeError(
+        "calling a @poppy function from inside a running event loop; use "
+        "`await fn.async_call(...)` instead")
+
+
+async def run_poppy_async(poppy_fn, args, kwargs, *, trace=None):
+    rt = Runtime(trace=trace)
+    return await rt.run(poppy_fn, args, kwargs)

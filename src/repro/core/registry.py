@@ -1,0 +1,301 @@
+"""Reordering-class registry and dynamic classification (paper §6.1).
+
+Every external call belongs to one of three classes:
+
+  * ``unordered``  — may execute in any order (stateless externals, pure
+    operations on immutable data).
+  * ``readonly``   — reorderable among themselves, but ordered with respect
+    to sequential calls (reads of mutable state).
+  * ``sequential`` — must execute in original program order (mutation, I/O).
+
+For dynamically-dispatched call sites (operators, methods) the class is
+decided at *runtime* by the concurrency controller once argument types are
+known — this module provides those decision rules, including the annotation
+tables for Python's operators, in-place operators, core-immutable-type
+methods, mutating-method tables for list/dict/set/bytearray, and common
+builtins.  Unannotated callables default to ``sequential`` (paper §6.1).
+"""
+
+from __future__ import annotations
+
+import datetime
+import enum
+import functools
+import inspect
+import types
+
+import contextvars
+
+UNORDERED = "unordered"
+READONLY = "readonly"
+SEQUENTIAL = "sequential"
+
+_CLASSES = (UNORDERED, READONLY, SEQUENTIAL)
+
+# Overhead measurement (paper Fig. 7): force every external call to the
+# sequential class so the run has PopPy's full runtime with zero extracted
+# parallelism.
+_force_sequential: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "poppy_force_sequential", default=False)
+
+
+class force_sequential_annotations:
+    def __enter__(self):
+        self._tok = _force_sequential.set(True)
+        return self
+
+    def __exit__(self, *exc):
+        _force_sequential.reset(self._tok)
+        return False
+
+
+def sequential_forced() -> bool:
+    return _force_sequential.get()
+
+
+class ExternalInfo:
+    """Attached to external callables as ``__poppy_external__``."""
+
+    __slots__ = ("cls", "classify", "name")
+
+    def __init__(self, cls=None, classify=None, name=""):
+        assert (cls is None) != (classify is None)
+        if cls is not None:
+            assert cls in _CLASSES, cls
+        self.cls = cls
+        self.classify = classify
+        self.name = name
+
+
+# ---------------------------------------------------------------------------
+# value immutability
+
+_IMMUTABLE_ATOMS = {
+    bool, int, float, complex, str, bytes, type(None), type, range, slice,
+    type(Ellipsis), type(NotImplemented), datetime.date, datetime.time,
+    datetime.datetime, datetime.timedelta, datetime.timezone,
+    types.FunctionType, types.BuiltinFunctionType, types.MethodType,
+    types.BuiltinMethodType, types.LambdaType, functools.partial,
+    types.CodeType, types.ModuleType,
+}
+
+_EXTRA_IMMUTABLE: set[type] = set()
+
+
+def register_immutable_type(t: type):
+    """Library hook: declare a user type immutable for classification."""
+    _EXTRA_IMMUTABLE.add(t)
+
+
+def _is_frozen_pydantic(v) -> bool:
+    cfg = getattr(type(v), "model_config", None)
+    if isinstance(cfg, dict):
+        return bool(cfg.get("frozen"))
+    return False
+
+
+def is_immutable(v) -> bool:
+    """Shallow immutability of a value (paper's core-immutable-type rule:
+    tuple/frozenset count as immutable regardless of element types)."""
+    t = type(v)
+    if t in _IMMUTABLE_ATOMS or t in _EXTRA_IMMUTABLE:
+        return True
+    if t is tuple or t is frozenset:
+        return True
+    if isinstance(v, enum.Enum):
+        return True
+    if callable(v) and getattr(v, "__poppy_external__", None) is not None:
+        return True
+    if getattr(v, "__poppy_internal__", False):
+        return True
+    if _is_frozen_pydantic(v):
+        return True
+    return False
+
+
+def is_deeply_immutable(v) -> bool:
+    """Strict (recursive) immutability — used for the freshness upgrade of
+    internally-constructed containers, where we must guarantee no mutable
+    state is reachable."""
+    t = type(v)
+    if t is tuple or t is frozenset:
+        return all(is_deeply_immutable(e) for e in v)
+    return is_immutable(v)
+
+
+def arg_immutable(v, fresh: bool) -> bool:
+    """Immutability of a call argument for classification.
+
+    ``fresh`` marks containers constructed internally by the compiled code
+    whose register has exactly one consumer — unaliased, so no other code
+    can observe them, and (when their contents are immutable) reordering a
+    read of them is unobservable.  This is required for the paper's Fig. 2
+    behavior (``value_cache |= {state}`` classifying unordered even though
+    ``{state}`` is a set literal); see DESIGN.md §3.
+    """
+    if is_immutable(v):
+        return True
+    if fresh and type(v) in (list, set, dict):
+        if type(v) is dict:
+            return all(is_deeply_immutable(k) and is_deeply_immutable(e)
+                       for k, e in v.items())
+        return all(is_deeply_immutable(e) for e in v)
+    return False
+
+
+def _all_imm(args, fresh_mask):
+    return all(arg_immutable(a, fresh_mask[i] if i < len(fresh_mask) else False)
+               for i, a in enumerate(args))
+
+
+# ---------------------------------------------------------------------------
+# operator / intrinsic classifiers (used by stdlib.py)
+
+def classify_binary(args, kwargs, fresh_mask):
+    """All 28 unary/binary operators: both immutable → unordered; any
+    mutable → readonly (prior mutations must be allowed to finish)."""
+    return UNORDERED if _all_imm(args, fresh_mask) else READONLY
+
+
+def classify_inplace(args, kwargs, fresh_mask):
+    """All 13 in-place operators: lhs mutable → sequential (it mutates);
+    rhs mutable → readonly; both immutable → unordered."""
+    lhs, rhs = args[0], args[1]
+    if not arg_immutable(lhs, fresh_mask[0] if fresh_mask else False):
+        # in-place op on a *fresh* mutable container is still a mutation of
+        # an unaliased object → arg_immutable already upgraded it if safe
+        return SEQUENTIAL
+    if not arg_immutable(rhs, fresh_mask[1] if len(fresh_mask) > 1 else False):
+        return READONLY
+    return UNORDERED
+
+
+def classify_read(args, kwargs, fresh_mask):
+    """Pure reads: unordered on immutable data, readonly on mutable."""
+    return UNORDERED if _all_imm(args, fresh_mask) else READONLY
+
+
+def classify_unordered(args, kwargs, fresh_mask):
+    return UNORDERED
+
+
+def classify_sequential(args, kwargs, fresh_mask):
+    return SEQUENTIAL
+
+
+# ---------------------------------------------------------------------------
+# method tables
+
+_MUTATING_METHODS: dict[type, frozenset] = {
+    list: frozenset({
+        "append", "extend", "insert", "remove", "pop", "clear", "sort",
+        "reverse", "__setitem__", "__delitem__", "__iadd__", "__imul__",
+    }),
+    dict: frozenset({
+        "__setitem__", "__delitem__", "clear", "pop", "popitem",
+        "setdefault", "update", "__ior__",
+    }),
+    set: frozenset({
+        "add", "discard", "remove", "pop", "clear", "update",
+        "intersection_update", "difference_update",
+        "symmetric_difference_update", "__iand__", "__ior__", "__ixor__",
+        "__isub__",
+    }),
+    bytearray: frozenset({
+        "append", "extend", "insert", "remove", "pop", "clear", "reverse",
+        "__setitem__", "__delitem__", "__iadd__", "__imul__",
+    }),
+}
+
+# builtins that only *read* their arguments
+_READING_BUILTINS = {
+    len, repr, str, format, hash, sorted, min, max, sum, any, all, abs,
+    round, isinstance, issubclass, callable, id, iter, divmod, ord, chr,
+    hex, oct, bin, list, tuple, set, dict, frozenset, int, float, bool,
+    complex, bytes, range, enumerate, zip, map, filter, reversed, type,
+    vars, dir, hasattr,
+}
+
+_SEQUENTIAL_BUILTINS = {print, input, open, next, setattr, delattr, exec,
+                        eval, compile, __import__}
+
+
+def exhausts_iterator(v) -> bool:
+    """Iterating this value consumes it (mutation)."""
+    return isinstance(v, (enumerate, zip, map, filter, reversed)) or (
+        hasattr(v, "__next__"))
+
+
+def classify_iter_spine(args, kwargs, fresh_mask):
+    """Snapshotting an iterable for a ``for`` loop: immutable iterables are
+    unordered; mutable containers are readonly reads; exhaustible iterators
+    are consumed — a mutation — but one of an iterator object that, in the
+    supported fragment, was created at this call site; snapshotting it at
+    the readonly point keeps the underlying container read correctly
+    ordered with respect to sequential mutations."""
+    (v,) = args
+    if exhausts_iterator(v):
+        return READONLY
+    return classify_read(args, kwargs, fresh_mask)
+
+
+def get_callable_class(fn, args, kwargs, fresh_mask):
+    """Dynamic concurrency classification for an arbitrary callable
+    (paper §6.2: the controller 'knows what function is actually being
+    called, and thus knows the desired concurrency behavior')."""
+    if _force_sequential.get():
+        return SEQUENTIAL
+    info = getattr(fn, "__poppy_external__", None)
+    if info is not None:
+        if info.cls is not None:
+            return info.cls
+        return info.classify(args, kwargs, fresh_mask)
+
+    if isinstance(fn, functools.partial):
+        return get_callable_class(fn.func, tuple(fn.args) + tuple(args),
+                                  kwargs, fresh_mask)
+
+    # bound methods: classify by receiver
+    self_obj = getattr(fn, "__self__", None)
+    if self_obj is not None and not isinstance(self_obj, types.ModuleType):
+        name = getattr(fn, "__name__", "")
+        t = type(self_obj)
+        muts = _MUTATING_METHODS.get(t)
+        if muts is not None:
+            if name in muts:
+                return SEQUENTIAL
+            # non-mutating method of a known mutable container → read
+            return READONLY
+        if is_immutable(self_obj):
+            # paper: 336 methods of core immutable datatypes — unordered if
+            # all arguments immutable, else readonly
+            return UNORDERED if _all_imm(args, fresh_mask) else READONLY
+        return SEQUENTIAL  # unknown mutable receiver → paper default
+
+    if fn in _SEQUENTIAL_BUILTINS:
+        return SEQUENTIAL
+    if fn in _READING_BUILTINS:
+        return UNORDERED if _all_imm(args, fresh_mask) else READONLY
+    if isinstance(fn, type):
+        if fn in (list, tuple, set, dict, frozenset, str, int, float, bool,
+                  complex, bytes, bytearray, range):
+            return UNORDERED if _all_imm(args, fresh_mask) else READONLY
+        return SEQUENTIAL  # unknown constructors may run arbitrary __init__
+
+    # unannotated function: paper §6.1 — default to sequential for soundness
+    return SEQUENTIAL
+
+
+def callable_name(fn) -> str:
+    for attr in ("__qualname__", "__name__"):
+        n = getattr(fn, attr, None)
+        if n:
+            return n
+    return repr(fn)
+
+
+def is_async_callable(fn) -> bool:
+    if isinstance(fn, functools.partial):
+        return is_async_callable(fn.func)
+    return inspect.iscoroutinefunction(fn) or inspect.iscoroutinefunction(
+        getattr(fn, "__call__", None))

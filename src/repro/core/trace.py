@@ -1,0 +1,165 @@
+"""External-call traces and the ≡_A equivalence relation (paper §4.3).
+
+A *trace* is the sequence of external calls a program makes.  PopPy's
+soundness guarantee is that its trace is ≡_A-equivalent to the standard
+sequential Python trace:
+
+  * ``sequential`` calls appear in exactly the same order;
+  * ``readonly`` calls may permute among themselves but stay within the same
+    window between consecutive sequential calls;
+  * ``unordered`` calls may appear anywhere (multiset equality).
+
+The checker below is used by the differential and property-based tests.
+"""
+
+from __future__ import annotations
+
+import contextvars
+import itertools
+import time
+from collections import Counter
+from dataclasses import dataclass, field
+
+
+def safe_repr(v, limit=200):
+    try:
+        r = repr(v)
+    except Exception:  # pragma: no cover
+        r = f"<unreprable {type(v).__name__}>"
+    if len(r) > limit:
+        r = r[:limit] + "…"
+    return r
+
+
+@dataclass
+class TraceEvent:
+    name: str
+    callsite: str = ""
+    cls: str = ""
+    t_queue: float = 0.0
+    t_dispatch: float = 0.0
+    t_resolve: float = 0.0
+    args_repr: str = ""
+    seq_no: int = -1  # dispatch order
+    # wrapped=True → an annotation-wrapper external, observable in both
+    # plain-Python and PopPy runs; the ≡_A checker compares only these
+    # (operators/builtins are not interceptable under standard Python).
+    wrapped: bool = True
+
+
+@dataclass
+class Trace:
+    events: list[TraceEvent] = field(default_factory=list)
+    _counter: itertools.count = field(default_factory=itertools.count)
+
+    # -- engine-side API --------------------------------------------------
+
+    def queued(self, name, callsite="", wrapped=True) -> TraceEvent:
+        ev = TraceEvent(name=name, callsite=callsite,
+                        t_queue=time.monotonic(), wrapped=wrapped)
+        self.events.append(ev)
+        return ev
+
+    def classified(self, ev: TraceEvent, cls: str):
+        ev.cls = cls
+
+    def dispatched(self, ev: TraceEvent, args_repr=""):
+        ev.t_dispatch = time.monotonic()
+        ev.args_repr = args_repr
+        ev.seq_no = next(self._counter)
+
+    def resolved(self, ev: TraceEvent):
+        ev.t_resolve = time.monotonic()
+
+    # -- plain-Python-side API ---------------------------------------------
+
+    def record_direct(self, name, cls, args_repr="", callsite=""):
+        now = time.monotonic()
+        ev = TraceEvent(name=name, callsite=callsite, cls=cls,
+                        t_queue=now, t_dispatch=now, t_resolve=now,
+                        args_repr=args_repr, seq_no=next(self._counter),
+                        wrapped=True)
+        self.events.append(ev)
+        return ev
+
+    # -- views ---------------------------------------------------------------
+
+    def dispatch_order(self, only_wrapped=False) -> list[TraceEvent]:
+        evs = [e for e in self.events
+               if e.seq_no >= 0 and (e.wrapped or not only_wrapped)]
+        evs.sort(key=lambda e: e.seq_no)
+        return evs
+
+    def keys(self, only_wrapped=True):
+        return [(e.name, e.cls, e.args_repr)
+                for e in self.dispatch_order(only_wrapped=only_wrapped)]
+
+
+_current_trace: contextvars.ContextVar[Trace | None] = contextvars.ContextVar(
+    "poppy_trace", default=None)
+
+
+def current_trace() -> Trace | None:
+    return _current_trace.get()
+
+
+class recording:
+    """Context manager: capture all external-call events into a Trace."""
+
+    def __init__(self):
+        self.trace = Trace()
+
+    def __enter__(self) -> Trace:
+        self._tok = _current_trace.set(self.trace)
+        return self.trace
+
+    def __exit__(self, *exc):
+        _current_trace.reset(self._tok)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# ≡_A equivalence
+
+
+def _segments(keys):
+    """Split a dispatch-ordered key list at sequential events.
+
+    Returns (sequential_keys, readonly_segments, unordered_multiset) where
+    readonly_segments[i] is the multiset of readonly calls between the i-th
+    and (i+1)-th sequential call.
+    """
+    seq = []
+    ro_segments = [Counter()]
+    unordered = Counter()
+    for name, cls, args in keys:
+        k = (name, args)
+        if cls == "sequential":
+            seq.append(k)
+            ro_segments.append(Counter())
+        elif cls == "readonly":
+            ro_segments[-1][k] += 1
+        else:
+            unordered[k] += 1
+    return seq, ro_segments, unordered
+
+
+def equivalent(trace_a: Trace, trace_b: Trace) -> tuple[bool, str]:
+    """Check trace_a ≡_A trace_b. Returns (ok, explanation)."""
+    sa, ra, ua = _segments(trace_a.keys())
+    sb, rb, ub = _segments(trace_b.keys())
+    if sa != sb:
+        for i, (x, y) in enumerate(zip(sa, sb)):
+            if x != y:
+                return False, f"sequential calls diverge at #{i}: {x} vs {y}"
+        return False, (f"sequential call count differs: "
+                       f"{len(sa)} vs {len(sb)}")
+    if len(ra) != len(rb):
+        return False, "internal error: segment count mismatch"
+    for i, (x, y) in enumerate(zip(ra, rb)):
+        if x != y:
+            return False, (f"readonly calls differ in segment {i}: "
+                           f"{(x - y) + (y - x)}")
+    if ua != ub:
+        return False, f"unordered multiset differs: {(ua - ub) + (ub - ua)}"
+    return True, "equivalent"

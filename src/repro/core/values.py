@@ -1,0 +1,164 @@
+"""Runtime value representation for the opportunistic (λ^O) engine.
+
+A register slot holds either a plain Python value (READY) or a ``Pending``
+wrapping an ``asyncio.Future``.  Internally-constructed containers (tuple /
+list / slice built by compiled code) may embed ``Pending`` placeholders; the
+spine is known even when elements are not — this is what lets a ``fold``
+iterate over a tuple of outstanding LLM results (paper §2.3, Fig. 2).
+
+External calls are dispatched only with *deep-resolved* arguments.
+"""
+
+from __future__ import annotations
+
+import asyncio
+
+from .errors import PoppyUnboundLocalError
+
+
+class _UnboundType:
+    """Sentinel for promoted locals read before assignment (Python's
+    UnboundLocalError semantics, preserved through SSA promotion)."""
+
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self):
+        return "<unbound>"
+
+
+UNBOUND = _UnboundType()
+
+
+class Pending:
+    """Placeholder for a not-yet-resolved register value."""
+
+    __slots__ = ("fut",)
+
+    def __init__(self, fut: asyncio.Future):
+        self.fut = fut
+
+    def __repr__(self):
+        return f"<pending {id(self):#x}>"
+
+
+def is_pending(v) -> bool:
+    return type(v) is Pending
+
+
+def shallow_ready(v) -> bool:
+    return type(v) is not Pending
+
+
+async def shallow(v):
+    """Await the top-level value (its spine); embedded Pendings may remain."""
+    while type(v) is Pending:
+        v = await v.fut
+    return v
+
+
+def deep_ready(v) -> bool:
+    """True iff ``v`` contains no Pending anywhere (spine and elements)."""
+    t = type(v)
+    if t is Pending:
+        return False
+    if t is tuple or t is list:
+        return all(deep_ready(e) for e in v)
+    if t is dict:
+        return all(deep_ready(e) for e in v.values())
+    if t is slice:
+        return deep_ready(v.start) and deep_ready(v.stop) and deep_ready(v.step)
+    if getattr(v, "__poppy_internal__", False) and hasattr(v, "captured_vals"):
+        return all(deep_ready(e) for e in v.captured_vals)
+    return True
+
+
+def check_bound(v):
+    if v is UNBOUND:
+        raise PoppyUnboundLocalError("local variable referenced before assignment")
+    return v
+
+
+async def deep_resolve(v):
+    """Resolve every embedded Pending.
+
+    Immutable containers (tuple/slice) are rebuilt; mutable containers
+    (list/dict) are substituted *in place* — this preserves aliasing
+    semantics (sequential Python would have stored the concrete value in
+    that same object).
+    """
+    v = await shallow(v)
+    t = type(v)
+    if t is tuple:
+        if deep_ready(v):
+            return v
+        return tuple([await deep_resolve(e) for e in v])
+    if t is list:
+        for i, e in enumerate(v):
+            if not deep_ready(e):
+                v[i] = await deep_resolve(e)
+        return v
+    if t is dict:
+        for k, e in list(v.items()):
+            if not deep_ready(e):
+                v[k] = await deep_resolve(e)
+        return v
+    if t is slice:
+        if deep_ready(v):
+            return v
+        return slice(
+            await deep_resolve(v.start),
+            await deep_resolve(v.stop),
+            await deep_resolve(v.step),
+        )
+    if getattr(v, "__poppy_internal__", False) and hasattr(v, "captured_vals"):
+        if not deep_ready(v):
+            v.captured_vals = tuple(
+                [await deep_resolve(e) for e in v.captured_vals])
+        return v
+    return v
+
+
+class SeqState:
+    """Runtime representation of a sequence variable ``S`` (paper §6.2).
+
+    Carries the two lock futures between adjacent call sites:
+      * ``f_r`` — resolved once all preceding @sequential calls resolved
+        (a "read lock").
+      * ``f_w`` — resolved once all preceding @sequential *and* @readonly
+        calls resolved (a "write lock").
+
+    ``None`` means already-resolved (saves allocating Futures on the fast
+    path at program start and after quiescence).
+    """
+
+    __slots__ = ("f_r", "f_w")
+
+    def __init__(self, f_r=None, f_w=None):
+        self.f_r = f_r
+        self.f_w = f_w
+
+    @property
+    def resolved(self) -> bool:
+        return (self.f_r is None or self.f_r.done()) and (
+            self.f_w is None or self.f_w.done()
+        )
+
+    async def wait_r(self):
+        if self.f_r is not None and not self.f_r.done():
+            await self.f_r
+
+    async def wait_w(self):
+        if self.f_w is not None and not self.f_w.done():
+            await self.f_w
+
+    def __repr__(self):
+        s = lambda f: "✓" if f is None or f.done() else "…"
+        return f"<S r={s(self.f_r)} w={s(self.f_w)}>"
+
+
+S_READY = SeqState()

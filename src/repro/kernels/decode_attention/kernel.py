@@ -1,0 +1,182 @@
+"""Decode attention kernel (TPU Pallas) — flash-decoding-style KV split.
+
+One new query token per sequence attends a long KV cache.  At decode shapes
+the MXU is batch-starved, so the kernel splits the *cache length* across
+grid steps (split-K): grid (batch, kv_heads, kv_blocks), each step streams
+one [block_kv, d] tile of K/V through VMEM against the [G, d] query block
+of that KV head's q-group (GQA folded into the q BlockSpec), maintaining
+online-softmax partials in VMEM scratch.  A validity mask handles both
+partially-filled caches and ring buffers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _dec_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr,
+                acc_scr, *, block_kv, n_kv, seq_kv, scale):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [G, d]
+    k = k_ref[0, 0].astype(jnp.float32)            # [block_kv, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+    # in-bounds check guards block padding beyond the cache length
+    jpos = ki * block_kv + jax.lax.iota(jnp.int32, block_kv)
+    ok = valid_ref[0] & (jpos < seq_kv)            # [block_kv] bool
+    # zero invalid v rows: NaN padding/uninitialized slots would poison p@v
+    v = jnp.where(ok[:, None], v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(ok[None, :], s, NEG_INF)         # [G, block_kv]
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    # explicit zero for masked columns: OOB v-rows may be NaN-padded
+    p = jnp.where(ok[None, :], jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k, v, valid, *, block_kv=256, interpret=False):
+    """q: [B, 1, H, d]; k,v: [B, C, KVH, d]; valid: [B, C] bool →
+    [B, 1, H, d]."""
+    B, _, H, d = q.shape
+    C, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    block_kv = min(block_kv, C)
+    n_kv = pl.cdiv(C, block_kv)
+    scale = d ** -0.5
+
+    # [B, KVH, G, d] — the q-group of each kv head; q layout is
+    # h = kv_head * G + g (the models' reshape convention)
+    qt = q[:, 0].reshape(B, KVH, G, d)
+    kt = k.transpose(0, 2, 1, 3)                   # [B, KVH, C, d]
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_dec_kernel, block_kv=block_kv, n_kv=n_kv,
+                               seq_kv=C, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KVH, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, block_kv), lambda b, h, ki: (b, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, valid)
+    return out.reshape(B, 1, H, d)
+
+
+def _dec_int8_kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, valid_ref, o_ref,
+                     m_scr, l_scr, acc_scr, *, block_kv, n_kv, seq_kv,
+                     scale):
+    """int8-KV variant: K/V arrive quantized (per-vector scales) and are
+    dequantized in-register after the VMEM load — HBM traffic is the int8
+    payload + one f32 scale per (position, head), ~2× less than bf16."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [G, d]
+    ksc = ks_ref[0, 0].astype(jnp.float32)         # [block_kv]
+    vsc = vs_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32) * ksc[:, None]
+    v = v_ref[0, 0].astype(jnp.float32) * vsc[:, None]
+    jpos = ki * block_kv + jax.lax.iota(jnp.int32, block_kv)
+    ok = valid_ref[0] & (jpos < seq_kv)
+    v = jnp.where(ok[:, None], v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(ok[None, :], s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(ok[None, :], jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_int8_fwd(q, k_q, v_q, k_scale, v_scale, valid, *,
+                              block_kv=256, interpret=False):
+    """q: [B,1,H,d]; k_q,v_q: [B,C,KVH,d] int8; scales: [B,C,KVH] f32;
+    valid: [B,C] bool → [B,1,H,d]."""
+    B, _, H, d = q.shape
+    C, KVH = k_q.shape[1], k_q.shape[2]
+    G = H // KVH
+    block_kv = min(block_kv, C)
+    n_kv = pl.cdiv(C, block_kv)
+    scale = d ** -0.5
+
+    qt = q[:, 0].reshape(B, KVH, G, d)
+    kt = k_q.transpose(0, 2, 1, 3)                 # [B,KVH,C,d] int8
+    vt = v_q.transpose(0, 2, 1, 3)
+    kst = k_scale.transpose(0, 2, 1)               # [B,KVH,C]
+    vst = v_scale.transpose(0, 2, 1)
+
+    kernel = functools.partial(_dec_int8_kernel, block_kv=block_kv,
+                               n_kv=n_kv, seq_kv=C, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KVH, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv), lambda b, h, ki: (b, h, ki)),
+            pl.BlockSpec((1, 1, block_kv), lambda b, h, ki: (b, h, ki)),
+            pl.BlockSpec((1, block_kv), lambda b, h, ki: (b, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, kst, vst, valid)
+    return out.reshape(B, 1, H, d)

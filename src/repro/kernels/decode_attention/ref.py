@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q: [B,1,H,d]; k,v: [B,C,KVH,d]; valid: [B,C] → [B,1,H,d]."""
+    B, _, H, d = q.shape
+    C, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qg = q[:, 0].reshape(B, KVH, G, d)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, d).astype(q.dtype)

@@ -1,0 +1,40 @@
+"""Jit'd public wrapper for flash attention with a custom VJP.
+
+Forward runs the Pallas kernel; backward recomputes attention via the
+reference path (flash-style recomputation — keeps memory O(S·d) while
+reusing XLA's fused softmax gradient, which is fine off the critical
+serving path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal=True, window=0, interpret=False):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, interpret):
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,77 @@
+"""RG-LRU linear-recurrence scan kernel (TPU Pallas).
+
+The diagonal recurrence h_t = a_t·h_{t-1} + b_t is elementwise over the
+width dimension, so the natural TPU decomposition is width-blocked
+(VPU-lane aligned, multiples of 128) with the *sequence* split across grid
+steps: grid (batch, width_blocks, seq_blocks), carrying h across seq blocks
+in VMEM scratch (the TPU revisiting-grid accumulation pattern).  Inside a
+block the recurrence runs as an unrolled log-depth Blelloch-style doubling
+scan over the [block_s, block_w] tile — sequential in S only across tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, h_scr, *, n_s):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = h0_ref[0]
+
+    a = a_ref[0]          # [block_s, block_w] fp32
+    b = b_ref[0]
+    # inclusive Hillis-Steele doubling scan within the tile; the combine
+    # identity is (a=1, b=0), so the a-shift pads with ONES
+    S = a.shape[0]
+    shift = 1
+    while shift < S:
+        a_sh = jnp.pad(a, ((shift, 0), (0, 0)), constant_values=1.0)[:S]
+        b_sh = jnp.pad(b, ((shift, 0), (0, 0)))[:S]
+        b = b_sh * a + b
+        a = a_sh * a
+        shift *= 2
+    # fold in the carried state: h_t = a_{1..t}·h0 + scanned_b
+    h = b + a * h_scr[...]
+    o_ref[0] = h
+    h_scr[...] = h[-1:, :]
+
+
+def rglru_scan_fwd(a, b, h0=None, *, block_s=256, block_w=512,
+                   interpret=False):
+    """a, b: [B, S, W] fp32 → h: [B, S, W] with
+    h_t = a_t·h_{t-1} + b_t, h_0 from h0 [B, W] (zeros if None)."""
+    B, S, W = a.shape
+    block_s = min(block_s, S)
+    block_w = min(block_w, W)
+    n_s = pl.cdiv(S, block_s)
+    n_w = pl.cdiv(W, block_w)
+    if h0 is None:
+        h0 = jnp.zeros((B, 1, W), jnp.float32)
+    else:
+        h0 = h0.reshape(B, 1, W).astype(jnp.float32)
+
+    kernel = functools.partial(_rglru_kernel, n_s=n_s)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_w, n_s),
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_w),
+                         lambda b_, wi, si: (b_, si, wi)),
+            pl.BlockSpec((1, block_s, block_w),
+                         lambda b_, wi, si: (b_, si, wi)),
+            pl.BlockSpec((1, 1, block_w), lambda b_, wi, si: (b_, 0, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_w),
+                               lambda b_, wi, si: (b_, si, wi)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

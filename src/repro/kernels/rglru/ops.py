@@ -1,0 +1,33 @@
+"""Jit'd public wrapper for the RG-LRU scan with recompute-style VJP.
+
+The linear recurrence's gradient is itself a (reversed) linear recurrence;
+we differentiate through the associative-scan reference, keeping the Pallas
+kernel on the forward path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rglru_scan_fwd
+from .ref import rglru_scan_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rglru_scan(a, b, interpret=False):
+    return rglru_scan_fwd(a, b, interpret=interpret)
+
+
+def _fwd(a, b, interpret):
+    return rglru_scan_fwd(a, b, interpret=interpret), (a, b)
+
+
+def _bwd(interpret, res, g):
+    a, b = res
+    _, vjp = jax.vjp(lambda a_, b_: rglru_scan_ref(a_, b_), a, b)
+    return vjp(g)
+
+
+rglru_scan.defvjp(_fwd, _bwd)

@@ -1,0 +1,107 @@
+"""Mamba-2 SSD chunk-scan kernel (TPU Pallas).
+
+TPU-native adaptation of the SSD algorithm [arXiv:2405.21060]: each grid
+step processes one (batch, head, chunk) tile — intra-chunk work is two
+[Q,Q]/[Q,N]·[N,P] matmuls (MXU-shaped, Q and P multiples of 128/8), and the
+inter-chunk recurrence is carried through VMEM scratch across the innermost
+chunk grid dimension (the revisiting-grid pattern), replacing the
+warp-level chunked scan of the CUDA implementation.
+
+Inputs are pre-scaled outside the kernel (xdt = x·dt, da = dt·A) so the
+kernel body is pure matmul + exp work.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, da_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref,
+                state_scr, *, n_chunks):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = h0_ref[0, 0]
+
+    x = xdt_ref[0, 0].astype(jnp.float32)        # [Q, P]
+    da = da_ref[0, 0].astype(jnp.float32)        # [Q, 1] log-decay
+    Bm = b_ref[0].astype(jnp.float32)            # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)            # [Q, N]
+
+    Q = x.shape[0]
+    cum = jnp.cumsum(da, axis=0)                 # [Q, 1]
+    # causal decay matrix L[i,j] = exp(cum_i − cum_j) for i ≥ j
+    diff = cum - cum.reshape(1, Q)               # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_intra = jax.lax.dot_general(L * scores, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    state = state_scr[...]                       # [N, P]
+    decay_in = jnp.exp(cum)                      # [Q, 1]
+    y_inter = decay_in * jax.lax.dot_general(
+        Cm, state, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # [Q, P]
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    total = cum[Q - 1]                           # [1]
+    decay_end = jnp.exp(total.reshape(1, 1) - cum)  # [Q, 1]
+    new_state = jax.lax.dot_general(
+        Bm * decay_end, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # [N, P]
+    state_scr[...] = state * jnp.exp(total)[0] + new_state
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        hout_ref[0, 0] = state_scr[...]
+
+
+def ssd_chunk_scan_fwd(xdt, da, B, C, h0, *, chunk, interpret=False):
+    """xdt: [b, S, H, P] (x pre-scaled by dt); da: [b, S, H] (log decay);
+    B, C: [b, S, N]; h0: [b, H, N, P] fp32.
+    → (y [b, S, H, P] fp32, h_final [b, H, N, P] fp32)."""
+    b, S, H, P = xdt.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} % chunk {Q} != 0"
+    nc = S // Q
+
+    # head-major layouts
+    x_t = xdt.transpose(0, 2, 1, 3).astype(jnp.float32)   # [b,H,S,P]
+    da_t = da.transpose(0, 2, 1)[..., None].astype(jnp.float32)  # [b,H,S,1]
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(b, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, H, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((b, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x_t, da_t, Bf, Cf, h0.astype(jnp.float32))
+    return y.transpose(0, 2, 1, 3), hout

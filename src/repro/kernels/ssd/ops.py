@@ -1,0 +1,62 @@
+"""Jit'd public wrapper for the SSD chunk scan, matching the model-side
+``ssd_chunked`` contract, with a recompute VJP through the reference."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunk_scan_fwd
+from .ref import ssd_chunked_ref
+
+
+def _run(xh, dt, a_log, B, C, chunk, interpret, initial_state):
+    b, S, H, P = xh.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:  # ragged tail → reference path (prefill edge case)
+        return ssd_chunked_ref(xh, dt, a_log, B, C, chunk=chunk,
+                               initial_state=initial_state)
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    da = dt * A[None, None, :]                       # [b,S,H]
+    xdt = xh.astype(jnp.float32) * dt[..., None]     # [b,S,H,P]
+    h0 = jnp.zeros((b, H, N, P), jnp.float32) if initial_state is None \
+        else initial_state.transpose(0, 1, 3, 2)     # [b,H,P,N] → [b,H,N,P]
+    y, hout = ssd_chunk_scan_fwd(xdt, da, B, C, h0, chunk=Q,
+                                 interpret=interpret)
+    return y, hout.transpose(0, 1, 3, 2)             # → [b,H,P,N]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd_train(xh, dt, a_log, B, C, chunk, interpret):
+    return _run(xh, dt, a_log, B, C, chunk, interpret, None)
+
+
+def _fwd(xh, dt, a_log, B, C, chunk, interpret):
+    return _run(xh, dt, a_log, B, C, chunk, interpret, None), \
+        (xh, dt, a_log, B, C)
+
+
+def _bwd(chunk, interpret, res, g):
+    xh, dt, a_log, B, C = res
+
+    def f(xh_, dt_, a_log_, B_, C_):
+        return ssd_chunked_ref(xh_, dt_, a_log_, B_, C_, chunk=chunk)
+
+    _, vjp = jax.vjp(f, xh, dt, a_log, B, C)
+    return vjp(g)
+
+
+_ssd_train.defvjp(_fwd, _bwd)
+
+
+def ssd_chunked(xh, dt, a_log, B, C, *, chunk=128, initial_state=None,
+                interpret=False):
+    """Matches repro.models.ssd.ssd_chunked_ref's contract:
+    (y [b,S,H,P], final_state [b,H,P,N])."""
+    if initial_state is None:
+        return _ssd_train(xh, dt, a_log, B, C, chunk, interpret)
+    # stateful path (serving): no gradients needed
+    return _run(xh, dt, a_log, B, C, chunk, interpret, initial_state)

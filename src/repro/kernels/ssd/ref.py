@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: delegates to the model's
+chunked reference implementation (repro.models.ssd.ssd_chunked_ref)."""
+
+from __future__ import annotations
+
+from repro.models.ssd import ssd_chunked_ref  # noqa: F401

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = ("data", "model") — 256 TPU v5e chips.
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips; the "pod"
+axis carries only data parallelism (gradient all-reduce over DCN).
+
+Defined as functions (not module constants) so importing never touches jax
+device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(jax.devices())}; "
+            "the dry-run sets --xla_force_host_platform_device_count=512 "
+            "before importing jax")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_host_mesh():
+    """A trivial 1-device mesh for CPU smoke/integration runs."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+
+
+def hardware_constants():
+    """TPU v5e per-chip roofline constants (targets, not the CPU host)."""
+    return {
+        "peak_flops_bf16": 197e12,   # FLOP/s
+        "hbm_bandwidth": 819e9,      # B/s
+        "ici_link_bandwidth": 50e9,  # B/s per link
+        "hbm_bytes": 16e9,
+    }

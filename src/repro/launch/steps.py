@@ -1,0 +1,203 @@
+"""Step builders shared by the dry-run, the trainer, and the server:
+train_step / prefill_step / decode_step with their sharding trees."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import input_specs
+from repro.models import build_model
+from repro.sharding import rules as R
+from repro.training.optimizer import AdamW
+
+
+def make_train_step(model, optimizer):
+    cfg = model.cfg
+    M = max(cfg.microbatches, 1)
+    adt = jnp.dtype(cfg.dtype)
+
+    def cast_params(params):
+        """Cast matrix weights to the activation dtype once, up front —
+        FSDP weight all-gathers (and the matching grad reductions) then
+        move bf16 instead of f32, halving weight-collective bytes.  1-D
+        params (norm scales, biases) stay f32 for numerics."""
+        return jax.tree.map(
+            lambda p: p.astype(adt)
+            if p.ndim > 1 and p.dtype == jnp.float32 else p, params)
+
+    def grads_of(params, batch):
+        def loss_fn(p, b):
+            return model.loss_fn(cast_params(p), b)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if M == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            # gradient accumulation: scan over microbatches so only one
+            # microbatch's activations are live at a time
+            mb = jax.tree.map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
+                batch)
+
+            def acc(carry, mbatch):
+                gsum, lsum = carry
+                (loss, _), g = grads_of(params, mbatch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: (g / M).astype(jnp.float32), gsum)
+            loss = lsum / M
+            metrics = {}
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, state["opt"], state["params"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def pick_microbatches(cfg, shape, mesh, *, target_bytes=None) -> int:
+    """Choose gradient-accumulation depth so the remat-saved per-layer
+    hidden states (the dominant training activation term) fit the HBM
+    budget: saved ≈ tokens/chip × d_model × 2 B × n_layers."""
+    if target_bytes is None:
+        target_bytes = (2 if cfg.num_experts else 4) * 2**30
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= sizes.get(a, 1)
+    model_size = sizes.get("model", 1)
+    tokens_per_chip = shape.global_batch * shape.seq_len // max(dp, 1)
+    saved = tokens_per_chip * cfg.d_model * 2 * cfg.num_layers
+    if cfg.num_experts:
+        # expert dispatch buffers live per chip at ≈3·K·cf·N_global·D·2/E-shards
+        tokens_global = shape.global_batch * shape.seq_len
+        expert_buf = (3 * cfg.num_experts_per_tok * cfg.moe_capacity_factor
+                      * tokens_global * cfg.d_model * 2 / model_size)
+        saved = max(saved, expert_buf)
+    m = 1
+    while saved / m > target_bytes and m < shape.global_batch // max(dp, 1):
+        m *= 2
+    return m
+
+
+def abstract_train_state(model, optimizer=None):
+    master = optimizer is not None and optimizer.master_weights
+    cfg = model.cfg
+    params = model.abstract_params(dtype=cfg.dtype if master else None)
+    f32 = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params)
+    opt = {"mu": f32, "nu": f32,
+           "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    if master:
+        opt["master"] = f32
+    return {
+        "params": params,
+        "opt": opt,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def train_state_pspecs(rls, model, optimizer=None):
+    pspec = R.params_pspecs(rls, model)
+    mspec = R.opt_state_pspecs(rls, model)
+    opt = {"mu": mspec, "nu": mspec, "count": P()}
+    if optimizer is not None and optimizer.master_weights:
+        opt["master"] = mspec
+    return {
+        "params": pspec,
+        "opt": opt,
+        "step": P(),
+    }
+
+
+def init_train_state(model, optimizer, rng):
+    params = model.init(rng)
+    opt = optimizer.init(params)  # master copy (if any) snapshots f32
+    if optimizer.master_weights:
+        params = jax.tree.map(
+            lambda p: p.astype(model.cfg.dtype), params)
+    return {"params": params, "opt": opt,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers (used by dryrun + benchmarks/roofline)
+
+
+def _named(rls, tree):
+    return jax.tree.map(lambda s: NamedSharding(rls.mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(cfg, shape, mesh, *, optimizer=None):
+    """Lower one (arch × shape) cell on `mesh`; returns the jax Lowered."""
+    model = build_model(cfg)
+    rls = R.make_rules(mesh, cfg)
+    specs = input_specs(cfg, shape)
+    batch_ps = R.batch_pspecs(rls, specs)
+
+    with R.use_rules(rls):
+        if shape.kind == "train":
+            if cfg.microbatches == 1:
+                m = pick_microbatches(cfg, shape, mesh)
+                if m > 1:
+                    cfg = cfg.replace(microbatches=m)
+                    model = build_model(cfg)
+            optimizer = optimizer or AdamW(
+                master_weights=(cfg.param_strategy == "zero2_master"))
+            step = make_train_step(model, optimizer)
+            state = abstract_train_state(model, optimizer)
+            state_ps = train_state_pspecs(rls, model, optimizer)
+            lowered = jax.jit(
+                step,
+                in_shardings=(_named(rls, state_ps), _named(rls, batch_ps)),
+                out_shardings=(_named(rls, state_ps), None),
+                donate_argnums=(0,),
+            ).lower(state, specs)
+            return lowered, model, rls
+
+        params = model.abstract_params(dtype=cfg.serve_param_dtype or None)
+        params_ps = R.params_pspecs(rls, model)
+        if shape.kind == "prefill":
+            def prefill_step(params, batch):
+                return model.prefill(params, batch, capacity=shape.seq_len)
+
+            out_cache = model.init_cache(shape.global_batch, shape.seq_len,
+                                         abstract=True)
+            out_cache_ps = R.cache_pspecs(rls, out_cache)
+            lowered = jax.jit(
+                prefill_step,
+                in_shardings=(_named(rls, params_ps), _named(rls, batch_ps)),
+                out_shardings=(None, _named(rls, out_cache_ps)),
+            ).lower(params, specs)
+            return lowered, model, rls
+
+        # decode: one new token against a seq_len cache
+        cache = model.init_cache(shape.global_batch, shape.seq_len,
+                                 abstract=True)
+        cache_ps = R.cache_pspecs(rls, cache)
+
+        def decode_step(params, cache, tokens, positions):
+            return model.decode_step(params, cache, tokens, positions)
+
+        lowered = jax.jit(
+            decode_step,
+            in_shardings=(_named(rls, params_ps), _named(rls, cache_ps),
+                          _named(rls, R.batch_pspecs(rls,
+                                                     {"t": specs["tokens"]})["t"]),
+                          _named(rls, R.batch_pspecs(rls,
+                                                     {"p": specs["positions"]})["p"])),
+            out_shardings=(None, _named(rls, cache_ps)),
+            donate_argnums=(1,),
+        ).lower(params, cache, specs["tokens"], specs["positions"])
+        return lowered, model, rls

@@ -1,0 +1,61 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch qwen3-14b --smoke --steps 50
+
+``--smoke`` runs the reduced config on the host (CPU-runnable end-to-end);
+without it, the full config trains on the production mesh (requires real
+TPU devices — on this container use the dry-run instead).  The driver is
+the fault-tolerant restart loop (repro.training.train_loop): atomic
+checkpoints, deterministic resumable data, optional failure injection for
+drills (``--fail-at-step``).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config on the host")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--fail-at-step", type=int, default=-1,
+                    help="failure-injection drill")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.training.data import LMDataset
+    from repro.training.optimizer import AdamW, cosine_schedule
+    from repro.training.train_loop import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    print(f"arch={cfg.name} family={cfg.family} "
+          f"params={model.num_params()/1e6:.1f}M (config: "
+          f"{'reduced smoke' if args.smoke else 'full'})")
+
+    dataset = LMDataset(vocab_size=cfg.vocab_size, batch_size=args.batch,
+                        seq_len=args.seq)
+    optimizer = AdamW(learning_rate=cosine_schedule(
+        args.lr, warmup_steps=10, total_steps=args.steps))
+    tcfg = TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir,
+                       fail_at_step=args.fail_at_step)
+    state, history = train(model, tcfg, dataset=dataset,
+                           optimizer=optimizer)
+    print(f"done: final loss {history[-1][1]:.4f} "
+          f"(first {history[0][1]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen convention) and GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import PSpec, shard_hint
+
+
+def mlp_schema(cfg, *, gated=True) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    if gated:
+        return {
+            "w_gate": PSpec((D, F), ("embed", "ffn")),
+            "w_up": PSpec((D, F), ("embed", "ffn")),
+            "w_down": PSpec((F, D), ("ffn", "embed")),
+        }
+    return {
+        "w_up": PSpec((D, F), ("embed", "ffn")),
+        "b_up": PSpec((F,), ("ffn",), "zeros"),
+        "w_down": PSpec((F, D), ("ffn", "embed")),
+        "b_down": PSpec((D,), ("embed",), "zeros"),
+    }
+
+
+def apply_mlp(cfg, p, x, *, gated=True):
+    if gated:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+        h = shard_hint(h, "act_ffn")
+        return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype)) \
+        + p["b_up"].astype(x.dtype)
+    h = jax.nn.gelu(h, approximate=False)
+    h = shard_hint(h, "act_ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype)) \
+        + p["b_down"].astype(x.dtype)

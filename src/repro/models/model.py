@@ -1,0 +1,85 @@
+"""Model facade: one object per architecture config, dispatching to the
+family implementation (lm.py / encdec.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .common import abstract_tree, axes_tree, init_tree
+
+
+class Model:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- parameters -----------------------------------------------------------
+
+    def schema(self) -> dict:
+        if self.cfg.family == "enc_dec":
+            return encdec.encdec_schema(self.cfg)
+        return lm.lm_schema(self.cfg)
+
+    def init(self, rng):
+        return init_tree(rng, self.schema(), jnp.dtype(self.cfg.param_dtype))
+
+    def abstract_params(self, dtype=None):
+        return abstract_tree(self.schema(), dtype or self.cfg.param_dtype)
+
+    def param_logical_axes(self):
+        return axes_tree(self.schema())
+
+    def num_params(self) -> int:
+        total = 0
+        for leaf in jax.tree.leaves(self.abstract_params()):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            total += n
+        return total
+
+    # -- compute ---------------------------------------------------------------
+
+    def forward(self, params, batch):
+        """→ (logits [B,S,V], aux_loss)."""
+        if self.cfg.family == "enc_dec":
+            return encdec.forward(self.cfg, params, batch)
+        return lm.forward(self.cfg, params, batch)
+
+    def loss_fn(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        targets = batch["targets"]
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None],
+                                   axis=-1)[..., 0]
+        nll = (logz - gold).mean()
+        zloss = 1e-4 * jnp.square(logz).mean()
+        loss = nll + zloss + 1e-2 * aux
+        return loss, {"nll": nll, "aux": aux, "zloss": zloss}
+
+    # -- serving ----------------------------------------------------------------
+
+    def init_cache(self, batch, capacity, *, abstract=False):
+        if self.cfg.family == "enc_dec":
+            return encdec.init_cache(self.cfg, batch, capacity,
+                                     abstract=abstract)
+        return lm.init_cache(self.cfg, batch, capacity, abstract=abstract)
+
+    def prefill(self, params, batch, capacity):
+        """→ (last_logits [B,V], cache)."""
+        if self.cfg.family == "enc_dec":
+            return encdec.prefill(self.cfg, params, batch, capacity)
+        return lm.prefill(self.cfg, params, batch, capacity)
+
+    def decode_step(self, params, cache, tokens, positions):
+        """tokens [B,1], positions [B] → (logits [B,V], new_cache)."""
+        if self.cfg.family == "enc_dec":
+            return encdec.decode_step(self.cfg, params, cache, tokens,
+                                      positions)
+        return lm.decode_step(self.cfg, params, cache, tokens, positions)
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

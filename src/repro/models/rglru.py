@@ -1,0 +1,128 @@
+"""RecurrentGemma / Griffin recurrent block: gated linear recurrence
+(RG-LRU) with a short causal depthwise conv and a GeLU gate branch
+[arXiv:2402.19427].
+
+The diagonal recurrence h_t = a_t·h_{t-1} + √(1−a_t²)·(i_t⊙x_t) is
+width-parallel (embarrassingly shardable over the lru dimension) and
+sequence-parallelizable with an associative scan; the TPU kernel version
+lives in repro.kernels.rglru.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import PSpec, shard_hint
+
+_C = 8.0  # Griffin's recurrence-gate temperature
+
+
+def rglru_schema(cfg) -> dict:
+    D, W = cfg.d_model, cfg.lru_width
+    K = cfg.conv_width
+    return {
+        "w_in": PSpec((D, W), ("embed", "lru")),
+        "w_gate_branch": PSpec((D, W), ("embed", "lru")),
+        "conv_w": PSpec((K, W), ("conv", "lru"), "normal", (0,)),
+        "conv_b": PSpec((W,), ("lru",), "zeros"),
+        # RG-LRU gates
+        "w_a": PSpec((W, W), ("lru", "lru_in")),
+        "b_a": PSpec((W,), ("lru",), "zeros"),
+        "w_x": PSpec((W, W), ("lru", "lru_in")),
+        "b_x": PSpec((W,), ("lru",), "zeros"),
+        "lambda_p": PSpec((W,), ("lru",), "ones"),
+        "w_out": PSpec((W, D), ("lru", "embed")),
+    }
+
+
+def _gates(p, x):
+    """x: [..., W] → (log_a, gated_input) in fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32)
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32)
+                       + p["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda_p"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, beta * (i * xf)
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv, width K: y_t = Σ_k w_k · x_{t-k}.  x [B,S,W]."""
+    K = w.shape[0]
+    y = x * w[K - 1].astype(x.dtype)
+    for k in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, :-k or None][:, :x.shape[1]]
+        y = y + shifted * w[K - 1 - k].astype(x.dtype)
+    return y + b.astype(x.dtype)
+
+
+def lru_scan(a, bx):
+    """Associative scan of h_t = a_t·h_{t-1} + bx_t over axis 1 (fp32)."""
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_s, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def apply_rglru(cfg, p, x, *, h0=None, conv_state=None, return_state=False):
+    """Full-sequence Griffin recurrent block.  x: [B,S,D]."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["w_gate_branch"].astype(x.dtype)))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in"].astype(x.dtype))
+    u = shard_hint(u, "act_lru")
+    u = causal_conv(u, p["conv_w"], p["conv_b"])
+    a, bx = _gates(p, u)
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    if cfg.attention_impl.startswith("pallas"):
+        from repro.kernels.rglru import ops as lru_ops
+        h = lru_ops.rglru_scan(
+            a, bx, interpret=(cfg.attention_impl == "pallas_interpret"))
+    else:
+        h = lru_scan(a, bx)
+    y = (h.astype(x.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(x.dtype))
+    if return_state:
+        K = p["conv_w"].shape[0]
+        new_conv = jnp.einsum("bsd,dw->bsw",
+                              x[:, -(K - 1):], p["w_in"].astype(x.dtype))
+        return out, {"h": h[:, -1], "conv": new_conv}
+    return out
+
+
+def init_rglru_cache(cfg, batch, dtype):
+    W, K = cfg.lru_width, cfg.conv_width
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, W), dtype),
+    }
+
+
+def abstract_rglru_cache(cfg, batch, dtype):
+    W, K = cfg.lru_width, cfg.conv_width
+    return {
+        "h": jax.ShapeDtypeStruct((batch, W), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, K - 1, W), jnp.dtype(dtype)),
+    }
+
+
+def decode_rglru(cfg, p, x, cache):
+    """One-token step.  x: [B,1,D]; cache {h [B,W] fp32, conv [B,K-1,W]}."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["w_gate_branch"].astype(x.dtype)))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in"].astype(x.dtype))  # [B,1,W]
+    K = p["conv_w"].shape[0]
+    hist = jnp.concatenate([cache["conv"], u], axis=1)  # [B,K,W]
+    w = p["conv_w"].astype(u.dtype)
+    conv_out = jnp.einsum("bkw,kw->bw", hist, w) + p["conv_b"].astype(u.dtype)
+    a, bx = _gates(p, conv_out[:, None])
+    h = a[:, 0] * cache["h"] + bx[:, 0]
+    y = h.astype(x.dtype)[:, None] * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(x.dtype))
+    return out, {"h": h, "conv": hist[:, 1:]}

@@ -1,0 +1,228 @@
+"""Mamba-2 block with the SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060].
+
+Training/prefill uses the chunked form: quadratic attention-like compute
+inside chunks (MXU-friendly matmuls) + a linear recurrence over chunk
+states.  Decode is the O(1)-state recurrent step.  The TPU kernel version
+of the chunk scan lives in repro.kernels.ssd.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import PSpec, shard_hint
+
+
+def ssd_schema(cfg) -> dict:
+    D = cfg.d_model
+    DI = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    K = cfg.conv_width
+    conv_dim = DI + 2 * N
+    return {
+        # fused input projection → [z (DI), x (DI), B (N), C (N), dt (H)]
+        "w_in": PSpec((D, 2 * DI + 2 * N + H), ("embed", "inner_fused")),
+        "conv_w": PSpec((K, conv_dim), ("conv", "inner"), "normal", (0,)),
+        "conv_b": PSpec((conv_dim,), ("inner",), "zeros"),
+        "a_log": PSpec((H,), ("ssm_heads",), "ones"),
+        "dt_bias": PSpec((H,), ("ssm_heads",), "zeros"),
+        "d_skip": PSpec((H,), ("ssm_heads",), "ones"),
+        "norm_scale": PSpec((DI,), ("inner",), "zeros"),
+        "w_out": PSpec((DI, D), ("inner", "embed")),
+    }
+
+
+def _split_proj(cfg, proj):
+    DI, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :DI]
+    x = proj[..., DI:2 * DI]
+    B = proj[..., 2 * DI:2 * DI + N]
+    C = proj[..., 2 * DI + N:2 * DI + 2 * N]
+    dt = proj[..., 2 * DI + 2 * N:]
+    return z, x, B, C, dt
+
+
+def _conv(x, w, b):
+    K = w.shape[0]
+    y = x * w[K - 1].astype(x.dtype)
+    for k in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, :x.shape[1]]
+        y = y + shifted * w[K - 1 - k].astype(x.dtype)
+    return jax.nn.silu(y + b.astype(x.dtype))
+
+
+def _segsum(logs):
+    """logs: [..., Q] → cumulative decay matrix [..., Q, Q]:
+    out[i,j] = Σ_{j<k<=i} logs[k]  (−inf above diagonal)."""
+    Q = logs.shape[-1]
+    cs = jnp.cumsum(logs, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a_log, B, C, *, chunk, initial_state=None,
+                impl="xla"):
+    """SSD core.  xh: [B,S,H,P]; dt: [B,S,H] (post-softplus, fp32);
+    B, C: [B,S,N]; a_log: [H] (A = −exp(a_log)).
+    Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    if impl.startswith("pallas"):
+        from repro.kernels.ssd import ops as ssd_ops
+        return ssd_ops.ssd_chunked(xh, dt, a_log, B, C, chunk=chunk,
+                                   initial_state=initial_state,
+                                   interpret=(impl == "pallas_interpret"))
+    return ssd_chunked_ref(xh, dt, a_log, B, C, chunk=chunk,
+                           initial_state=initial_state)
+
+
+def ssd_chunked_ref(xh, dt, a_log, B, C, *, chunk, initial_state=None):
+    b, S, H, P = xh.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        # pad to a chunk multiple: dt=0 ⇒ identity decay, zero contribution
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        y, state = ssd_chunked_ref(xh, dt, a_log, B, C, chunk=Q,
+                                   initial_state=initial_state)
+        return y[:, :S], state
+    nc = S // Q
+
+    A = -jnp.exp(a_log.astype(jnp.float32))            # [H]
+    dA = dt * A[None, None, :]                          # [b,S,H] log-decay
+    x_ = (xh * dt[..., None].astype(xh.dtype)).reshape(b, nc, Q, H, P)
+    dA = dA.reshape(b, nc, Q, H)
+    Bc = B.reshape(b, nc, Q, N)
+    Cc = C.reshape(b, nc, Q, N)
+
+    # intra-chunk (quadratic, causal)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))      # [b,nc,H,Q,Q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)      # [b,nc,Q,Q]
+    y_intra = jnp.einsum("bchqk,bcqk,bckhp->bcqhp",
+                         L, scores.astype(jnp.float32),
+                         x_.astype(jnp.float32))
+
+    # chunk states: decay-to-end weighted outer products B⊗x
+    cum = jnp.cumsum(dA, axis=2)                        # [b,nc,Q,H]
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)        # [b,nc,Q,H]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        Bc.astype(jnp.float32), decay_end,
+                        x_.astype(jnp.float32))         # [b,nc,H,P,N]
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # [b,nc,H]
+
+    def step(h, inp):
+        s, d = inp
+        h = h * d[..., None, None] + s
+        return h, h
+
+    h0 = initial_state if initial_state is not None else \
+        jnp.zeros((b, H, P, N), jnp.float32)
+    hs_final, hs = jax.lax.scan(
+        step, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    # state *entering* each chunk
+    h_in = jnp.concatenate([h0[None], hs[:-1]], axis=0).transpose(1, 0, 2, 3, 4)
+
+    # inter-chunk contribution: C_t · decay-from-start · h_in
+    decay_in = jnp.exp(cum)                             # [b,nc,Q,H]
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cc.astype(jnp.float32), decay_in, h_in)
+
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y, hs_final
+
+
+def apply_ssd(cfg, p, x, *, cache=None, return_state=False):
+    """Full-sequence Mamba-2 block.  x: [B,S,D]."""
+    b, S, D = x.shape
+    DI, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_headdim
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype))
+    z, xi, B_, C_, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xi, B_, C_], axis=-1)
+    conv_out = _conv(conv_in, p["conv_w"], p["conv_b"])
+    xi = conv_out[..., :DI]
+    B_ = conv_out[..., DI:DI + N]
+    C_ = conv_out[..., DI + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    xh = xi.reshape(b, S, H, P)
+    xh = shard_hint(xh, "act_ssm")
+    y, state = ssd_chunked(xh, dt, p["a_log"], B_, C_, chunk=cfg.ssm_chunk,
+                           impl=cfg.attention_impl)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[
+        None, None, :, None]
+    y = y.reshape(b, S, DI).astype(x.dtype)
+    # gated RMSNorm (mamba2 norm-before-out)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1.0 + p["norm_scale"].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(x.dtype))
+    if return_state:
+        # conv state holds the *pre-conv* channel inputs of the last K-1 steps
+        K = p["conv_w"].shape[0]
+        pre = jnp.concatenate([
+            proj[..., DI:2 * DI], proj[..., 2 * DI:2 * DI + 2 * N]],
+            axis=-1)[:, -(K - 1):]
+        return out, {"ssm": state, "conv": pre}
+    return out
+
+
+def init_ssd_cache(cfg, batch, dtype):
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    K = cfg.conv_width
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, DI + 2 * N), dtype),
+    }
+
+
+def abstract_ssd_cache(cfg, batch, dtype):
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    K = cfg.conv_width
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, H, P, N), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, K - 1, DI + 2 * N),
+                                     jnp.dtype(dtype)),
+    }
+
+
+def decode_ssd(cfg, p, x, cache):
+    """One-token Mamba-2 step.  x: [B,1,D]."""
+    b = x.shape[0]
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype))
+    z, xi, B_, C_, dt = _split_proj(cfg, proj)
+    pre = jnp.concatenate([xi, B_, C_], axis=-1)        # [B,1,conv_dim]
+    hist = jnp.concatenate([cache["conv"], pre], axis=1)  # [B,K,conv_dim]
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w)
+                           + p["conv_b"].astype(x.dtype))
+    xi = conv_out[:, :DI]
+    B_ = conv_out[:, DI:DI + N]
+    C_ = conv_out[:, DI + N:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))  # [B,H]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dA = jnp.exp(dt1 * A[None])                          # [B,H]
+    xh = xi.reshape(b, H, P).astype(jnp.float32)
+    dBx = jnp.einsum("bn,bh,bhp->bhpn", B_.astype(jnp.float32), dt1, xh)
+    h = cache["ssm"] * dA[..., None, None] + dBx         # [B,H,P,N]
+    y = jnp.einsum("bn,bhpn->bhp", C_.astype(jnp.float32), h)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, DI).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1.0 + p["norm_scale"].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(x.dtype))
+    return out, {"ssm": h, "conv": hist[:, 1:]}

@@ -1,0 +1,49 @@
+"""LLM backend bridging PopPy's AI component library to the local JAX
+serving engine: `@unordered` llm() calls become engine requests that share
+continuous-batching decode steps.  Includes hedged-request straggler
+mitigation."""
+
+from __future__ import annotations
+
+import asyncio
+
+from repro.core.ai import Backend
+from repro.serving.tokenizer import ByteTokenizer
+
+
+class LocalEngineBackend(Backend):
+    def __init__(self, engine, tokenizer=None, *, hedge_timeout=None):
+        self.engine = engine
+        self.tok = tokenizer or ByteTokenizer(engine.cfg.vocab_size)
+        self.hedge_timeout = hedge_timeout
+        self.hedges = 0
+
+    async def generate(self, prompt, *, max_tokens, temperature, stop):
+        toks = self.tok.encode(prompt)
+        coro = self.engine.generate(toks, max_new_tokens=max_tokens,
+                                    temperature=temperature)
+        if self.hedge_timeout is None:
+            out = await coro
+        else:
+            # straggler mitigation: if the request exceeds the hedge
+            # deadline, race a duplicate (deterministic decode → same
+            # answer, whichever engine slot finishes first wins)
+            task = asyncio.ensure_future(coro)
+            try:
+                out = await asyncio.wait_for(asyncio.shield(task),
+                                             self.hedge_timeout)
+            except asyncio.TimeoutError:
+                self.hedges += 1
+                task2 = asyncio.ensure_future(self.engine.generate(
+                    toks, max_new_tokens=max_tokens,
+                    temperature=temperature))
+                done, pending = await asyncio.wait(
+                    {task, task2}, return_when=asyncio.FIRST_COMPLETED)
+                out = done.pop().result()
+                for p in pending:
+                    p.cancel()
+        return self.tok.decode(out)
+
+    async def embed(self, text):
+        toks = self.tok.encode(text)[:8]
+        return tuple(float(t) / self.tok.vocab_size for t in toks)

@@ -1,0 +1,215 @@
+"""Continuous-batching inference engine.
+
+Slot-based scheduler in the vLLM/Orca style, adapted to JAX static shapes:
+a fixed decode batch of ``max_slots`` sequences steps together through a
+jitted ``decode_step``; free slots admit queued requests via per-request
+``prefill`` whose KV is written into the slot.  Everything is asyncio —
+PopPy's burst of parallel `@unordered` LLM calls lands here and shares
+decode batches (the batching co-design of DESIGN.md §3).
+
+Straggler mitigation: per-request deadline + hedged retry at the client
+(repro.core.ai.hedged); engine-side admission keeps the batch full so one
+slow request never blocks admission (iteration-level scheduling).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampler import sample_tokens
+
+
+@dataclass
+class Request:
+    prompt_tokens: list
+    max_new_tokens: int
+    temperature: float = 0.0
+    done: asyncio.Future | None = None
+    out_tokens: list = field(default_factory=list)
+    slot: int = -1
+    submitted_at: float = 0.0
+    started_at: float = 0.0
+    finished_at: float = 0.0
+
+
+class ServingEngine:
+    """Continuous batching over a repro.models Model on a (usually 1-device)
+    mesh.  Designed so the same scheduler drives the 256-chip production
+    mesh — the jitted steps are the ones the dry-run lowers."""
+
+    def __init__(self, model, params, *, max_slots=8, max_len=256,
+                 eos_token=None, step_sleep=0.0):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.eos_token = eos_token
+        self.step_sleep = step_sleep
+        self.queue: asyncio.Queue[Request] = asyncio.Queue()
+        self.active: dict[int, Request] = {}
+        self.free_slots = list(range(max_slots))
+        self._task = None
+        self._stop = False
+        self.steps = 0
+        self.decode_tokens = 0
+        self.batch_occupancy: list[int] = []
+
+        self.cache = model.init_cache(max_slots, max_len)
+        self.positions = jnp.zeros((max_slots,), jnp.int32)
+        self.cur_tokens = jnp.zeros((max_slots, 1), jnp.int32)
+        self.live = np.zeros((max_slots,), bool)
+        self._rng = jax.random.PRNGKey(0)
+
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, capacity=max_len))
+
+    # -- client API -----------------------------------------------------------
+
+    async def generate(self, prompt_tokens, *, max_new_tokens=32,
+                       temperature=0.0) -> list:
+        req = Request(list(prompt_tokens), max_new_tokens, temperature,
+                      done=asyncio.get_running_loop().create_future(),
+                      submitted_at=time.monotonic())
+        await self.queue.put(req)
+        self.ensure_running()
+        return await req.done
+
+    def ensure_running(self):
+        if self._task is None or self._task.done():
+            self._stop = False
+            self._task = asyncio.get_running_loop().create_task(
+                self._loop())
+            self._task.add_done_callback(self._on_loop_done)
+
+    def _on_loop_done(self, task):
+        if task.cancelled():
+            return
+        exc = task.exception()
+        if exc is not None:
+            # surface scheduler failures to every waiting client
+            for req in list(self.active.values()):
+                if req.done and not req.done.done():
+                    req.done.set_exception(exc)
+            while not self.queue.empty():
+                req = self.queue.get_nowait()
+                if req.done and not req.done.done():
+                    req.done.set_exception(exc)
+
+    async def stop(self):
+        self._stop = True
+        if self._task is not None:
+            await self._task
+
+    # -- scheduler -------------------------------------------------------------
+
+    def _admit(self, req: Request):
+        slot = self.free_slots.pop()
+        req.slot = slot
+        req.started_at = time.monotonic()
+        prompt = jnp.asarray([req.prompt_tokens], jnp.int32)
+        logits, pcache = self._prefill(self.params, {"tokens": prompt})
+        # splice the prefilled cache into the slot
+        self.cache = jax.tree.map(
+            lambda full, new: _write_slot_cache(full, new, slot),
+            self.cache, pcache)
+        tok = self._sample(logits, req)
+        req.out_tokens.append(int(tok[0]))
+        self.cur_tokens = self.cur_tokens.at[slot, 0].set(tok[0])
+        self.positions = self.positions.at[slot].set(len(req.prompt_tokens))
+        self.live[slot] = True
+        self.active[slot] = req
+
+    def _sample(self, logits, req):
+        if req.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._rng, k = jax.random.split(self._rng)
+        return sample_tokens(k, logits, temperature=req.temperature)
+
+    def _finish(self, slot):
+        req = self.active.pop(slot)
+        req.finished_at = time.monotonic()
+        self.live[slot] = False
+        self.free_slots.append(slot)
+        if not req.done.done():
+            req.done.set_result(req.out_tokens)
+
+    def _retire_finished(self):
+        for slot in list(self.active):
+            req = self.active[slot]
+            last = req.out_tokens[-1] if req.out_tokens else None
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or (self.eos_token is not None
+                        and last == self.eos_token)
+                    or int(self.positions[slot]) >= self.max_len - 1):
+                self._finish(slot)
+
+    async def _loop(self):
+        idle_rounds = 0
+        while not self._stop:
+            # admit as many queued requests as there are free slots
+            while self.free_slots and not self.queue.empty():
+                self._admit(self.queue.get_nowait())
+            if not self.active:
+                idle_rounds += 1
+                if idle_rounds > 200:
+                    return  # quiesce; restarted on next request
+                await asyncio.sleep(0.005)
+                continue
+            idle_rounds = 0
+
+            logits, self.cache = self._decode(
+                self.params, self.cache, self.cur_tokens, self.positions)
+            self.steps += 1
+            self.batch_occupancy.append(len(self.active))
+            next_all = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            sampled = {}
+            for slot, req in self.active.items():
+                if req.temperature > 0.0:
+                    self._rng, k = jax.random.split(self._rng)
+                    sampled[slot] = int(sample_tokens(
+                        k, logits[slot:slot + 1],
+                        temperature=req.temperature)[0])
+            nxt = np.asarray(next_all)
+            new_cur = np.array(self.cur_tokens)   # writable copies
+            new_pos = np.array(self.positions)
+            for slot, req in self.active.items():
+                tok = sampled.get(slot, int(nxt[slot]))
+                req.out_tokens.append(tok)
+                self.decode_tokens += 1
+                new_cur[slot, 0] = tok
+                new_pos[slot] += 1
+            self.cur_tokens = jnp.asarray(new_cur)
+            self.positions = jnp.asarray(new_pos)
+            self._retire_finished()
+            if self.step_sleep:
+                await asyncio.sleep(self.step_sleep)
+            else:
+                await asyncio.sleep(0)  # yield to admit new requests
+
+
+def _write_slot_cache(full, new, slot):
+    """full: [L?, max_slots, ...]; new: [L?, 1, ...] — write batch slot.
+
+    Works for both stacked-layer leading dims and flat caches because the
+    batch dim is identified from `new` having size 1 there."""
+    # find the batch axis: the axis where new has 1 and full has max_slots
+    for ax in range(new.ndim):
+        if new.shape[ax] == 1 and full.shape[ax] != new.shape[ax]:
+            idx = [slice(None)] * full.ndim
+            idx[ax] = slice(slot, slot + 1)
+            if new.shape[ax + 1:] != full.shape[ax + 1:]:
+                # capacity axis may also differ (prompt < max_len): pad
+                pads = [(0, f - n) if i > ax else (0, 0)
+                        for i, (f, n) in enumerate(zip(full.shape,
+                                                       new.shape))]
+                new = jnp.pad(new, pads)
+            return full.at[tuple(idx)].set(new.astype(full.dtype))
+    return full  # fully matching leaf (e.g. shared cross-attention memory)

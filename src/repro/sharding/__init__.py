@@ -1,0 +1,13 @@
+from .rules import (  # noqa: F401
+    ShardingRules,
+    act_pspec,
+    active_rules,
+    batch_pspecs,
+    cache_pspecs,
+    constrain_activation,
+    make_rules,
+    named,
+    param_pspec,
+    params_pspecs,
+    use_rules,
+)

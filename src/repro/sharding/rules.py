@@ -1,0 +1,337 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Mesh axes: single-pod ``("data","model")`` = (16,16); multi-pod
+``("pod","data","model")`` = (2,16,16) — ``pod`` is pure data parallelism
+(only gradient reductions cross it).
+
+Two tensor-parallel strategies, chosen per architecture (``auto``):
+
+* ``heads``   — attention heads sharded over ``model`` (classic Megatron
+  attention).  Used when num_heads divides the model-axis size; KV heads
+  shard too when divisible, else replicate (GQA kv=8 on 16-way TP).
+* ``ulysses`` — q/k/v activations shard the *sequence* over ``model``
+  (DeepSpeed-Ulysses-style): works for any head count (40, 56, …); weights
+  still shard their fused head dim.  KV is gathered per chip.
+
+MLP/vocab/expert dims always shard over ``model``; the remaining weight dim
+shards over ``data`` (FSDP/ZeRO-3: gather on use, reduce-scatter grads).
+Any non-divisible (dim, axis) pair falls back to replication for that dim —
+the dry-run proves every (arch × shape × mesh) cell compiles.
+"""
+
+from __future__ import annotations
+
+import contextvars
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class ShardingRules:
+    mesh: jax.sharding.Mesh
+    tp_strategy: str            # heads | ulysses
+    param_rules: dict
+    act_rules: dict
+
+    @property
+    def dp_axes(self):
+        names = self.mesh.axis_names
+        return tuple(a for a in ("pod", "data") if a in names)
+
+
+_active: contextvars.ContextVar[ShardingRules | None] = \
+    contextvars.ContextVar("sharding_rules", default=None)
+
+
+def _dp(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_rules(mesh, cfg) -> ShardingRules:
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    strategy = cfg.tp_strategy
+    if strategy == "auto":
+        heads_ok = (cfg.num_heads or 0) % model_size == 0 and cfg.num_heads
+        # ulysses_sp (sequence-parallel residual) measured strictly better
+        # than plain ulysses (§Perf cell B: 24.1 s → 16.6 s bound)
+        strategy = "heads" if heads_ok or cfg.family == "ssm" \
+            else "ulysses_sp"
+    dp = _dp(mesh)
+
+    # ZeRO-2: weights replicate over the data axis (TP sharding over model
+    # retained) so microbatched steps don't re-gather weights per
+    # microbatch; only optimizer moments shard over data
+    # (opt_state_pspecs below always uses the fsdp layout for moments).
+    wdata = ("data",) if cfg.param_strategy not in (
+        "zero2", "zero2_master") else None
+    param_rules = {
+        "vocab": ("model",),
+        "embed": wdata,
+        "ffn": ("model",),
+        "heads": ("model",) if strategy == "heads" else None,
+        "kv_heads": ("model",) if strategy == "heads" else None,
+        "head_dim": None if strategy == "heads" else ("model",),
+        "experts": ("model",),
+        "moe_ffn": None,
+        "experts_router": None,
+        "lru": ("model",),
+        "lru_in": wdata,
+        "inner": ("model",),
+        "inner_fused": ("model",),
+        "ssm_heads": None,
+        "conv": None,
+        "layers": None,
+    }
+
+    # expert buffers [E, C, D]: experts over model (EP); sharding C over dp
+    # as well was measured to make GSPMD thrash reshards around the
+    # scatter/gather dispatch (129 GiB, 200 GiB collectives) — keep C local
+    if strategy == "heads":
+        act_rules = {
+            "act_hidden": (dp, None, None),
+            "act_qkv": (dp, None, "model", None),
+            "act_kv": (dp, None, "model", None),
+            "act_ffn": (dp, None, "model"),
+            "act_logits": (dp, None, "model"),
+            "act_expert": ("model", None, None),
+            "act_expert_ffn": ("model", None, None),
+            "act_moe_group": (dp, None, None),
+            "act_expert_grouped": (dp, "model", None, None),
+            "act_lru": (dp, None, "model"),
+            "act_ssm": (dp, None, "model", None),
+        }
+    elif strategy == "heads_sp":
+        # heads-sharded attention + sequence-parallel residual stream
+        act_rules = {
+            "act_hidden": (dp, "model", None),
+            "act_qkv": (dp, None, "model", None),
+            "act_kv": (dp, None, "model", None),
+            "act_ffn": (dp, None, "model"),
+            # logits stay vocab-sharded: seq-sharding them would fall back
+            # to None at decode (seq=1) and replicate the whole lm_head
+            "act_logits": (dp, None, "model"),
+            "act_expert": ("model", None, None),
+            "act_expert_ffn": ("model", None, None),
+            "act_moe_group": (dp, None, None),
+            "act_expert_grouped": (dp, "model", None, None),
+            "act_lru": (dp, None, "model"),
+            "act_ssm": (dp, None, "model", None),
+        }
+    elif strategy == "ulysses":  # sequence over model inside attention
+        act_rules = {
+            "act_hidden": (dp, None, None),
+            "act_qkv": (dp, "model", None, None),
+            "act_kv": (dp, None, None, None),
+            "act_ffn": (dp, None, "model"),
+            "act_logits": (dp, None, "model"),
+            "act_expert": ("model", None, None),
+            "act_expert_ffn": ("model", None, None),
+            "act_moe_group": (dp, None, None),
+            "act_expert_grouped": (dp, "model", None, None),
+            "act_lru": (dp, None, "model"),
+            "act_ssm": (dp, None, "model", None),
+        }
+    else:  # ulysses_sp: + Megatron-style sequence parallelism — the
+        # residual stream stays sequence-sharded over `model` between
+        # layers, so norms/elementwise are local and boundary collectives
+        # move bf16 seq-shards instead of re-gathering the full hidden
+        act_rules = {
+            "act_hidden": (dp, "model", None),
+            "act_qkv": (dp, "model", None, None),
+            "act_kv": (dp, None, None, None),
+            "act_ffn": (dp, "model", None),
+            # vocab-sharded (see heads_sp note)
+            "act_logits": (dp, None, "model"),
+            "act_expert": ("model", None, None),
+            "act_expert_ffn": ("model", None, None),
+            "act_lru": (dp, "model", None),
+            "act_ssm": (dp, "model", None, None),
+        }
+    return ShardingRules(mesh, strategy, param_rules, act_rules)
+
+
+class use_rules:
+    def __init__(self, rules: ShardingRules | None):
+        self.rules = rules
+
+    def __enter__(self):
+        self._tok = _active.set(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _active.reset(self._tok)
+        return False
+
+
+def active_rules() -> ShardingRules | None:
+    return _active.get()
+
+
+# ---------------------------------------------------------------------------
+# resolution with divisibility fallback
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _fit(dim_size, axes, sizes):
+    """Return axes if dim_size divides their product, else None."""
+    if axes is None:
+        return None
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    total = 1
+    for a in axes:
+        if a not in sizes:
+            return None
+        total *= sizes[a]
+    if dim_size % total != 0 or dim_size < total:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def param_pspec(rules: ShardingRules, logical_axes, shape) -> P:
+    sizes = _axis_sizes(rules.mesh)
+    used = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        axes = rules.param_rules.get(name)
+        fit = _fit(dim, axes, sizes)
+        if fit is None:
+            out.append(None)
+            continue
+        flat = (fit,) if isinstance(fit, str) else fit
+        if any(a in used for a in flat):
+            out.append(None)
+            continue
+        used.update(flat)
+        out.append(fit)
+    return P(*out)
+
+
+def act_pspec(rules: ShardingRules, name, shape) -> P | None:
+    spec = rules.act_rules.get(name)
+    if spec is None:
+        return None
+    sizes = _axis_sizes(rules.mesh)
+    out = []
+    used = set()
+    for dim, axes in zip(shape, spec):
+        fit = _fit(dim, axes, sizes)
+        if fit is None:
+            out.append(None)
+            continue
+        flat = (fit,) if isinstance(fit, str) else fit
+        if any(a in used for a in flat):
+            out.append(None)
+            continue
+        used.update(flat)
+        out.append(fit)
+    return P(*out)
+
+
+def constrain_activation(x, name: str):
+    """Hook used by model code (models.common.shard_hint)."""
+    rules = _active.get()
+    if rules is None:
+        return x
+    spec = act_pspec(rules, name, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# pytree spec builders
+
+
+def params_pspecs(rules: ShardingRules, model) -> dict:
+    axes = model.param_logical_axes()
+    shapes = model.abstract_params()
+
+    def go(a, s):
+        return param_pspec(rules, a, s.shape)
+
+    return jax.tree.map(go, axes, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def opt_state_pspecs(rules: ShardingRules, model) -> dict:
+    """Optimizer-moment sharding: always the FSDP (data-sharded) layout —
+    under ZeRO-2 the moments stay sharded even though weights replicate."""
+    if rules.mesh is None:  # pragma: no cover
+        return params_pspecs(rules, model)
+    shadow = make_rules(rules.mesh,
+                        model.cfg.replace(param_strategy="fsdp"))
+    return params_pspecs(shadow, model)
+
+
+def _cache_leaf_pspec(rules: ShardingRules, path: str, shape) -> P:
+    """Cache sharding by leaf name:
+
+    KV caches [.., B, C, KVH, hd]: batch → dp; heads → model when divisible,
+    else the *sequence* dim shards over model (flash-decoding style partial
+    attention — XLA inserts the small partial-softmax reductions).
+    Recurrent states: width/head dims over model.
+    """
+    sizes = _axis_sizes(rules.mesh)
+    dp = rules.dp_axes
+    leaf = path.split("/")[-1]
+    nd = len(shape)
+    spec = [None] * nd
+    if leaf in ("k", "v", "cross_k", "cross_v"):
+        b, c, kvh = nd - 4, nd - 3, nd - 2
+        spec[b] = _fit(shape[b], dp, sizes)
+        if _fit(shape[kvh], ("model",), sizes):
+            spec[kvh] = "model"
+        else:
+            spec[c] = _fit(shape[c], ("model",), sizes)
+    elif leaf in ("k_scale", "v_scale"):   # [.., B, C, KVH]
+        b, c, kvh = nd - 3, nd - 2, nd - 1
+        spec[b] = _fit(shape[b], dp, sizes)
+        if _fit(shape[kvh], ("model",), sizes):
+            spec[kvh] = "model"
+        else:
+            spec[c] = _fit(shape[c], ("model",), sizes)
+    elif leaf == "h":      # rglru state [.., B, W]
+        spec[nd - 2] = _fit(shape[nd - 2], dp, sizes)
+        spec[nd - 1] = _fit(shape[nd - 1], ("model",), sizes)
+    elif leaf == "conv":   # [.., B, K-1, W]
+        spec[nd - 3] = _fit(shape[nd - 3], dp, sizes)
+        spec[nd - 1] = _fit(shape[nd - 1], ("model",), sizes)
+    elif leaf == "ssm":    # [.., B, H, P, N]
+        spec[nd - 4] = _fit(shape[nd - 4], dp, sizes)
+        spec[nd - 3] = _fit(shape[nd - 3], ("model",), sizes)
+    return P(*spec)
+
+
+def cache_pspecs(rules: ShardingRules, cache_abstract) -> dict:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        out.append(_cache_leaf_pspec(rules, pstr, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_pspecs(rules: ShardingRules, batch_abstract) -> dict:
+    """Token/target/frame inputs: batch dim → dp, rest replicated."""
+    sizes = _axis_sizes(rules.mesh)
+    dp = rules.dp_axes
+
+    def go(leaf):
+        spec = [None] * len(leaf.shape)
+        if leaf.shape:
+            spec[0] = _fit(leaf.shape[0], dp, sizes)
+        return P(*spec)
+
+    return jax.tree.map(go, batch_abstract)
+
+
+def named(rules, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,4 @@
+from .checkpoint import AsyncSaver, latest_step, restore, save  # noqa: F401
+from .data import LMDataset  # noqa: F401
+from .optimizer import AdamW, cosine_schedule  # noqa: F401
+from .train_loop import TrainConfig, train  # noqa: F401

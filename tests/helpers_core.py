@@ -1,0 +1,106 @@
+"""Shared differential-testing harness for the PopPy core."""
+
+from __future__ import annotations
+
+import asyncio
+import time
+
+from repro.core import (
+    equivalent,
+    poppy,
+    recording,
+    sequential,
+    sequential_mode,
+    unordered,
+)
+
+
+class ExternalWorld:
+    """A small world of annotated externals with observable effects, shared
+    by differential tests.  ``fresh()`` resets state between runs."""
+
+    def __init__(self, latency=0.0):
+        self.latency = latency
+        self.reset()
+        world = self
+
+        @sequential
+        def emit(x):
+            world.out.append(("emit", x))
+            return None
+
+        @sequential
+        def store(x):
+            world.cell = x
+            world.out.append(("store", x))
+            return None
+
+        @unordered
+        async def compute(x):
+            world.dispatched.append(("compute", x))
+            world.in_flight += 1
+            world.max_in_flight = max(world.max_in_flight, world.in_flight)
+            await asyncio.sleep(world.latency)
+            world.in_flight -= 1
+            return f"c({x})"
+
+        @unordered
+        async def slow(x, delay):
+            world.dispatched.append(("slow", x))
+            world.in_flight += 1
+            world.max_in_flight = max(world.max_in_flight, world.in_flight)
+            await asyncio.sleep(delay)
+            world.in_flight -= 1
+            return f"s({x})"
+
+        from repro.core import readonly
+
+        @readonly
+        def peek():
+            world.out.append(("peek", world.cell))
+            return world.cell
+
+        self.emit = emit
+        self.store = store
+        self.compute = compute
+        self.slow = slow
+        self.peek = peek
+
+    def reset(self):
+        self.out = []
+        self.cell = None
+        self.dispatched = []
+        self.in_flight = 0
+        self.max_in_flight = 0
+
+
+def run_both(fn, *args, world: ExternalWorld | None = None, **kwargs):
+    """Run a @poppy function under plain Python and under PopPy; return
+    (plain_result, poppy_result, plain_trace, poppy_trace, diag dict)."""
+    diag = {}
+    if world is not None:
+        world.reset()
+    with recording() as t_plain:
+        with sequential_mode():
+            r_plain = fn(*args, **kwargs)
+    if world is not None:
+        diag["plain_out"] = list(world.out)
+        world.reset()
+    with recording() as t_poppy:
+        r_poppy = fn(*args, **kwargs)
+    if world is not None:
+        diag["poppy_out"] = list(world.out)
+        diag["max_in_flight"] = world.max_in_flight
+    return r_plain, r_poppy, t_plain, t_poppy, diag
+
+
+def assert_same(fn, *args, world=None, **kwargs):
+    r1, r2, t1, t2, diag = run_both(fn, *args, world=world, **kwargs)
+    assert r1 == r2, f"results differ: {r1!r} vs {r2!r}"
+    ok, why = equivalent(t1, t2)
+    assert ok, f"traces not ≡_A: {why}"
+    if world is not None:
+        assert diag["plain_out"] == diag["poppy_out"], (
+            f"observable effects differ:\n plain={diag['plain_out']}\n "
+            f"poppy={diag['poppy_out']}")
+    return r1, diag

@@ -1,0 +1,48 @@
+"""The paper's benchmark applications as differential tests: every app must
+produce identical results, identical ordered output, and ≡_A traces under
+PopPy vs standard Python — with real concurrency (simulated latencies)."""
+
+import pytest
+
+from benchmarks.common import bench_app
+from repro.core import equivalent, recording, sequential_mode
+from repro.core.ai import SimulatedBackend, use_backend
+
+
+def run_app_both(mod, arg=None):
+    be = SimulatedBackend(base_s=0.005, per_token_s=0.0005)
+    with use_backend(be), recording() as t1, sequential_mode():
+        r1 = mod.run(arg) if arg else mod.run()
+    out1 = list(mod.OUT)
+    be2 = SimulatedBackend(base_s=0.005, per_token_s=0.0005)
+    with use_backend(be2), recording() as t2:
+        r2 = mod.run(arg) if arg else mod.run()
+    out2 = list(mod.OUT)
+    return r1, r2, out1, out2, t1, t2
+
+
+@pytest.mark.parametrize("app", ["tot", "sot", "dae", "bird", "traq"])
+def test_app_differential(app):
+    import importlib
+    mod = importlib.import_module(f"benchmarks.apps.{app}")
+    r1, r2, out1, out2, t1, t2 = run_app_both(mod)
+    assert r1 == r2, f"{app}: results differ"
+    assert out1 == out2, f"{app}: ordered output differs"
+    ok, why = equivalent(t1, t2)
+    assert ok, f"{app}: {why}"
+
+
+@pytest.mark.parametrize("key", [f"C-{i}" for i in (1, 2, 3, 4, 5, 6, 13)])
+def test_camel_differential(key):
+    from benchmarks.apps import camel
+    r1, r2, out1, out2, t1, t2 = run_app_both(camel, key)
+    assert r1 == r2
+    assert out1 == out2
+    ok, why = equivalent(t1, t2)
+    assert ok, f"{key}: {why}"
+
+
+def test_apps_actually_speed_up():
+    from benchmarks.apps import sot
+    r = bench_app(sot.run, trials=1, scale=0.5)
+    assert r["speedup"] > 1.5, f"SoT speedup only {r['speedup']:.2f}×"

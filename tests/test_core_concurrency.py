@@ -1,0 +1,273 @@
+"""Concurrency-control guarantees (paper §6.2).
+
+These tests assert the *dynamic* properties of the runtime: unordered calls
+overlap; sequential calls execute in program order even when their inputs
+resolve out of order; readonly calls stay within their sequential window;
+parallelism actually reduces wall-clock time.
+"""
+
+import asyncio
+import time
+
+import pytest
+
+from repro.core import poppy, readonly, sequential, unordered, sequential_mode
+
+
+def make_world():
+    events = []
+    state = {"v": 0}
+
+    @unordered
+    async def work(tag, delay):
+        events.append(("start", tag))
+        await asyncio.sleep(delay)
+        events.append(("end", tag))
+        return tag
+
+    @sequential
+    def seq(tag):
+        events.append(("seq", tag))
+        return tag
+
+    @readonly
+    def read(tag):
+        events.append(("read", tag, state["v"]))
+        return state["v"]
+
+    @sequential
+    def write(v):
+        state["v"] = v
+        events.append(("write", v))
+        return None
+
+    return events, work, seq, read, write
+
+
+def test_unordered_overlap_and_speedup():
+    events, work, seq, read, write = make_world()
+
+    @poppy
+    def fanout():
+        a = work("a", 0.05)
+        b = work("b", 0.05)
+        c = work("c", 0.05)
+        d = work("d", 0.05)
+        return (a, b, c, d)
+
+    t0 = time.perf_counter()
+    out = fanout()
+    dt = time.perf_counter() - t0
+    assert out == ("a", "b", "c", "d")
+    # 4 × 50 ms sequentially = 200 ms; parallel ≈ 50 ms
+    assert dt < 0.15, f"no overlap: took {dt:.3f}s"
+    starts = [e for e in events if e[0] == "start"]
+    ends = [e for e in events if e[0] == "end"]
+    # all four must start before the first one ends
+    assert events.index(ends[0]) >= 4
+
+
+def test_sequential_order_despite_out_of_order_args():
+    events, work, seq, read, write = make_world()
+
+    @poppy
+    def program():
+        slow_r = work("slow", 0.08)
+        fast_r = work("fast", 0.01)
+        seq(slow_r)  # queued first, arg resolves last
+        seq(fast_r)
+        return None
+
+    program()
+    seqs = [e for e in events if e[0] == "seq"]
+    assert seqs == [("seq", "slow"), ("seq", "fast")]
+
+
+def test_readonly_stays_in_window():
+    events, work, seq, read, write = make_world()
+
+    @poppy
+    def program():
+        write(1)
+        a = read("r1")
+        b = read("r2")
+        write(2)
+        c = read("r3")
+        return (a, b, c)
+
+    out = program()
+    assert out == (1, 1, 2)
+    reads = [e for e in events if e[0] == "read"]
+    assert [r[2] for r in reads] == [1, 1, 2]
+
+
+def test_readonly_overlaps_readonly():
+    overlap = {"cur": 0, "max": 0}
+
+    @readonly
+    async def slow_read(tag):
+        overlap["cur"] += 1
+        overlap["max"] = max(overlap["max"], overlap["cur"])
+        await asyncio.sleep(0.04)
+        overlap["cur"] -= 1
+        return tag
+
+    @poppy
+    def program():
+        a = slow_read("a")
+        b = slow_read("b")
+        c = slow_read("c")
+        return (a, b, c)
+
+    t0 = time.perf_counter()
+    assert program() == ("a", "b", "c")
+    dt = time.perf_counter() - t0
+    assert overlap["max"] >= 2, "readonly calls did not overlap"
+    assert dt < 0.10
+
+
+def test_sequential_blocks_readonly_until_resolved():
+    order = []
+
+    @sequential
+    async def slow_write(tag):
+        order.append(("w-start", tag))
+        await asyncio.sleep(0.05)
+        order.append(("w-end", tag))
+        return tag
+
+    @readonly
+    def fast_read(tag):
+        order.append(("read", tag))
+        return tag
+
+    @poppy
+    def program():
+        slow_write("w")
+        fast_read("r")
+        return None
+
+    program()
+    assert order == [("w-start", "w"), ("w-end", "w"), ("read", "r")]
+
+
+def test_unordered_crosses_pending_sequential():
+    order = []
+
+    @sequential
+    async def slow_seq(tag):
+        order.append(("seq", tag))
+        await asyncio.sleep(0.05)
+        return tag
+
+    @unordered
+    def free(tag):
+        order.append(("free", tag))
+        return tag
+
+    @poppy
+    def program():
+        a = slow_seq("s")   # pending 50 ms
+        b = free("u")       # should NOT wait for it
+        return (a, b)
+
+    t0 = time.perf_counter()
+    program()
+    dt = time.perf_counter() - t0
+    # free dispatched while slow_seq still in flight
+    assert order[0] == ("seq", "s") or order[0] == ("free", "u")
+    assert ("free", "u") in order[:2]
+    assert dt < 0.1
+
+
+def test_dependent_chain_is_serialized():
+    events, work, seq, read, write = make_world()
+
+    @poppy
+    def chain():
+        a = work("a", 0.03)
+        b = work(a, 0.03)    # data dependency: must wait for a
+        c = work(b, 0.03)
+        return c
+
+    t0 = time.perf_counter()
+    out = chain()
+    dt = time.perf_counter() - t0
+    assert out == "a"
+    assert dt > 0.08, "data-dependent chain overlapped (unsound)"
+
+
+def test_loop_parallelism_scales():
+    """Paper §8.4: more parallelizable calls → proportionally more overlap."""
+    @unordered
+    async def call(i):
+        await asyncio.sleep(0.03)
+        return i
+
+    @poppy
+    def burst(n):
+        out = tuple()
+        for i in range(n):
+            out += (call(i),)
+        return out
+
+    t0 = time.perf_counter()
+    assert burst(12) == tuple(range(12))
+    dt = time.perf_counter() - t0
+    assert dt < 0.03 * 12 / 3, f"burst did not parallelize: {dt:.3f}s"
+
+
+def test_plain_mode_is_sequential():
+    @unordered
+    async def call(i):
+        await asyncio.sleep(0.02)
+        return i
+
+    @poppy
+    def burst(n):
+        out = tuple()
+        for i in range(n):
+            out += (call(i),)
+        return out
+
+    t0 = time.perf_counter()
+    with sequential_mode():
+        out = burst(5)
+    dt = time.perf_counter() - t0
+    assert out == tuple(range(5))
+    assert dt > 0.08, "sequential baseline unexpectedly parallel"
+
+
+def test_interleaved_print_semantics():
+    """The paper's Fig. 2 scenario: prints with data deps on LLM calls keep
+    sequential order; LLM calls all dispatch up front."""
+    log = []
+    dispatch_times = []
+
+    @unordered
+    async def llm_call(x, d):
+        dispatch_times.append((x, time.perf_counter()))
+        await asyncio.sleep(d)
+        return f"v{x}"
+
+    @sequential
+    def out(line):
+        log.append(line)
+        return None
+
+    @poppy
+    def program():
+        vals = tuple()
+        for i, d in ((0, 0.06), (1, 0.02), (2, 0.04)):
+            v = llm_call(i, d)
+            out(f"{i}:{v}")
+            vals += (v,)
+        return vals
+
+    t0 = time.perf_counter()
+    assert program() == ("v0", "v1", "v2")
+    dt = time.perf_counter() - t0
+    assert log == ["0:v0", "1:v1", "2:v2"]
+    # all three dispatched within the first ~15 ms → ran in parallel
+    assert max(t for _, t in dispatch_times) - t0 < 0.03
+    assert dt < 0.12

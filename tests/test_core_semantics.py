@@ -1,0 +1,454 @@
+"""Differential semantics tests: PopPy execution must match standard Python
+execution (results, observable effect order, ≡_A traces) across the
+supported fragment."""
+
+import pytest
+
+from repro.core import (
+    ExternalCallError,
+    PoppyUnboundLocalError,
+    poppy,
+    sequential_mode,
+    unordered,
+)
+
+from helpers_core import ExternalWorld, assert_same
+
+W = ExternalWorld(latency=0.002)
+emit, store, compute, slow, peek = W.emit, W.store, W.compute, W.slow, W.peek
+
+
+# ---------------------------------------------------------------------------
+# plain data / control flow
+
+
+@poppy
+def arith(a, b):
+    x = a + b * 2
+    y = x // 3
+    z = x % (b + 1)
+    return (x, y, z, x ** 2, -x, x > y, x == y, not (x < y))
+
+
+def test_arithmetic():
+    assert_same(arith, 7, 5)
+    assert_same(arith, -3, 2)
+
+
+@poppy
+def strings(name):
+    s = f"hello {name}!"
+    t = s.upper()
+    parts = t.split()
+    return (s, t, parts, len(s), s[1:4], s[::-1], "lo" in s)
+
+
+def test_strings():
+    assert_same(strings, "world")
+
+
+@poppy
+def containers():
+    t = (1, 2, 3)
+    l = [4, 5]
+    l.append(6)
+    d = {"a": 1, "b": 2}
+    d["c"] = 3
+    s = {10, 20}
+    s.add(30)
+    fs = frozenset({1, 2})
+    return (t + (4,), l, sorted(d.items()), sorted(s), sorted(fs | {7}),
+            t[1], l[-1], d["c"])
+
+
+def test_containers():
+    assert_same(containers)
+
+
+@poppy
+def branching(n):
+    if n > 10:
+        kind = "big"
+    elif n > 5:
+        kind = "medium"
+    else:
+        kind = "small"
+    val = 100 if n % 2 == 0 else 200
+    both = n > 0 and n < 100
+    either = n < 0 or n > 3
+    return (kind, val, both, either)
+
+
+def test_branching():
+    for n in (2, 7, 15, -1):
+        assert_same(branching, n)
+
+
+@poppy
+def loops(n):
+    total = 0
+    for i in range(n):
+        total += i
+    evens = tuple()
+    for i in range(n):
+        if i % 2 == 0:
+            evens += (i,)
+    i = 0
+    squares = []
+    while i * i < n:
+        squares.append(i * i)
+        i += 1
+    return (total, evens, squares)
+
+
+def test_loops():
+    assert_same(loops, 9)
+    assert_same(loops, 0)
+
+
+@poppy
+def nested_loops(m, n):
+    grid = []
+    for i in range(m):
+        row = tuple()
+        for j in range(n):
+            if (i + j) % 2 == 0:
+                row += (i * j,)
+        grid.append(row)
+    return grid
+
+
+def test_nested_loops():
+    assert_same(nested_loops, 3, 4)
+
+
+@poppy
+def unpacking(pairs):
+    total = 0
+    names = tuple()
+    for name, v in pairs:
+        total += v
+        names += (name,)
+    a, b = ("x", "y")
+    (c, d), e = (("p", "q"), "r")
+    return (total, names, a, b, c, d, e)
+
+
+def test_unpacking():
+    assert_same(unpacking, (("u", 1), ("v", 2), ("w", 3)))
+
+
+@poppy
+def comprehensions(n):
+    sq = [i * i for i in range(n)]
+    ev = [i for i in range(n) if i % 2 == 0]
+    st = {i % 3 for i in range(n)}
+    dc = {i: i * 2 for i in range(n) if i > 1}
+    pairs = [(i, j) for i in range(3) for j in range(2)]
+    return (sq, ev, sorted(st), sorted(dc.items()), pairs)
+
+
+def test_comprehensions():
+    assert_same(comprehensions, 6)
+
+
+@poppy
+def chained_compare(a, b, c):
+    return (a < b < c, a <= b <= c, a < b > c, 0 < a < 10 < b)
+
+
+def test_chained_compare():
+    assert_same(chained_compare, 1, 2, 3)
+    assert_same(chained_compare, 2, 2, 1)
+
+
+# ---------------------------------------------------------------------------
+# functions, closures, recursion
+
+
+@poppy
+def helper_sum(xs):
+    t = 0
+    for x in xs:
+        t += x
+    return t
+
+
+@poppy
+def calls_helper(xs):
+    a = helper_sum(xs)
+    b = helper_sum((a, a))
+    return a + b
+
+
+def test_internal_calls():
+    assert_same(calls_helper, (1, 2, 3))
+
+
+@poppy
+def with_defaults(a, b=10, c=20):
+    return a + b + c
+
+
+def test_defaults_and_kwargs():
+    assert_same(with_defaults, 1)
+    assert_same(with_defaults, 1, c=5)
+    assert_same(with_defaults, 1, 2, 3)
+
+
+@poppy
+def nested_def(scale):
+    def mul(x):
+        return x * scale
+
+    def twice(f, x):
+        return f(f(x))
+
+    return (mul(3), twice(mul, 2))
+
+
+def test_nested_def_closure():
+    assert_same(nested_def, 5)
+
+
+@poppy
+def lambda_sort(pairs):
+    return sorted(pairs, key=lambda p: p[1])
+
+
+def test_lambda_passed_to_external():
+    assert_same(lambda_sort, (("a", 3), ("b", 1), ("c", 2)))
+
+
+@poppy
+def fib(n):
+    if n < 2:
+        out = n
+    else:
+        out = fib(n - 1) + fib(n - 2)
+    return out
+
+
+def test_recursion():
+    assert_same(fib, 10)
+
+
+@poppy
+def while_loop_external(n):
+    x = 0
+    r = compute(n)
+    while x < 3:
+        emit(f"iter {x} {r}")
+        x += 1
+    return x
+
+
+def test_while_with_external():
+    assert_same(while_loop_external, 4, world=W)
+
+
+# ---------------------------------------------------------------------------
+# externals: results and effects
+
+
+@poppy
+def tot_like(task, n):
+    cache = frozenset()
+    values = tuple()
+    for idx, state in enumerate(("a", "a", "b", "b", "c")[:n]):
+        if state in cache:
+            v = "dup"
+            emit(f"{idx}: duplicate")
+        else:
+            v = compute(f"{task}/{state}")
+            cache |= {state}
+            emit(f"{idx}: new")
+        values += (v,)
+    return values
+
+
+def test_tot_like_pattern():
+    r, diag = assert_same(tot_like, "t", 5, world=W)
+    assert r == ("c(t/a)", "dup", "c(t/b)", "dup", "c(t/c)")
+
+
+@poppy
+def mutation_order(xs):
+    acc = []
+    for x in xs:
+        y = compute(x)
+        acc.append(y)
+        emit(len(acc))
+    return acc
+
+
+def test_list_mutation_order():
+    assert_same(mutation_order, ("p", "q", "r"), world=W)
+
+
+@poppy
+def readonly_vs_store():
+    store(1)
+    a = peek()
+    b = peek()
+    store(2)
+    c = peek()
+    return (a, b, c)
+
+
+def test_readonly_window():
+    r, _ = assert_same(readonly_vs_store, world=W)
+    assert r == (1, 1, 2)
+
+
+class Box:
+    pass
+
+
+@poppy
+def obj_fields():
+    obj = Box()
+    obj.x = 5
+    obj.y = obj.x + 1
+    obj.x += 10
+    return (obj.x, obj.y)
+
+
+def test_object_mutation():
+    r, _ = assert_same(obj_fields, world=W)
+    assert r == (15, 6)
+
+
+@poppy
+def aug_everything():
+    d = {}
+    l = [1, 2]
+    d["k"] = 1
+    d["k"] += 5
+    l[0] += 100
+    return (d["k"], l[0])
+
+
+def test_aug_subscript():
+    r1, _ = assert_same(aug_everything)
+    assert r1 == (6, 101)
+
+
+# ---------------------------------------------------------------------------
+# errors
+
+
+def test_unbound_local():
+    @poppy
+    def bad(flag):
+        if flag:
+            x = 1
+        return x  # unbound when flag is False
+
+    assert bad(True) == 1
+    with pytest.raises(PoppyUnboundLocalError):
+        bad(False)
+
+
+def test_external_exception_surfaces():
+    @unordered
+    def boom(x):
+        raise ValueError(f"boom {x}")
+
+    @poppy
+    def calls_boom():
+        a = boom(1)
+        return a
+
+    with pytest.raises(ExternalCallError):
+        calls_boom()
+
+
+def test_fragment_fallback():
+    # break is unsupported → falls back to sequential external execution
+    with pytest.warns(UserWarning, match="outside the supported fragment"):
+        @poppy
+        def has_break(n):
+            t = 0
+            for i in range(n):
+                if i == 3:
+                    break
+                t += i
+            return t
+
+        assert has_break(10) == 3  # still runs correctly (plain Python)
+    assert not has_break.compiles
+
+
+def test_strict_mode_raises():
+    from repro.core import PoppyCompileError
+
+    with pytest.raises(PoppyCompileError):
+        @poppy(strict=True)
+        def has_raise():
+            raise ValueError("x")
+
+        has_raise.lfunc  # trigger compile
+
+
+# ---------------------------------------------------------------------------
+# misc semantics
+
+
+@poppy
+def truthiness(xs):
+    n = 0
+    if xs:
+        n += 1
+    if len(xs) > 2:
+        n += 10
+    return n
+
+
+def test_truthiness():
+    assert_same(truthiness, ())
+    assert_same(truthiness, (1, 2, 3))
+
+
+@poppy
+def global_const():
+    return GLOBAL_VALUE * 2
+
+
+GLOBAL_VALUE = 21
+
+
+def test_global_resolution():
+    assert_same(global_const)
+
+
+@poppy
+def shadowing(x):
+    y = x
+    for x in range(3):
+        y += x
+    return (x, y)
+
+
+def test_loop_var_shadowing():
+    assert_same(shadowing, 100)
+
+
+@poppy
+def dict_set_literals(a, b):
+    d = {a: b, "fixed": 1}
+    s = {a, b, a}
+    return (sorted(d.items(), key=str), sorted(s, key=str))
+
+
+def test_dict_set_literals():
+    assert_same(dict_set_literals, "k", "v")
+
+
+@poppy
+def star_slices(xs):
+    return (xs[1:], xs[:2], xs[::2], xs[1:4:2])
+
+
+def test_slices():
+    assert_same(star_slices, tuple(range(8)))

@@ -1,0 +1,109 @@
+"""Serving engine tests: continuous batching must produce exactly the
+tokens that isolated greedy decoding produces, and concurrent requests must
+actually share decode steps."""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("stablelm-3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    return cfg, model, params
+
+
+def greedy_reference(model, params, prompt, n_new):
+    """Isolated greedy decode via teacher-forcing forward (no cache)."""
+    toks = list(prompt)
+    for _ in range(n_new):
+        logits, _ = model.forward(
+            params, {"tokens": jnp.asarray([toks], jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]
+
+
+def test_single_request_matches_reference(served):
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=4, max_len=64)
+
+    async def go():
+        out = await engine.generate([5, 17, 31], max_new_tokens=8)
+        await engine.stop()
+        return out
+
+    out = asyncio.run(go())
+    ref = greedy_reference(model, params, [5, 17, 31], 8)
+    assert out == ref
+
+
+def test_concurrent_requests_match_isolated(served):
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=4, max_len=64)
+    prompts = [[1, 2, 3], [9, 8, 7], [42, 5, 6], [3, 1, 4]]
+
+    async def go():
+        outs = await asyncio.gather(*[
+            engine.generate(p, max_new_tokens=4) for p in prompts])
+        await engine.stop()
+        return outs
+
+    outs = asyncio.run(go())
+    for p, o in zip(prompts, outs):
+        ref = greedy_reference(model, params, p, 4)
+        assert o == ref, f"prompt {p}: batched {o} != isolated {ref}"
+    # requests overlapped: some decode steps served >1 sequence
+    assert max(engine.batch_occupancy) >= 2
+
+
+def test_more_requests_than_slots(served):
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=2, max_len=64)
+    prompts = [[i, i + 1] for i in range(5)]
+
+    async def go():
+        outs = await asyncio.gather(*[
+            engine.generate(p, max_new_tokens=4) for p in prompts])
+        await engine.stop()
+        return outs
+
+    outs = asyncio.run(go())
+    for p, o in zip(prompts, outs):
+        assert o == greedy_reference(model, params, p, 4)
+
+
+def test_engine_backed_llm_through_poppy(served):
+    """End-to-end: PopPy program → ai.llm → serving engine; parallel calls
+    share batches."""
+    cfg, model, params = served
+    from repro.core import poppy
+    from repro.core.ai import llm, use_backend
+    from repro.serving.backend import LocalEngineBackend
+
+    engine = ServingEngine(model, params, max_slots=4, max_len=64)
+    backend = LocalEngineBackend(engine)
+
+    @poppy
+    def fanout(n):
+        outs = tuple()
+        for i in range(n):
+            outs += (llm(f"prompt {i}", max_tokens=4),)
+        return outs
+
+    with use_backend(backend):
+        outs = fanout(4)
+    assert len(outs) == 4
+    # untrained model → arbitrary ids; specials (≥256) decode to ""
+    assert all(isinstance(o, str) for o in outs)
+    assert engine.decode_tokens > 0
+    assert max(engine.batch_occupancy) >= 2, \
+        "parallel PopPy calls did not share decode batches"
