@@ -1,0 +1,129 @@
+"""Fig. 9: dispatch-subsystem scaling (beyond-paper; DESIGN.md §5,
+EXPERIMENTS.md §Fig. 9).
+
+A PopPy fan-out app (N_CALLS `@unordered` llm() calls over N_UNIQUE
+distinct prompts + a combine call) is driven through `repro.dispatch`
+under three configurations on the deterministic simulated backend:
+
+  single       1 replica,  concurrency cap 4, cache off   (baseline)
+  routed       2 replicas, cap 4 each, least-outstanding routing + hedging
+  routed_warm  routed + result cache, measured cache-warm
+
+Every trial also runs the app under ``sequential_mode()`` against a direct
+backend and asserts result equality — the dispatch layer must preserve
+sequential semantics no matter the configuration (so, like fig5, every
+benchmark run is also a soundness test).  The acceptance bar is
+routed_warm ≥ 1.5× over single.
+
+    PYTHONPATH=src:. python benchmarks/fig9_dispatch.py
+"""
+
+from __future__ import annotations
+
+import json
+import statistics
+import time
+from pathlib import Path
+
+from repro.core import poppy, sequential_mode
+from repro.core.ai import use_backend, use_dispatcher, llm
+from repro.dispatch import AdmissionPolicy, Dispatcher, HedgePolicy
+
+from benchmarks.common import make_backend
+
+N_CALLS = 24
+N_UNIQUE = 8
+CAP = 4          # per-replica concurrency cap
+
+
+@poppy
+def pipeline(n):
+    summaries = tuple()
+    for i in range(n):
+        s = llm(f"summarize shard {i % N_UNIQUE}", max_tokens=32)
+        summaries += (s,)
+    combined = llm(f"combine: {summaries}", max_tokens=48)
+    return combined
+
+
+def _reference(scale):
+    """Sequential-mode result over a direct backend — the semantic oracle."""
+    with use_backend(make_backend(scale)), sequential_mode():
+        return pipeline(N_CALLS)
+
+
+def _dispatcher(n_replicas, *, scale, cache, hedge):
+    backends = [make_backend(scale) for _ in range(n_replicas)]
+    return Dispatcher(
+        backends,
+        policy="least_outstanding",
+        cache=cache,
+        admission=AdmissionPolicy(max_concurrency=CAP),
+        hedge=HedgePolicy(delay_s=0.3 * scale) if hedge else None,
+    )
+
+
+def _timed(d, expect):
+    with use_dispatcher(d):
+        t0 = time.perf_counter()
+        result = pipeline(N_CALLS)
+        dt = time.perf_counter() - t0
+    assert result == expect, (
+        f"dispatch diverged from sequential_mode: {result!r} vs {expect!r}")
+    return dt
+
+
+def run(out_dir="experiments/apps", trials=3, scale=1.0):
+    times = {"single": [], "routed": [], "routed_warm": []}
+    last_stats = {}
+    for _ in range(trials):
+        expect = _reference(scale)
+
+        d1 = _dispatcher(1, scale=scale, cache=None, hedge=False)
+        times["single"].append(_timed(d1, expect))
+
+        d2 = _dispatcher(2, scale=scale, cache=None, hedge=True)
+        times["routed"].append(_timed(d2, expect))
+
+        d3 = _dispatcher(2, scale=scale, cache=True, hedge=True)
+        _timed(d3, expect)                       # warm the cache (checked)
+        times["routed_warm"].append(_timed(d3, expect))
+
+        last_stats = {"single": d1.stats.snapshot(),
+                      "routed": d2.stats.snapshot(),
+                      "routed_warm": d3.stats.snapshot()}
+
+    med = {k: statistics.median(v) for k, v in times.items()}
+    results = {
+        "n_calls": N_CALLS, "n_unique": N_UNIQUE, "cap": CAP,
+        "trials": trials, "scale": scale,
+        "median_s": med,
+        "speedup_routed": med["single"] / med["routed"],
+        "speedup_warm": med["single"] / med["routed_warm"],
+        "stats": last_stats,
+    }
+
+    print(f"{N_CALLS} calls ({N_UNIQUE} unique), per-replica cap {CAP}:")
+    for k in ("single", "routed", "routed_warm"):
+        sp = med["single"] / med[k]
+        st = last_stats[k]
+        print(f"  {k:12s} {med[k] * 1e3:8.1f} ms   {sp:5.2f}×   "
+              f"hit rate {st['hit_rate']:4.0%}  queue peak "
+              f"{st['queue_peak']:2d}  hedge wins {st['hedge_wins']}")
+        for name, bs in st["backends"].items():
+            print(f"    {name}: {bs['requests']} reqs, "
+                  f"p50 {bs['p50_s'] * 1e3:.0f} ms, "
+                  f"p99 {bs['p99_s'] * 1e3:.0f} ms")
+
+    assert results["speedup_warm"] >= 1.5, (
+        f"cache-warm 2-replica speedup {results['speedup_warm']:.2f}× "
+        "below the 1.5× acceptance bar")
+
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig9.json").write_text(json.dumps(results, indent=1))
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,9 +1,11 @@
 """End-to-end driver: serve a small JAX model with batched requests.
 
-A PopPy compound-AI program fans out `@unordered` llm() calls; the
-LocalEngineBackend routes them into the continuous-batching serving engine
-running a real (reduced-config) model — PopPy's extracted parallelism
-becomes decode-batch occupancy on the engine.
+A PopPy compound-AI program fans out `@unordered` llm() calls; they route
+through a `repro.dispatch.Dispatcher` (admission control, result cache +
+coalescing, hedged retries) into the LocalEngineBackend, whose requests
+share continuous-batching decode steps on a real (reduced-config) model —
+PopPy's extracted parallelism becomes decode-batch occupancy on the
+engine, and the dispatcher makes the burst production-shaped.
 
     PYTHONPATH=src:. python examples/serve_llm.py [--arch stablelm-3b]
 """
@@ -14,8 +16,9 @@ import time
 import jax
 
 from repro.configs import get_config
-from repro.core import poppy, sequential, sequential_mode
-from repro.core.ai import llm, use_backend
+from repro.core import poppy, sequential
+from repro.core.ai import llm, use_dispatcher
+from repro.dispatch import AdmissionPolicy, Dispatcher, HedgePolicy
 from repro.models import build_model
 from repro.serving import LocalEngineBackend, ServingEngine
 
@@ -49,11 +52,20 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     engine = ServingEngine(model, params, max_slots=4, max_len=96)
     backend = LocalEngineBackend(engine)
+    # production dispatch in front of the engine: admit at most max_slots
+    # concurrent requests (backpressure instead of queue stampede), cache
+    # identical temperature-0 prompts, hedge stragglers
+    dispatcher = Dispatcher(
+        [backend],
+        cache=True,
+        admission=AdmissionPolicy(max_concurrency=engine.max_slots),
+        hedge=HedgePolicy(delay_s=30.0),
+    )
     print(f"serving reduced {args.arch} "
           f"({model.num_params()/1e6:.1f}M params), "
           f"{engine.max_slots} slots\n")
 
-    with use_backend(backend):
+    with use_dispatcher(dispatcher):
         t0 = time.perf_counter()
         summarize_documents(args.docs)
         dt = time.perf_counter() - t0
@@ -64,6 +76,7 @@ def main():
           f"mean batch occupancy {sum(occ)/max(len(occ),1):.2f} "
           f"(max {max(occ, default=0)}): PopPy's parallel calls shared "
           "decode batches")
+    print(dispatcher.stats.report())
 
 
 if __name__ == "__main__":

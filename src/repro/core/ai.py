@@ -15,6 +15,11 @@ Backends
 * ``LocalEngineBackend`` (repro.serving) — a real JAX model served by the
   continuous-batching engine; PopPy's burst of parallel calls share decode
   batches (the beyond-paper batching co-design, DESIGN.md §3).
+
+Every call routes through a ``repro.dispatch.Dispatcher`` (multi-backend
+routing, admission control, caching, retries, hedging — DESIGN.md §5); the
+default dispatcher is trivial and byte-identical to calling the ambient
+backend directly.  Install a configured one with ``use_dispatcher``.
 """
 
 from __future__ import annotations
@@ -136,6 +141,54 @@ class use_backend:
 
 
 # ---------------------------------------------------------------------------
+# dispatch layer (repro.dispatch)
+#
+# Every component call routes through a Dispatcher — multi-backend routing,
+# admission control, result caching, retries, hedging (DESIGN.md §5).  The
+# default is the *trivial* dispatcher: a single logical replica resolving
+# the ambient `use_backend` backend per call, with every production feature
+# off — byte-identical to calling the backend directly, so existing code
+# and the differential-testing baseline see zero behavior change.
+
+_dispatcher: contextvars.ContextVar = contextvars.ContextVar(
+    "poppy_ai_dispatcher", default=None)
+_default_dispatcher = None
+
+
+def set_dispatcher(d):
+    _dispatcher.set(d)
+
+
+def get_dispatcher():
+    d = _dispatcher.get()
+    if d is not None:
+        return d
+    # module-level (not contextvar) default: get_dispatcher() may first run
+    # inside a controller task whose context copy would discard the set()
+    global _default_dispatcher
+    if _default_dispatcher is None:
+        from repro.dispatch import Dispatcher
+        _default_dispatcher = Dispatcher()
+    return _default_dispatcher
+
+
+class use_dispatcher:
+    """Route component calls in this context through ``d`` (a
+    ``repro.dispatch.Dispatcher``)."""
+
+    def __init__(self, d):
+        self.d = d
+
+    def __enter__(self):
+        self._tok = _dispatcher.set(self.d)
+        return self.d
+
+    def __exit__(self, *exc):
+        _dispatcher.reset(self._tok)
+        return False
+
+
+# ---------------------------------------------------------------------------
 # annotated external components
 
 
@@ -144,21 +197,21 @@ async def llm(prompt: str, *, max_tokens: int = 64, temperature: float = 0.0,
               stop=None) -> str:
     """Stateless LLM completion — @unordered: dispatches the moment the
     prompt is ready, in parallel with anything else in flight."""
-    return await get_backend().generate(
+    return await get_dispatcher().generate(
         prompt, max_tokens=max_tokens, temperature=temperature, stop=stop)
 
 
 @unordered
 async def embed(text: str) -> tuple:
     """Text-embedding model call."""
-    return await get_backend().embed(text)
+    return await get_dispatcher().embed(text)
 
 
 @unordered
 async def http(url: str, payload=None) -> str:
     """Generic asynchronous HTTP method for arbitrary stateless remote APIs.
     Offline container: served by the simulated backend keyed on the URL."""
-    return await get_backend().generate(
+    return await get_dispatcher().generate(
         f"{url}::{payload}", max_tokens=32, temperature=0.0, stop=None)
 
 

@@ -1,0 +1,59 @@
+"""repro.dispatch — production external-call dispatch (DESIGN.md §5).
+
+Sits between the PopPy concurrency controllers and the backends: routing
+across backend replicas, per-backend admission control (token-bucket rate
+limits + concurrency caps with asyncio backpressure), a deterministic
+result cache with in-flight coalescing, retries with deterministic-jitter
+backoff, hedged duplicate requests for straggler mitigation, and a stats
+surface.
+
+Quickstart::
+
+    from repro.core.ai import SimulatedBackend, llm, use_dispatcher
+    from repro.dispatch import AdmissionPolicy, Dispatcher, HedgePolicy
+
+    d = Dispatcher(
+        [SimulatedBackend(), SimulatedBackend()],   # two replicas
+        policy="least_outstanding",
+        cache=True,                                  # LRU + coalescing
+        admission=AdmissionPolicy(max_concurrency=8, rate=200.0, burst=16),
+        hedge=HedgePolicy(delay_s=0.25),
+    )
+    with use_dispatcher(d):
+        my_poppy_app()
+    print(d.stats.report())
+"""
+
+from .admission import (  # noqa: F401
+    AdmissionController,
+    AdmissionPolicy,
+    AdmissionRejected,
+    TokenBucket,
+)
+from .cache import DiskCache, LRUCache, ResultCache, request_key  # noqa: F401
+from .dispatcher import Dispatcher  # noqa: F401
+from .reliability import (  # noqa: F401
+    HedgePolicy,
+    RetryPolicy,
+    with_hedge,
+    with_retry,
+)
+from .router import (  # noqa: F401
+    LeastOutstandingRouter,
+    Replica,
+    Router,
+    WeightedRouter,
+    make_router,
+)
+from .stats import BackendStats, DispatchStats, LatencyDigest  # noqa: F401
+
+__all__ = [
+    "Dispatcher",
+    "Router", "WeightedRouter", "LeastOutstandingRouter", "Replica",
+    "make_router",
+    "AdmissionPolicy", "AdmissionController", "AdmissionRejected",
+    "TokenBucket",
+    "ResultCache", "LRUCache", "DiskCache", "request_key",
+    "RetryPolicy", "HedgePolicy", "with_retry", "with_hedge",
+    "DispatchStats", "BackendStats", "LatencyDigest",
+]

@@ -1,0 +1,164 @@
+"""The Dispatcher: production external-call dispatch (DESIGN.md §5).
+
+Sits between the PopPy concurrency controllers (``repro.core.controllers``
+→ ``repro.core.ai``) and the backends.  Layering, outermost first::
+
+    cache / coalesce  →  hedge  →  route  →  admit  →  retry  →  backend
+
+* **cache** — identical requests are answered once (LRU + optional disk),
+  identical *concurrent* requests coalesce onto one dispatch.
+* **hedge** — stragglers race a duplicate; each hedge re-routes, so on a
+  multi-replica router the duplicate lands on a different backend.
+* **route** — weighted or least-outstanding selection across N replicas.
+* **admit** — per-replica token-bucket rate limit + concurrency cap with
+  asyncio backpressure (an unbounded ``@unordered`` burst parks instead of
+  stampeding).
+* **retry** — exponential backoff with deterministic jitter.
+
+A ``Dispatcher()`` with no arguments is the *trivial* dispatcher: it
+resolves the ambient ``repro.core.ai`` backend per call and adds no cache,
+limits, retries, or hedging — byte-identical behavior to calling the
+backend directly, which is what ``repro.core.ai`` installs by default.
+
+Semantics: the dispatcher preserves PopPy's differential-testing invariant.
+Under ``sequential_mode()`` calls arrive one at a time and dispatch maps
+each to exactly one deterministic backend result; under opportunistic
+execution the same per-request function is computed (cache hits are
+trace-equivalent to misses — tracing happens above this layer).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.ai import Backend
+
+from .admission import AdmissionController, AdmissionRejected, make_admission
+from .cache import make_cache, request_key
+from .reliability import HedgePolicy, RetryPolicy, with_hedge, with_retry
+from .router import Replica, make_router
+from .stats import DispatchStats
+
+
+class _AmbientReplica(Replica):
+    """Late-bound replica for the trivial dispatcher: resolves the current
+    ``repro.core.ai`` backend (the ``use_backend`` contextvar) per call."""
+
+    def resolve(self):
+        from repro.core.ai import get_backend
+        return get_backend()
+
+
+class Dispatcher(Backend):
+    """Multi-backend dispatch implementing the ``Backend`` interface, so it
+    drops in anywhere a backend is used (including inside another
+    dispatcher's replica list, for hierarchical routing)."""
+
+    def __init__(self, backends=None, *, policy="least_outstanding",
+                 weights=None, names=None, cache=None, admission=None,
+                 retry: RetryPolicy | None = None,
+                 hedge: HedgePolicy | None = None,
+                 stats: DispatchStats | None = None):
+        self.stats = stats if stats is not None else DispatchStats()
+        if backends is not None:
+            self.router = make_router(backends, policy=policy,
+                                      weights=weights, names=names)
+        else:
+            self.router = None
+            self._ambient = _AmbientReplica(backend=None, name="ambient")
+        self.cache = make_cache(cache)
+        # one admission gate per replica (per-backend limits); the trivial
+        # dispatcher gets a single gate guarding the ambient backend.  A
+        # pre-built controller contributes its *policy* — sharing one gate
+        # instance across replicas would silently merge per-backend limits
+        # into a global one.
+        if isinstance(admission, AdmissionController):
+            admission = admission.policy
+        self._admission_policy = admission
+        replicas = self.router.replicas if self.router else [self._ambient]
+        self._gate = {id(r): make_admission(admission) for r in replicas}
+        self.retry = retry
+        self.hedge = hedge
+
+    # -- Backend interface ---------------------------------------------------
+
+    async def generate(self, prompt, *, max_tokens, temperature, stop):
+        # sampled completions (temperature > 0) are independent draws, not a
+        # pure function of the request — never serve them from cache
+        return await self.dispatch(
+            "generate", (prompt, max_tokens, temperature, stop),
+            lambda b: b.generate(prompt, max_tokens=max_tokens,
+                                 temperature=temperature, stop=stop),
+            cacheable=temperature <= 0.0)
+
+    async def embed(self, text):
+        return await self.dispatch("embed", (text,),
+                                   lambda b: b.embed(text))
+
+    # -- dispatch pipeline ---------------------------------------------------
+
+    async def dispatch(self, kind: str, payload, call, *, cacheable=True):
+        """Dispatch ``call(backend) -> awaitable`` for a request identified
+        by ``(kind, payload)`` through cache → hedge → route → admit →
+        retry."""
+        self.stats.requests += 1
+        use_cache = self.cache is not None and cacheable
+        needs_key = use_cache or self.retry is not None
+        key = request_key(kind, payload) if needs_key else ""
+        if not use_cache:
+            return await self._hedged(key, call)
+        return await self.cache.get_or_dispatch(
+            key, lambda: self._hedged(key, call), self.stats)
+
+    async def _hedged(self, key, call):
+        if self.hedge is None:
+            return await self._routed(key, call)
+        st = self.stats
+        return await with_hedge(
+            lambda: self._routed(key, call), self.hedge,
+            on_hedge=lambda: setattr(st, "hedges", st.hedges + 1),
+            on_win=lambda: setattr(st, "hedge_wins", st.hedge_wins + 1))
+
+    def _pick(self) -> tuple[Replica, object]:
+        replica = self.router.pick() if self.router is not None \
+            else self._ambient
+        return replica, self._gate[id(replica)]
+
+    async def _routed(self, key, call):
+        replica, gate = self._pick()
+        st = self.stats
+        if gate is None:
+            return await self._attempt(replica, key, call)
+        st.enqueue()
+        admitted = False
+        try:
+            async with gate:
+                st.dequeue()
+                admitted = True
+                return await self._attempt(replica, key, call)
+        except AdmissionRejected:
+            st.rejected += 1
+            raise
+        finally:
+            if not admitted:
+                st.dequeue()
+
+    async def _attempt(self, replica: Replica, key, call):
+        st = self.stats
+        backend = replica.resolve()
+        replica.begin()
+        bs = st.backend(replica.name)
+        bs.outstanding_peak = max(bs.outstanding_peak, replica.outstanding)
+        st.dispatched += 1
+        t0 = time.monotonic()
+        try:
+            result = await with_retry(
+                lambda: call(backend), self.retry, key=key,
+                on_retry=lambda a: setattr(st, "retries", st.retries + 1))
+        except BaseException:
+            st.observe(replica.name, time.monotonic() - t0, error=True)
+            raise
+        finally:
+            replica.end()
+        st.observe(replica.name, time.monotonic() - t0)
+        return result

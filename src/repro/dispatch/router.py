@@ -1,0 +1,106 @@
+"""Multi-backend routing (DESIGN.md §5).
+
+A :class:`Router` load-balances external calls across N registered backend
+*replicas* — anything implementing the ``repro.core.ai.Backend`` interface
+(a ``SimulatedBackend``, a ``LocalEngineBackend`` over a ``ServingEngine``,
+…).  Two policies:
+
+* ``weighted`` — smooth weighted round-robin (the nginx algorithm): each
+  pick adds every replica's weight to its current credit and selects the
+  max-credit replica, subtracting the total weight.  Deterministic, and the
+  long-run pick distribution matches the weights exactly.
+* ``least_outstanding`` — pick the replica with the fewest in-flight
+  requests, tie-broken by smooth-WRR credit so equal-load replicas still
+  interleave deterministically.
+
+The router only *selects*; in-flight accounting is transacted by the
+dispatcher via :meth:`Replica.begin` / :meth:`Replica.end`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(eq=False)
+class Replica:
+    """One registered backend replica plus its routing state.
+
+    ``eq=False``: replicas are identity objects — two replicas over equal
+    backends are still distinct routing targets, and value-equality would
+    deep-compare backend state on every lookup."""
+
+    backend: object
+    name: str
+    weight: float = 1.0
+    outstanding: int = 0
+    dispatched: int = 0
+    _credit: float = field(default=0.0, repr=False)
+
+    def resolve(self):
+        """The backend to call — overridable for late binding."""
+        return self.backend
+
+    def begin(self):
+        self.outstanding += 1
+        self.dispatched += 1
+
+    def end(self):
+        self.outstanding -= 1
+
+
+class Router:
+    def __init__(self, replicas: list[Replica]):
+        if not replicas:
+            raise ValueError("router needs at least one replica")
+        self.replicas = list(replicas)
+
+    def pick(self) -> Replica:
+        raise NotImplementedError
+
+
+class WeightedRouter(Router):
+    """Smooth weighted round-robin."""
+
+    def _wrr_pick(self, candidates: list[Replica]) -> Replica:
+        total = sum(r.weight for r in candidates)
+        for r in candidates:
+            r._credit += r.weight
+        best = max(candidates, key=lambda r: r._credit)
+        best._credit -= total
+        return best
+
+    def pick(self) -> Replica:
+        return self._wrr_pick(self.replicas)
+
+
+class LeastOutstandingRouter(WeightedRouter):
+    """Pick the least-loaded replica; ties resolve by smooth WRR."""
+
+    def pick(self) -> Replica:
+        low = min(r.outstanding for r in self.replicas)
+        return self._wrr_pick(
+            [r for r in self.replicas if r.outstanding == low])
+
+
+POLICIES = {
+    "weighted": WeightedRouter,
+    "least_outstanding": LeastOutstandingRouter,
+}
+
+
+def make_router(backends, *, policy="least_outstanding", weights=None,
+                names=None) -> Router:
+    """Build a router over ``backends`` (a list of Backend instances)."""
+    if policy not in POLICIES:
+        raise ValueError(
+            f"unknown routing policy {policy!r}; one of {sorted(POLICIES)}")
+    n = len(backends)
+    weights = list(weights) if weights is not None else [1.0] * n
+    if len(weights) != n:
+        raise ValueError("len(weights) must match len(backends)")
+    names = list(names) if names is not None else [
+        f"backend{i}" for i in range(n)]
+    replicas = [Replica(backend=b, name=nm, weight=w)
+                for b, nm, w in zip(backends, names, weights)]
+    return POLICIES[policy](replicas)

@@ -1,0 +1,159 @@
+"""Dispatch observability surface.
+
+Counters and latency digests for the dispatch subsystem (DESIGN.md §5):
+cache hit rate, in-flight coalescing, retries, hedges and hedge wins,
+admission queue depth, and per-backend latency percentiles.  Consumed by
+``benchmarks/fig9_dispatch.py`` and by the serving example's end-of-run
+report.  Everything is plain counters updated from the event loop — no
+locks needed under asyncio's single-threaded execution.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+class LatencyDigest:
+    """Bounded reservoir of latency samples with percentile queries.
+
+    Keeps the most recent ``maxlen`` samples (enough for p99 at benchmark
+    scales; a production deployment would swap in t-digest without changing
+    the surface).
+    """
+
+    def __init__(self, maxlen: int = 8192):
+        self.maxlen = maxlen
+        self.samples: list[float] = []
+        self.count = 0
+        self.total_s = 0.0
+
+    def add(self, seconds: float):
+        self.count += 1
+        self.total_s += seconds
+        self.samples.append(seconds)
+        if len(self.samples) > self.maxlen:
+            del self.samples[: len(self.samples) - self.maxlen]
+
+    def percentile(self, q: float) -> float:
+        if not self.samples:
+            return 0.0
+        s = sorted(self.samples)
+        idx = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
+        return s[idx]
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99.0)
+
+    @property
+    def mean(self) -> float:
+        return self.total_s / self.count if self.count else 0.0
+
+
+@dataclass
+class BackendStats:
+    """Per-replica counters."""
+
+    requests: int = 0
+    errors: int = 0
+    outstanding_peak: int = 0
+    latency: LatencyDigest = field(default_factory=LatencyDigest)
+
+
+class DispatchStats:
+    """Aggregated counters for one Dispatcher."""
+
+    def __init__(self):
+        self.requests = 0           # client-visible calls entering dispatch
+        self.dispatched = 0         # calls actually sent to a backend
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.disk_hits = 0
+        self.coalesced = 0          # joined an identical in-flight request
+        self.retries = 0
+        self.hedges = 0             # duplicate requests launched
+        self.hedge_wins = 0         # a hedge finished before the primary
+        self.rejected = 0           # admission queue overflow
+        self.queue_depth = 0        # currently waiting on admission
+        self.queue_peak = 0
+        self.per_backend: dict[str, BackendStats] = {}
+
+    # -- event hooks ---------------------------------------------------------
+
+    def backend(self, name: str) -> BackendStats:
+        bs = self.per_backend.get(name)
+        if bs is None:
+            bs = self.per_backend[name] = BackendStats()
+        return bs
+
+    def enqueue(self):
+        self.queue_depth += 1
+        self.queue_peak = max(self.queue_peak, self.queue_depth)
+
+    def dequeue(self):
+        self.queue_depth -= 1
+
+    def observe(self, name: str, seconds: float, *, error: bool = False):
+        bs = self.backend(name)
+        bs.requests += 1
+        if error:
+            bs.errors += 1
+        else:
+            bs.latency.add(seconds)
+
+    # -- reporting -----------------------------------------------------------
+
+    @property
+    def hit_rate(self) -> float:
+        looked = self.cache_hits + self.cache_misses
+        return self.cache_hits / looked if looked else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "requests": self.requests,
+            "dispatched": self.dispatched,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "disk_hits": self.disk_hits,
+            "hit_rate": self.hit_rate,
+            "coalesced": self.coalesced,
+            "retries": self.retries,
+            "hedges": self.hedges,
+            "hedge_wins": self.hedge_wins,
+            "rejected": self.rejected,
+            "queue_peak": self.queue_peak,
+            "backends": {
+                name: {
+                    "requests": bs.requests,
+                    "errors": bs.errors,
+                    "outstanding_peak": bs.outstanding_peak,
+                    "p50_s": bs.latency.p50,
+                    "p99_s": bs.latency.p99,
+                    "mean_s": bs.latency.mean,
+                }
+                for name, bs in self.per_backend.items()
+            },
+        }
+
+    def report(self) -> str:
+        snap = self.snapshot()
+        lines = [
+            f"dispatch: {snap['requests']} requests, "
+            f"{snap['dispatched']} dispatched, "
+            f"hit rate {snap['hit_rate']:.0%} "
+            f"({snap['cache_hits']} hits / {snap['coalesced']} coalesced / "
+            f"{snap['disk_hits']} disk), "
+            f"{snap['retries']} retries, "
+            f"{snap['hedges']} hedges ({snap['hedge_wins']} wins), "
+            f"queue peak {snap['queue_peak']}"
+        ]
+        for name, bs in snap["backends"].items():
+            lines.append(
+                f"  {name}: {bs['requests']} reqs, {bs['errors']} errors, "
+                f"p50 {bs['p50_s'] * 1e3:.1f}ms p99 {bs['p99_s'] * 1e3:.1f}ms, "
+                f"peak in-flight {bs['outstanding_peak']}")
+        return "\n".join(lines)

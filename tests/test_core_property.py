@@ -6,7 +6,10 @@ system-level invariant of paper Prop. 1."""
 import asyncio
 import textwrap
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     equivalent,

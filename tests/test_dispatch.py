@@ -1,0 +1,441 @@
+"""repro.dispatch tests: routing policies, admission backpressure, cache
+hit/coalescing determinism, retry/hedge reliability under injected
+failures, and the differential invariant — dispatch preserves results and
+trace equivalence vs. direct backend calls and vs. sequential_mode()."""
+
+import asyncio
+import time
+
+import pytest
+
+from repro.core import equivalent, poppy, recording, sequential_mode
+from repro.core.ai import (
+    Backend,
+    SimulatedBackend,
+    embed,
+    llm,
+    use_backend,
+    use_dispatcher,
+)
+from repro.dispatch import (
+    AdmissionPolicy,
+    AdmissionRejected,
+    Dispatcher,
+    HedgePolicy,
+    ResultCache,
+    RetryPolicy,
+    TokenBucket,
+    make_router,
+)
+
+
+def fast_backend(**kw):
+    return SimulatedBackend(time_scale=0.02, **kw)
+
+
+async def gen(d, prompt, **kw):
+    kw.setdefault("max_tokens", 8)
+    kw.setdefault("temperature", 0.0)
+    kw.setdefault("stop", None)
+    return await d.generate(prompt, **kw)
+
+
+# -- injected-failure / injected-latency backends ---------------------------
+
+
+class FlakyBackend(Backend):
+    """Fails the first ``fail_first`` generate calls, then succeeds."""
+
+    def __init__(self, fail_first, inner=None):
+        self.fail_first = fail_first
+        self.inner = inner or fast_backend()
+        self.attempts = 0
+
+    async def generate(self, prompt, *, max_tokens, temperature, stop):
+        self.attempts += 1
+        if self.attempts <= self.fail_first:
+            await asyncio.sleep(0.005)    # fail like a network call: late
+            raise ConnectionError(f"injected failure #{self.attempts}")
+        return await self.inner.generate(
+            prompt, max_tokens=max_tokens, temperature=temperature,
+            stop=stop)
+
+    async def embed(self, text):
+        return await self.inner.embed(text)
+
+
+class StragglerBackend(Backend):
+    """Deterministic straggler: every call stalls ``stall_s``."""
+
+    def __init__(self, stall_s, inner=None):
+        self.stall_s = stall_s
+        self.inner = inner or fast_backend()
+        self.calls = 0
+
+    async def generate(self, prompt, *, max_tokens, temperature, stop):
+        self.calls += 1
+        await asyncio.sleep(self.stall_s)
+        return await self.inner.generate(
+            prompt, max_tokens=max_tokens, temperature=temperature,
+            stop=stop)
+
+    async def embed(self, text):
+        await asyncio.sleep(self.stall_s)
+        return await self.inner.embed(text)
+
+
+# -- routing ----------------------------------------------------------------
+
+
+def test_weighted_router_distribution():
+    r = make_router(["a", "b"], policy="weighted", weights=[3, 1])
+    picks = [r.pick().backend for _ in range(40)]
+    assert picks.count("a") == 30 and picks.count("b") == 10
+    # smooth WRR interleaves rather than bursting
+    assert picks[:4].count("a") == 3
+
+
+def test_least_outstanding_prefers_idle():
+    r = make_router(["a", "b"], policy="least_outstanding")
+    ra = r.pick()
+    ra.begin()                      # a now has one in flight
+    assert r.pick().backend != ra.backend
+    ra.end()
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        make_router(["a"], policy="round_trip")
+
+
+def test_dispatcher_balances_replicas():
+    b1, b2 = fast_backend(), fast_backend()
+    d = Dispatcher([b1, b2])
+
+    async def go():
+        await asyncio.gather(*[gen(d, f"p{i}") for i in range(8)])
+
+    asyncio.run(go())
+    assert len(b1.calls) == len(b2.calls) == 4
+
+
+# -- admission control ------------------------------------------------------
+
+
+def test_concurrency_cap_backpressure():
+    be = fast_backend()
+    d = Dispatcher([be], admission=AdmissionPolicy(max_concurrency=2))
+
+    async def go():
+        return await asyncio.gather(*[gen(d, f"p{i}") for i in range(10)])
+
+    outs = asyncio.run(go())
+    assert be.max_in_flight <= 2          # the burst was bounded
+    assert len(be.calls) == 10            # ...but everything ran
+    direct = [asyncio.run(gen(fast_backend(), f"p{i}")) for i in range(10)]
+    assert outs == direct                 # and results are unchanged
+
+
+def test_token_bucket_paces_requests():
+    async def go():
+        tb = TokenBucket(rate=200.0, burst=1)
+        t0 = time.monotonic()
+        for _ in range(5):
+            await tb.acquire()
+        return time.monotonic() - t0
+
+    # 5 acquires at 200/s with burst 1 ⇒ ≥ 4 inter-token waits of 5 ms
+    assert asyncio.run(go()) >= 4 * (1 / 200.0) * 0.8
+
+
+def test_admission_queue_overflow_sheds_load():
+    be = StragglerBackend(0.2)
+    d = Dispatcher([be], admission=AdmissionPolicy(
+        max_concurrency=1, max_queue=2))
+
+    async def go():
+        return await asyncio.gather(
+            *[gen(d, f"p{i}") for i in range(6)], return_exceptions=True)
+
+    outs = asyncio.run(go())
+    rejected = [o for o in outs if isinstance(o, AdmissionRejected)]
+    assert rejected and d.stats.rejected == len(rejected)
+    assert any(isinstance(o, str) for o in outs)   # the admitted ones ran
+
+
+# -- cache + coalescing -----------------------------------------------------
+
+
+def test_cache_hit_is_deterministic():
+    be = fast_backend()
+    d = Dispatcher([be], cache=True)
+
+    async def go():
+        a = await gen(d, "same prompt")
+        b = await gen(d, "same prompt")
+        return a, b
+
+    a, b = asyncio.run(go())
+    assert a == b
+    assert len(be.calls) == 1
+    assert d.stats.cache_hits == 1 and d.stats.cache_misses == 1
+
+
+def test_cache_key_separates_params():
+    be = fast_backend()
+    d = Dispatcher([be], cache=True)
+
+    async def go():
+        a = await gen(d, "p", max_tokens=4)
+        b = await gen(d, "p", max_tokens=6)
+        return a, b
+
+    asyncio.run(go())
+    assert len(be.calls) == 2             # different params ⇒ different key
+
+
+def test_inflight_coalescing():
+    be = fast_backend()
+    d = Dispatcher([be], cache=True)
+
+    async def go():
+        return await asyncio.gather(*[gen(d, "dup") for _ in range(8)])
+
+    outs = asyncio.run(go())
+    assert len(set(outs)) == 1
+    assert len(be.calls) == 1             # one dispatch served all eight
+    assert d.stats.coalesced == 7
+
+
+def test_coalesced_failure_propagates():
+    be = FlakyBackend(fail_first=100)     # always fails
+    d = Dispatcher([be], cache=True)
+
+    async def go():
+        return await asyncio.gather(
+            *[gen(d, "dup") for _ in range(4)], return_exceptions=True)
+
+    outs = asyncio.run(go())
+    assert all(isinstance(o, ConnectionError) for o in outs)
+    assert be.attempts == 1               # failure shared, not re-dispatched
+
+    async def retry_after_failure():
+        return await gen(d, "dup")
+
+    # failures are not cached: a later call dispatches again
+    with pytest.raises(ConnectionError):
+        asyncio.run(retry_after_failure())
+    assert be.attempts == 2
+
+
+def test_disk_cache_survives_dispatcher_restart(tmp_path):
+    be1 = fast_backend()
+    d1 = Dispatcher([be1], cache=dict(disk_dir=tmp_path))
+
+    async def first():
+        return await gen(d1, "persist me"), await d1.embed("vec")
+
+    g1, e1 = asyncio.run(first())
+    assert isinstance(e1, tuple)
+
+    be2 = fast_backend()
+    d2 = Dispatcher([be2], cache=dict(disk_dir=tmp_path))   # fresh process
+
+    async def second():
+        return await gen(d2, "persist me"), await d2.embed("vec")
+
+    g2, e2 = asyncio.run(second())
+    assert (g1, e1) == (g2, e2)
+    assert isinstance(e2, tuple)          # tuple type survives JSON round-trip
+    assert len(be2.calls) == 0            # served entirely from disk
+    assert d2.stats.disk_hits == 2
+
+
+def test_sampled_completions_bypass_cache():
+    """temperature > 0 means independent draws — never served from cache."""
+    be = fast_backend()
+    d = Dispatcher([be], cache=True)
+
+    async def go():
+        await gen(d, "sample me", temperature=0.8)
+        await gen(d, "sample me", temperature=0.8)
+        await gen(d, "sample me")             # temperature 0: cacheable
+        await gen(d, "sample me")
+        return len(be.calls)
+
+    assert asyncio.run(go()) == 3             # 2 sampled + 1 greedy
+    assert d.stats.cache_hits == 1
+
+
+def test_coalesced_waiter_survives_primary_cancellation():
+    """Cancelling the first (primary) request must not poison coalesced
+    waiters of the same key — they re-dispatch."""
+    be = fast_backend()
+    d = Dispatcher([be], cache=True)
+
+    async def go():
+        primary = asyncio.ensure_future(gen(d, "shared"))
+        await asyncio.sleep(0.001)            # let it dispatch
+        waiter = asyncio.ensure_future(gen(d, "shared"))
+        await asyncio.sleep(0.001)            # let it coalesce
+        primary.cancel()
+        return await waiter
+
+    out = asyncio.run(go())
+    assert out == asyncio.run(gen(fast_backend(), "shared"))
+
+
+def test_admission_controller_instance_stays_per_replica():
+    """Passing a pre-built AdmissionController must not silently share one
+    gate across replicas — its policy is applied per backend."""
+    from repro.dispatch import AdmissionController
+    b1, b2 = fast_backend(), fast_backend()
+    ctl = AdmissionController(AdmissionPolicy(max_concurrency=2))
+    d = Dispatcher([b1, b2], admission=ctl)
+
+    async def go():
+        await asyncio.gather(*[gen(d, f"p{i}") for i in range(12)])
+
+    asyncio.run(go())
+    assert b1.max_in_flight <= 2 and b2.max_in_flight <= 2
+    # per-replica (not global) cap: both replicas were saturated at once
+    assert b1.max_in_flight + b2.max_in_flight == 4
+
+
+def test_lru_eviction():
+    be = fast_backend()
+    d = Dispatcher([be], cache=ResultCache(capacity=2))
+
+    async def go():
+        await gen(d, "a")
+        await gen(d, "b")
+        await gen(d, "c")                 # evicts "a"
+        await gen(d, "a")                 # miss again
+        return len(be.calls)
+
+    assert asyncio.run(go()) == 4
+
+
+# -- reliability ------------------------------------------------------------
+
+
+def test_retry_recovers_from_transient_failures():
+    be = FlakyBackend(fail_first=2)
+    d = Dispatcher([be], retry=RetryPolicy(max_attempts=4, base_s=0.001))
+    out = asyncio.run(gen(d, "flaky"))
+    assert isinstance(out, str)
+    assert be.attempts == 3
+    assert d.stats.retries == 2
+
+
+def test_retry_exhaustion_raises():
+    be = FlakyBackend(fail_first=10)
+    d = Dispatcher([be], retry=RetryPolicy(max_attempts=3, base_s=0.001))
+    with pytest.raises(ConnectionError):
+        asyncio.run(gen(d, "flaky"))
+    assert be.attempts == 3
+
+
+def test_backoff_jitter_is_deterministic():
+    from repro.dispatch.reliability import backoff_s
+    p = RetryPolicy(base_s=0.1, jitter_frac=0.3)
+    assert backoff_s(p, 1, "k") == backoff_s(p, 1, "k")
+    assert backoff_s(p, 1, "k") != backoff_s(p, 2, "k")
+    assert backoff_s(p, 2, "k") <= p.max_backoff_s * (1 + p.jitter_frac)
+
+
+def test_hedge_beats_straggler():
+    slow = StragglerBackend(0.5)
+    fast = fast_backend()
+    d = Dispatcher([slow, fast], policy="least_outstanding",
+                   hedge=HedgePolicy(delay_s=0.05))
+
+    async def go():
+        t0 = time.monotonic()
+        out = await gen(d, "straggler")
+        return out, time.monotonic() - t0
+
+    out, dt = asyncio.run(go())
+    # hedge fired, re-routed to the idle fast replica, and won
+    assert d.stats.hedges >= 1 and d.stats.hedge_wins >= 1
+    assert dt < 0.5
+    assert out == asyncio.run(gen(fast_backend(), "straggler"))
+
+
+def test_hedge_result_matches_unhedged():
+    b1, b2 = fast_backend(), fast_backend()
+    d = Dispatcher([b1, b2], hedge=HedgePolicy(delay_s=0.001, max_hedges=1))
+
+    async def go():
+        return await asyncio.gather(*[gen(d, f"h{i}") for i in range(6)])
+
+    outs = asyncio.run(go())
+    direct = [asyncio.run(gen(fast_backend(), f"h{i}")) for i in range(6)]
+    assert outs == direct                 # duplicates never change results
+
+
+# -- differential: dispatch preserves PopPy semantics -----------------------
+
+
+@poppy
+def fanout_app(n):
+    summaries = tuple()
+    for i in range(n):
+        s = llm(f"summarize shard {i % 3}", max_tokens=8)
+        summaries += (s,)
+    e = embed("query")
+    combined = llm(f"combine: {summaries} {e[0]:.3f}", max_tokens=12)
+    return combined
+
+
+def test_default_dispatch_is_transparent():
+    """Single backend, cache off ⇒ identical results and call counts to the
+    pre-dispatch behavior (the zero-behavior-change guarantee)."""
+    be1 = fast_backend()
+    with use_backend(be1), recording() as tr1:
+        r1 = fanout_app(6)
+    be2 = fast_backend()
+    with use_backend(be2), sequential_mode(), recording() as tr2:
+        r2 = fanout_app(6)
+    assert r1 == r2
+    assert be1.calls and len(be1.calls) == len(be2.calls)
+    ok, why = equivalent(tr1, tr2)
+    assert ok, why
+
+
+def test_dispatch_preserves_sequential_semantics():
+    """Full production config (2 replicas, cache, admission, hedging) still
+    returns exactly what sequential_mode() over a direct backend returns,
+    and cache hits are trace-equivalent to misses."""
+    direct = fast_backend()
+    with use_backend(direct), sequential_mode():
+        expect = fanout_app(6)
+
+    d = Dispatcher([fast_backend(), fast_backend()],
+                   cache=True,
+                   admission=AdmissionPolicy(max_concurrency=4,
+                                             rate=2000.0, burst=8),
+                   retry=RetryPolicy(max_attempts=2, base_s=0.001),
+                   hedge=HedgePolicy(delay_s=0.5))
+    with use_dispatcher(d), recording() as tr_cold:
+        r_cold = fanout_app(6)           # cold cache: all misses
+    with use_dispatcher(d), recording() as tr_warm:
+        r_warm = fanout_app(6)           # warm cache: all hits
+
+    assert r_cold == expect and r_warm == expect
+    ok, why = equivalent(tr_cold, tr_warm)
+    assert ok, f"cache hits not trace-equivalent to misses: {why}"
+    assert d.stats.hit_rate > 0
+
+    # and under sequential_mode through the same dispatcher
+    with use_dispatcher(d), sequential_mode():
+        assert fanout_app(6) == expect
+
+
+def test_dispatcher_nests_as_backend():
+    """A Dispatcher satisfies the Backend interface, so it can itself be a
+    replica of an outer Dispatcher (hierarchical routing)."""
+    inner = Dispatcher([fast_backend()], cache=True)
+    outer = Dispatcher([inner])
+    out = asyncio.run(gen(outer, "nested"))
+    assert out == asyncio.run(gen(fast_backend(), "nested"))
