@@ -8,8 +8,10 @@ from __future__ import annotations
 import statistics
 import time
 
+import contextlib
+
 from repro.core import equivalent, recording, sequential_mode
-from repro.core.ai import SimulatedBackend, use_backend
+from repro.core.ai import SimulatedBackend, use_backend, use_sync_clients
 from repro.core.registry import force_sequential_annotations
 
 # latency model reported in EXPERIMENTS.md: base 30 ms + 2 ms/token with
@@ -23,9 +25,13 @@ def make_backend(scale=1.0):
     return SimulatedBackend(time_scale=scale, **DEFAULT_BACKEND)
 
 
-def run_once(run_fn, arg, *, mode, scale=1.0):
+def run_once(run_fn, arg, *, mode, scale=1.0, sync_externals=False):
+    """``sync_externals=True`` swaps the async AI components for their
+    blocking twins (real-world sync-SDK case): the plain baseline blocks on
+    every call and PopPy overlaps them on the offload executor."""
     be = make_backend(scale)
-    with use_backend(be), recording() as tr:
+    clients = use_sync_clients() if sync_externals else contextlib.nullcontext()
+    with use_backend(be), clients, recording() as tr:
         t0 = time.perf_counter()
         if mode == "plain":
             with sequential_mode():
@@ -39,13 +45,16 @@ def run_once(run_fn, arg, *, mode, scale=1.0):
     return result, dt, tr, be
 
 
-def bench_app(run_fn, arg=None, *, trials=3, scale=1.0, check=True):
+def bench_app(run_fn, arg=None, *, trials=3, scale=1.0, check=True,
+              sync_externals=False):
     """Returns dict with median plain/poppy times, speedup, #llm calls."""
     plain_times, poppy_times = [], []
     n_calls = 0
     for t in range(trials):
-        r1, dt1, tr1, be1 = run_once(run_fn, arg, mode="plain", scale=scale)
-        r2, dt2, tr2, be2 = run_once(run_fn, arg, mode="poppy", scale=scale)
+        r1, dt1, tr1, be1 = run_once(run_fn, arg, mode="plain", scale=scale,
+                                     sync_externals=sync_externals)
+        r2, dt2, tr2, be2 = run_once(run_fn, arg, mode="poppy", scale=scale,
+                                     sync_externals=sync_externals)
         plain_times.append(dt1)
         poppy_times.append(dt2)
         n_calls = len(be1.calls)

@@ -1,6 +1,15 @@
 """Fig. 5: median speedup of PopPy over standard Python execution for the
 five literature apps and the CaMeL suite (LLM-calling programs).  Every
-trial also asserts result equality and ≡_A trace equivalence."""
+trial also asserts result equality and ≡_A trace equivalence.
+
+Two external-client modes:
+
+* async (default) — components are ``async def`` clients awaited on the
+  engine loop (the paper's setting).
+* sync (``sync_externals=True`` / ``--sync``) — the same unmodified apps
+  run against *blocking* clients (the real-world ``openai``/``requests``
+  case); parallelism comes from the engine's executor-offload layer.
+"""
 
 from __future__ import annotations
 
@@ -10,22 +19,26 @@ from pathlib import Path
 from benchmarks.common import all_apps, bench_app
 
 
-def run(out_dir="experiments/apps", trials=3, scale=1.0, camel_count=30):
+def run(out_dir="experiments/apps", trials=3, scale=1.0, camel_count=30,
+        sync_externals=False):
     from benchmarks.apps import camel
 
+    label = "sync" if sync_externals else "async"
     results = {}
     for name, fn, arg in all_apps():
-        r = bench_app(fn, arg, trials=trials, scale=scale)
+        r = bench_app(fn, arg, trials=trials, scale=scale,
+                      sync_externals=sync_externals)
         results[name] = r
         print(f"{name:8s} plain {r['plain_s']:.3f}s  poppy "
               f"{r['poppy_s']:.3f}s  speedup {r['speedup']:.2f}×  "
-              f"({r['llm_calls']} llm calls)", flush=True)
+              f"({r['llm_calls']} llm calls, {label} clients)", flush=True)
 
     camel_speedups = []
     for key in list(camel.PROGRAMS)[:camel_count]:
         if not camel.makes_llm_calls(key):
             continue  # Fig. 5 includes only LLM-calling CaMeL programs
-        r = bench_app(camel.run, key, trials=max(trials - 1, 1), scale=scale)
+        r = bench_app(camel.run, key, trials=max(trials - 1, 1), scale=scale,
+                      sync_externals=sync_externals)
         results[f"CaMeL-{key}"] = r
         camel_speedups.append(r["speedup"])
         print(f"{key:8s} plain {r['plain_s']:.3f}s  poppy "
@@ -38,16 +51,25 @@ def run(out_dir="experiments/apps", trials=3, scale=1.0, camel_count=30):
         geo *= s
     geo **= 1.0 / len(speedups)
     summary = {"geomean": geo, "min": min(speedups), "max": max(speedups),
-               "n_programs": len(speedups)}
-    print(f"\nspeedup geomean {geo:.2f}×  min {summary['min']:.2f}×  "
-          f"max {summary['max']:.2f}×  over {len(speedups)} programs")
+               "n_programs": len(speedups), "clients": label}
+    print(f"\n[{label} clients] speedup geomean {geo:.2f}×  "
+          f"min {summary['min']:.2f}×  max {summary['max']:.2f}×  "
+          f"over {len(speedups)} programs")
 
     out = Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
-    (out / "fig5.json").write_text(json.dumps(
+    name = "fig5_sync.json" if sync_externals else "fig5.json"
+    (out / name).write_text(json.dumps(
         {"results": results, "summary": summary}, indent=1))
     return results, summary
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sync", action="store_true",
+                    help="run with blocking (sync-SDK) external clients")
+    ap.add_argument("--trials", type=int, default=3)
+    args = ap.parse_args()
+    run(trials=args.trials, sync_externals=args.sync)

@@ -1,7 +1,8 @@
 """Benchmark harness entry point — one benchmark per paper table/figure:
 
     Table 1  program characteristics       table1_characteristics
-    Fig. 5   PopPy vs Python speedups      fig5_speedup
+    Fig. 5   PopPy vs Python speedups      fig5_speedup (async + sync clients)
+    Fig. 10  blocking-external offload     fig10_sync_offload
     Fig. 6   ToT execution trace           fig6_trace
     Fig. 7   interpreter overhead          fig7_overhead
     Fig. 8   parallelism scaling           fig8_scaling
@@ -33,7 +34,8 @@ def main():
     t0 = time.time()
 
     from benchmarks import (fig5_speedup, fig6_trace, fig7_overhead,
-                            fig8_scaling, table1_characteristics)
+                            fig8_scaling, fig10_sync_offload,
+                            table1_characteristics)
 
     print("=" * 72)
     print("Table 1 — benchmark program characteristics")
@@ -45,6 +47,17 @@ def main():
     print("=" * 72)
     fig5_speedup.run(trials=trials,
                      camel_count=6 if args.quick else 30)
+
+    print("\n" + "=" * 72)
+    print("Fig. 5 (sync clients) — same apps, blocking SDK externals")
+    print("=" * 72)
+    fig5_speedup.run(trials=trials, camel_count=6 if args.quick else 30,
+                     sync_externals=True)
+
+    print("\n" + "=" * 72)
+    print("Fig. 10 — executor offload: overlap of blocking externals")
+    print("=" * 72)
+    fig10_sync_offload.run(trials=trials)
 
     print("\n" + "=" * 72)
     print("Fig. 6 — ToT execution trace (queue → dispatch → resolve)")

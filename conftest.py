@@ -1,7 +1,64 @@
 import pathlib
+import signal
 import sys
+import threading
+
+import pytest
 
 _root = pathlib.Path(__file__).parent
 for _p in (str(_root), str(_root / "src")):
     if _p not in sys.path:
         sys.path.insert(0, _p)
+
+# ---------------------------------------------------------------------------
+# per-test timeout
+#
+# The runtime is lock-protocol code: a regression deadlocks instead of
+# failing.  CI installs pytest-timeout (see pyproject [tool.pytest.ini_options]
+# ``timeout``); when it isn't available (e.g. a minimal local env) a SIGALRM
+# fallback enforces the same ini option so a wedged test dies with a
+# traceback rather than hanging the whole run.
+
+try:
+    import pytest_timeout  # noqa: F401
+    _HAVE_PYTEST_TIMEOUT = True
+except ImportError:
+    _HAVE_PYTEST_TIMEOUT = False
+
+
+def pytest_addoption(parser):
+    if not _HAVE_PYTEST_TIMEOUT:
+        parser.addini("timeout", "per-test timeout in seconds "
+                                 "(fallback shim for pytest-timeout)",
+                      default="0")
+        parser.addini("timeout_method", "accepted for pytest-timeout "
+                                        "compatibility; the fallback always "
+                                        "uses SIGALRM", default="signal")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    if _HAVE_PYTEST_TIMEOUT:
+        yield
+        return
+    try:
+        seconds = float(item.config.getini("timeout") or 0)
+    except (TypeError, ValueError):
+        seconds = 0.0
+    if (seconds <= 0 or not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        yield
+        return
+
+    def on_alarm(signum, frame):
+        raise TimeoutError(
+            f"test exceeded {seconds:.0f}s (fallback per-test timeout; "
+            f"likely a runtime deadlock — see conftest.py)")
+
+    old = signal.signal(signal.SIGALRM, on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old)

@@ -24,6 +24,7 @@ from .annotations import (  # noqa: F401
     sequential_mode,
     unordered,
 )
+from .engine import OffloadPolicy, current_offload_policy, offload_policy  # noqa: F401
 from .errors import (  # noqa: F401
     ExternalCallError,
     PoppyCompileError,
@@ -46,4 +47,5 @@ __all__ = [
     "PoppyUnboundLocalError", "ExternalCallError",
     "UNORDERED", "READONLY", "SEQUENTIAL", "register_immutable_type",
     "Trace", "recording", "equivalent",
+    "OffloadPolicy", "offload_policy", "current_offload_policy",
 ]

@@ -28,6 +28,7 @@ import asyncio
 import contextvars
 import hashlib
 import math
+import threading
 from dataclasses import dataclass, field
 
 from .annotations import sequential, unordered
@@ -87,25 +88,36 @@ class SimulatedBackend(Backend):
                  for i in range(n)]
         return " ".join(words)
 
+    # counter updates are lock-protected: with sync clients the backend is
+    # driven from the bridge loop's thread concurrently with the engine loop
+    _count_lock: threading.Lock = field(default_factory=threading.Lock,
+                                        repr=False)
+
+    def _enter(self, key):
+        with self._count_lock:
+            self._in_flight += 1
+            self.max_in_flight = max(self.max_in_flight, self._in_flight)
+            self.calls.append(key)
+
+    def _exit(self):
+        with self._count_lock:
+            self._in_flight -= 1
+
     async def generate(self, prompt, *, max_tokens, temperature, stop):
         n_out = min(max_tokens, 1 + self._digest(prompt) % 7)
-        self._in_flight += 1
-        self.max_in_flight = max(self.max_in_flight, self._in_flight)
-        self.calls.append(prompt)
+        self._enter(prompt)
         try:
             await asyncio.sleep(self.latency(prompt, n_out))
         finally:
-            self._in_flight -= 1
+            self._exit()
         return self.response(prompt, max_tokens)
 
     async def embed(self, text):
-        self._in_flight += 1
-        self.max_in_flight = max(self.max_in_flight, self._in_flight)
-        self.calls.append(text)
+        self._enter(text)
         try:
             await asyncio.sleep(self.base_s * self.time_scale)
         finally:
-            self._in_flight -= 1
+            self._exit()
         d = self._digest(text)
         return tuple(
             math.sin((d % 997) * (i + 1) / 97.0) for i in range(8))
@@ -215,12 +227,145 @@ async def http(url: str, payload=None) -> str:
         f"{url}::{payload}", max_tokens=32, temperature=0.0, stop=None)
 
 
-# console output must stay in program order
-console_print = sequential(print)
+# ---------------------------------------------------------------------------
+# blocking (sync-SDK) components
+#
+# The dominant real-world client is *synchronous* — classic ``openai``,
+# ``requests``.  These components model that case: they block their calling
+# thread until the response arrives.  Under the opportunistic engine they
+# are dispatched on the runtime's offload executor (engine.OffloadPolicy),
+# so N independent blocking calls overlap N-way; under standard sequential
+# Python they simply block, the paper's baseline.
+#
+# Internally each blocking call drives the ambient async Dispatcher on a
+# single shared *bridge* event loop owned by a daemon thread.  One loop for
+# all worker threads keeps the dispatcher's loop-bound state (admission
+# semaphores, coalescing futures, hedge tasks) on one loop — the
+# thread-safe path from any worker thread into ``repro.dispatch``.
+#
+# Restriction: a *configured* dispatcher with loop-bound state (admission
+# ``max_concurrency``, caching) must be driven from one loop only — use
+# either the async components (engine loop) or the sync ones (bridge loop)
+# with it, not both in the same program.  The trivial/default dispatcher
+# and stateless configurations (routing, retries) mix freely.
+
+
+class _BridgeLoop:
+    """Lazily-started daemon thread running the event loop that executes
+    dispatcher coroutines on behalf of blocking callers."""
+
+    _singleton = None
+    _singleton_lock = threading.Lock()
+
+    def __init__(self):
+        self.loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(
+            target=self.loop.run_forever, name="poppy-ai-bridge", daemon=True)
+        self._thread.start()
+
+    @classmethod
+    def get(cls) -> "_BridgeLoop":
+        with cls._singleton_lock:
+            if cls._singleton is None:
+                cls._singleton = cls()
+            return cls._singleton
+
+    def run(self, make_coro):
+        """Run ``make_coro()`` on the bridge loop, blocking the calling
+        thread until it completes.  The caller's context is re-established
+        inside the bridge task so ambient state (``use_backend``,
+        ``use_dispatcher``, the current trace) resolves as at the call site.
+        """
+        ctx = contextvars.copy_context()
+
+        async def runner():
+            for var in ctx:  # adopt the caller's context, task-locally
+                var.set(ctx[var])
+            return await make_coro()
+
+        return asyncio.run_coroutine_threadsafe(runner(), self.loop).result()
+
+
+def run_blocking(make_coro):
+    """Drive an async dispatcher call to completion from any thread (the
+    sync-client bridge).  Raises if called on a thread whose event loop is
+    running — blocking a live loop is the exact serialization bug the
+    offload layer exists to avoid."""
+    try:
+        asyncio.get_running_loop()
+    except RuntimeError:
+        return _BridgeLoop.get().run(make_coro)
+    raise RuntimeError(
+        "blocking component called on a running event loop; use the async "
+        "component (llm/embed/http) here, or let the engine offload this "
+        "call to a worker thread")
+
+
+@unordered
+def llm_sync(prompt: str, *, max_tokens: int = 64, temperature: float = 0.0,
+             stop=None) -> str:
+    """Blocking LLM completion (the classic sync-SDK client).  @unordered:
+    under the engine it runs on the offload executor, so independent calls
+    overlap exactly like their async twins."""
+    return run_blocking(lambda: get_dispatcher().generate(
+        prompt, max_tokens=max_tokens, temperature=temperature, stop=stop))
+
+
+@unordered
+def embed_sync(text: str) -> tuple:
+    """Blocking text-embedding call."""
+    return run_blocking(lambda: get_dispatcher().embed(text))
+
+
+@unordered
+def http_sync(url: str, payload=None) -> str:
+    """Blocking HTTP method (the ``requests`` case)."""
+    return run_blocking(lambda: get_dispatcher().generate(
+        f"{url}::{payload}", max_tokens=32, temperature=0.0, stop=None))
+
+
+class use_sync_clients:
+    """Swap the async components (``llm``/``embed``/``http``) for their
+    blocking twins for the duration of the context — *both* under standard
+    sequential Python and under the engine (the annotation wrappers resolve
+    their dispatch target per call).
+
+    This is how the benchmarks run an unmodified app in "sync-external"
+    mode: same program, same prompts, but every component call blocks its
+    thread like a real sync SDK.  Swapping is process-global (it rebinds
+    the wrappers' dispatch targets), so don't nest it with concurrent runs
+    that need async clients.
+    """
+
+    _PAIRS = None  # built lazily: [(async_wrapper, blocking_inner), ...]
+
+    def __enter__(self):
+        pairs = use_sync_clients._PAIRS
+        if pairs is None:
+            pairs = use_sync_clients._PAIRS = [
+                (llm, llm_sync.__poppy_dispatch__),
+                (embed, embed_sync.__poppy_dispatch__),
+                (http, http_sync.__poppy_dispatch__),
+            ]
+        self._saved = [(w, w.__poppy_dispatch__) for w, _ in pairs]
+        for w, blocking in pairs:
+            w.__poppy_dispatch__ = blocking
+        return self
+
+    def __exit__(self, *exc):
+        for w, orig in self._saved:
+            w.__poppy_dispatch__ = orig
+        return False
+
+
+# console output must stay in program order; inline offload — a print is
+# far cheaper than a thread round-trip, and sequential locks serialize it
+# anyway
+console_print = sequential(print, offload="inline")
 console_print.__name__ = "console_print"
 
 
-@sequential
+@sequential(offload="inline")
 def log(*parts):
     """Ordered log sink (a sequential external, like the paper's print)."""
     print(*parts)

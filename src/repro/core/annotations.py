@@ -147,60 +147,73 @@ def _external(info_factory):
                 tr.record_direct(info.name, cls,
                                  args_repr=safe_repr((args, kwargs)))
 
-        if registry.is_async_callable(fn):
-            # Called under standard sequential Python (no event loop): drive
-            # the coroutine to completion — blocking-call semantics, the
-            # paper's baseline.  Called from async external code (a loop is
-            # running): return the coroutine to be awaited.  The engine never
-            # calls this wrapper; it dispatches __poppy_dispatch__ directly.
-            @functools.wraps(fn)
-            def wrapper(*args, **kwargs):
-                record(args, kwargs)
+        # The engine never calls this wrapper — it dispatches
+        # __poppy_dispatch__ directly.  The wrapper serves standard
+        # sequential Python, resolving its target *per call* so the dispatch
+        # target is swappable (ai.use_sync_clients swaps an async component
+        # for its blocking twin under both plain and PopPy execution).
+        # Async targets called with no loop running are driven to completion
+        # — blocking-call semantics, the paper's baseline; called from async
+        # external code (a loop is running) they return the coroutine to be
+        # awaited.
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            record(args, kwargs)
+            target = wrapper.__poppy_dispatch__
+            if registry.is_async_callable(target):
                 try:
                     asyncio.get_running_loop()
                 except RuntimeError:
-                    return asyncio.run(fn(*args, **kwargs))
-                return fn(*args, **kwargs)
-        else:
-            @functools.wraps(fn)
-            def wrapper(*args, **kwargs):
-                record(args, kwargs)
-                return fn(*args, **kwargs)
+                    return asyncio.run(target(*args, **kwargs))
+            return target(*args, **kwargs)
+
         wrapper.__poppy_external__ = info
         wrapper.__poppy_dispatch__ = fn
         return wrapper
     return deco
 
 
-def _static_info(cls_name):
+def _static_info(cls_name, offload=None):
     return lambda fn: registry.ExternalInfo(
-        cls=cls_name, name=registry.callable_name(fn))
+        cls=cls_name, name=registry.callable_name(fn), offload=offload)
 
 
-def unordered(fn):
+def _static_annotation(cls_name, fn, offload):
+    deco = _external(_static_info(cls_name, offload=offload))
+    return deco if fn is None else deco(fn)
+
+
+def unordered(fn=None, *, offload=None):
     """External call that may execute in any order (stateless externals,
-    pure operations on immutable data)."""
-    return _external(_static_info(registry.UNORDERED))(fn)
+    pure operations on immutable data).
+
+    ``offload`` picks where a *synchronous* external executes under the
+    engine: ``"thread"`` (the default for sync externals) dispatches it on
+    the runtime's thread-pool executor so blocking calls overlap;
+    ``"inline"`` keeps it on the event-loop thread (for cheap calls, or
+    thread-affine clients)."""
+    return _static_annotation(registry.UNORDERED, fn, offload)
 
 
-def readonly(fn):
+def readonly(fn=None, *, offload=None):
     """External call reorderable among other readonly calls but ordered with
     respect to sequential calls (reads of mutable state)."""
-    return _external(_static_info(registry.READONLY))(fn)
+    return _static_annotation(registry.READONLY, fn, offload)
 
 
-def sequential(fn):
+def sequential(fn=None, *, offload=None):
     """External call that must execute in original program order (mutation,
     I/O).  This is also the default for unannotated externals."""
-    return _external(_static_info(registry.SEQUENTIAL))(fn)
+    return _static_annotation(registry.SEQUENTIAL, fn, offload)
 
 
-def external(fn=None, *, classify):
+def external(fn=None, *, classify, offload=None):
     """External call with a *dynamic* classifier: ``classify(args, kwargs,
     fresh_mask) -> 'unordered'|'readonly'|'sequential'``."""
     def info_factory(f):
         return registry.ExternalInfo(classify=classify,
-                                     name=registry.callable_name(f))
+                                     name=registry.callable_name(f),
+                                     offload=offload)
     if fn is None:
         return _external(info_factory)
     return _external(info_factory)(fn)

@@ -63,17 +63,27 @@ async def invoke_external(rt, fn, pos, kw, ev):
     """Dispatch an external call with fully resolved arguments."""
     pos = [check_bound(await deep_resolve(a)) for a in pos]
     kw = {k: check_bound(await deep_resolve(v)) for k, v in kw.items()}
+    if rt.error is not None:
+        # a sibling already failed: the run is aborting — parking here (via
+        # cancellation) instead of dispatching preserves sequential
+        # semantics (plain Python would have terminated before this call)
+        raise asyncio.CancelledError
     if rt.trace is not None:
         rt.trace.dispatched(ev, args_repr=safe_repr((tuple(pos), kw)))
     target = unwrap_external(fn)
     try:
         if registry.is_async_callable(target):
             result = await target(*pos, **kw)
+        elif rt.offload_mode_for(fn) == "thread":
+            # blocking externals dispatch on the offload executor so
+            # independent calls overlap (real-world sync SDK clients)
+            result = await rt.run_sync(target, pos, kw)
         else:
-            # synchronous externals execute inline on the loop — the paper's
-            # single-interpreter semantics (§6.1); long-running calls should
-            # be async
+            # inline on the loop — the paper's single-interpreter dispatch
+            # (§6.1), right for cheap calls and thread-affine clients
             result = target(*pos, **kw)
+    except asyncio.CancelledError:
+        raise
     except Exception as e:
         raise ExternalCallError(registry.callable_name(fn), e) from e
     if rt.trace is not None:
@@ -109,24 +119,44 @@ async def external_controller(rt, fn, pos, kw, fresh, s_in, out_state: SeqState,
     if ev is not None:
         rt.trace.classified(ev, cls)
 
+    # Lock futures are resolved in a ``finally``: a failing call must not
+    # leave ``out_state`` unresolved, or every downstream controller parks
+    # on a lock nobody will ever release.  Failure is recorded on the
+    # runtime *before* the locks release (the ``except`` below runs first),
+    # so a sibling waking on a freed lock sees ``rt.error`` set and parks in
+    # ``invoke_external`` instead of dispatching an external that standard
+    # sequential Python would never have reached.
     if cls == UNORDERED:
         _chain_lock(s_in.f_r, out_state.f_r)
         _chain_lock(s_in.f_w, out_state.f_w)
         result = await invoke_external(rt, fn, pos, kw, ev)
         dfut.set_result(result)
     elif cls == READONLY:
-        await s_in.wait_r()
-        _resolve_lock(out_state.f_r)  # forward before dispatching
-        result = await invoke_external(rt, fn, pos, kw, ev)
-        dfut.set_result(result)
-        await s_in.wait_w()
-        _resolve_lock(out_state.f_w)
+        try:
+            await s_in.wait_r()
+            _resolve_lock(out_state.f_r)  # forward before dispatching
+            result = await invoke_external(rt, fn, pos, kw, ev)
+            dfut.set_result(result)
+            await s_in.wait_w()
+        except BaseException as e:
+            if not isinstance(e, asyncio.CancelledError):
+                rt.fail(e)
+            raise
+        finally:
+            _resolve_lock(out_state.f_r)
+            _resolve_lock(out_state.f_w)
     elif cls == SEQUENTIAL:
-        await s_in.wait_r()
-        await s_in.wait_w()
-        result = await invoke_external(rt, fn, pos, kw, ev)
-        dfut.set_result(result)
-        _resolve_lock(out_state.f_r)
-        _resolve_lock(out_state.f_w)
+        try:
+            await s_in.wait_r()
+            await s_in.wait_w()
+            result = await invoke_external(rt, fn, pos, kw, ev)
+            dfut.set_result(result)
+        except BaseException as e:
+            if not isinstance(e, asyncio.CancelledError):
+                rt.fail(e)
+            raise
+        finally:
+            _resolve_lock(out_state.f_r)
+            _resolve_lock(out_state.f_w)
     else:  # pragma: no cover
         raise PoppyRuntimeError(f"unknown reordering class {cls!r}")

@@ -17,7 +17,10 @@ from __future__ import annotations
 
 import asyncio
 import contextvars
+import os
 import sys
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
 
 from . import registry
 from .controllers import external_controller, invoke_external
@@ -60,6 +63,74 @@ def current_runtime() -> "Runtime | None":
     return _current_runtime.get()
 
 
+# ---------------------------------------------------------------------------
+# executor offload (blocking externals must not serialize on the loop)
+#
+# The dominant real-world external is a *blocking* SDK client (classic
+# ``openai``, ``requests``); dispatched inline on the event loop such calls
+# get zero parallelism no matter what the annotations allow.  Synchronous
+# externals therefore default to dispatching on a per-runtime
+# ThreadPoolExecutor (``loop.run_in_executor``).  Per-annotation
+# ``offload="inline"`` opts a callable out; ``offload_policy`` changes the
+# runtime-wide default and pool size.
+
+
+@dataclass(frozen=True)
+class OffloadPolicy:
+    """Runtime-wide executor-offload configuration.
+
+    ``mode`` — default placement for annotated sync externals that did not
+    pick one themselves: ``"thread"`` (overlap blocking calls) or
+    ``"inline"`` (paper §6.1 single-interpreter dispatch, zero thread
+    overhead — and zero parallelism for blocking calls).
+    ``max_workers`` — thread-pool size; bounds how many blocking externals
+    overlap (``None`` → min(32, cpu+4, …) heuristic below).
+    """
+
+    mode: str = "thread"
+    max_workers: int | None = None
+
+    def __post_init__(self):
+        if self.mode not in ("thread", "inline"):
+            raise ValueError(f"offload mode must be 'thread' or 'inline', "
+                             f"got {self.mode!r}")
+        if self.max_workers is not None and self.max_workers < 1:
+            raise ValueError("max_workers must be >= 1")
+
+
+_offload_policy: contextvars.ContextVar[OffloadPolicy] = \
+    contextvars.ContextVar("poppy_offload_policy", default=OffloadPolicy())
+
+
+def current_offload_policy() -> OffloadPolicy:
+    return _offload_policy.get()
+
+
+class offload_policy:
+    """Context manager: set the executor-offload policy for runtimes started
+    in this context.  ``offload_policy(mode="inline")`` reproduces the old
+    loop-inline dispatch (useful for overhead measurement and thread-affine
+    clients); ``offload_policy(max_workers=4)`` caps blocking-call overlap.
+    """
+
+    def __init__(self, mode="thread", max_workers=None):
+        self.policy = OffloadPolicy(mode=mode, max_workers=max_workers)
+
+    def __enter__(self):
+        self._tok = _offload_policy.set(self.policy)
+        return self.policy
+
+    def __exit__(self, *exc):
+        _offload_policy.reset(self._tok)
+        return False
+
+
+def _default_pool_size() -> int:
+    # the stdlib heuristic, with a floor of 8 so small containers still
+    # demonstrate overlap of a typical external-call burst
+    return max(8, min(32, (os.cpu_count() or 1) + 4))
+
+
 class Frame:
     """One block instance: a register file plus its owning λ^O function."""
 
@@ -84,17 +155,98 @@ def _is_internal(fn) -> bool:
     return getattr(fn, "__poppy_internal__", False)
 
 
+_MISSING_ARG = object()
+
+
+def _fmt_names(names) -> str:
+    quoted = [f"'{n}'" for n in names]
+    if len(quoted) == 1:
+        return quoted[0]
+    if len(quoted) == 2:
+        return f"{quoted[0]} and {quoted[1]}"
+    return ", ".join(quoted[:-1]) + f", and {quoted[-1]}"
+
+
+def bind_positional(name: str, params, pos, kw) -> list:
+    """Bind a call to a signature-less λ^O function (closures/lambdas carry
+    only a parameter name list).  Raises ``TypeError`` with CPython's
+    messages instead of silently binding missing parameters to None or
+    surfacing unknown keyword names as ``ValueError`` from ``list.index``.
+    """
+    if len(pos) > len(params):
+        raise TypeError(
+            f"{name}() takes {len(params)} positional argument"
+            f"{'s' if len(params) != 1 else ''} but {len(pos)} "
+            f"{'were' if len(pos) != 1 else 'was'} given")
+    vals = list(pos) + [_MISSING_ARG] * (len(params) - len(pos))
+    for k, v in kw.items():
+        if k not in params:
+            raise TypeError(
+                f"{name}() got an unexpected keyword argument '{k}'")
+        i = params.index(k)
+        if vals[i] is not _MISSING_ARG:
+            raise TypeError(
+                f"{name}() got multiple values for argument '{k}'")
+        vals[i] = v
+    missing = [p for p, v in zip(params, vals) if v is _MISSING_ARG]
+    if missing:
+        raise TypeError(
+            f"{name}() missing {len(missing)} required positional argument"
+            f"{'s' if len(missing) != 1 else ''}: {_fmt_names(missing)}")
+    return vals
+
+
 class Runtime:
     """One opportunistic execution of a ``@poppy`` entry point."""
 
     def __init__(self, *, trace: Trace | None = None,
-                 inline_fast_path: bool = True):
+                 inline_fast_path: bool = True,
+                 offload: str | None = None,
+                 offload_workers: int | None = None):
         self.trace = trace
         self.inline_fast_path = inline_fast_path
         self.tasks: set[asyncio.Task] = set()
         self.loop: asyncio.AbstractEventLoop | None = None
         self.error: BaseException | None = None
         self._err_evt: asyncio.Event | None = None
+        pol = current_offload_policy()
+        self.offload_mode = offload if offload is not None else pol.mode
+        if self.offload_mode not in ("thread", "inline"):
+            raise ValueError(f"offload must be 'thread' or 'inline', "
+                             f"got {self.offload_mode!r}")
+        self.offload_workers = offload_workers if offload_workers is not None \
+            else pol.max_workers
+        self._executor: ThreadPoolExecutor | None = None
+
+    # -- executor offload --------------------------------------------------
+
+    @property
+    def executor(self) -> ThreadPoolExecutor:
+        """Lazily-created pool for blocking externals (never spun up for
+        purely async / inline programs)."""
+        if self._executor is None:
+            self._executor = ThreadPoolExecutor(
+                max_workers=self.offload_workers or _default_pool_size(),
+                thread_name_prefix="poppy-offload")
+        return self._executor
+
+    def offload_mode_for(self, fn) -> str:
+        """Where a *synchronous* external executes: the annotation's explicit
+        choice, else this runtime's default ('thread' unless configured)."""
+        mode = registry.annotated_offload(fn)
+        return self.offload_mode if mode is None else mode
+
+    def run_sync(self, target, pos, kw) -> asyncio.Future:
+        """Dispatch a blocking call on the offload executor.
+
+        The caller's context is propagated so ambient state (trace, backend,
+        dispatcher, current runtime) resolves inside the worker thread — a
+        blocking external that itself calls annotated components behaves as
+        it would inline.
+        """
+        ctx = contextvars.copy_context()
+        return self.loop.run_in_executor(
+            self.executor, lambda: ctx.run(target, *pos, **kw))
 
     # -- task management ---------------------------------------------------
 
@@ -160,6 +312,12 @@ class Runtime:
         finally:
             _current_runtime.reset(tok)
             sys.setrecursionlimit(old_limit)
+            if self._executor is not None:
+                # all offloaded calls have completed on the success path (the
+                # drain loop above); on abort, queued-but-unstarted work is
+                # dropped and in-flight blocking calls finish in the
+                # background without holding the program's exit
+                self._executor.shutdown(wait=False, cancel_futures=True)
 
     async def _abort(self):
         for t in list(self.tasks):
@@ -177,16 +335,7 @@ class Runtime:
             ba.apply_defaults()
             vals = [ba.arguments[p] for p in lf.params]
         else:
-            if kw:
-                vals = list(pos) + [None] * (len(lf.params) - len(pos))
-                for k, v in kw.items():
-                    vals[lf.params.index(k)] = v
-            else:
-                if len(pos) != len(lf.params):
-                    raise TypeError(
-                        f"{lf.name}() takes {len(lf.params)} arguments "
-                        f"({len(pos)} given)")
-                vals = list(pos)
+            vals = bind_positional(lf.name, lf.params, pos, kw)
         return vals + list(captured) + [S_READY]
 
     # -- block instantiation ----------------------------------------------------
@@ -423,13 +572,16 @@ class Runtime:
                 regs[op.dst] = outs[0]
                 regs[op.s_out] = outs[1]
                 return
-            # external: inline fast path for ready unordered sync calls
+            # external: inline fast path for ready unordered sync calls that
+            # actually execute inline — thread-offloaded externals go through
+            # a controller so the blocking call lands on the executor
             from .controllers import unwrap_external
             if (self.inline_fast_path
                     and not is_pending(s_in)
                     and all(deep_ready(a) for a in pos)
                     and all(deep_ready(v) for v in kw.values())
-                    and not registry.is_async_callable(unwrap_external(fn))):
+                    and not registry.is_async_callable(unwrap_external(fn))
+                    and self.offload_mode_for(fn) == "inline"):
                 cls = registry.get_callable_class(fn, pos, kw, fresh)
                 if cls == registry.UNORDERED:
                     regs[op.dst] = self._dispatch_inline(fn, pos, kw,
@@ -458,6 +610,7 @@ class Runtime:
         from .controllers import unwrap_external
         from .trace import safe_repr
         pos = [check_bound(a) for a in pos]
+        kw = {k: check_bound(v) for k, v in kw.items()}
         ev = None
         if self.trace is not None:
             ev = self.trace.queued(registry.callable_name(fn), callsite,
@@ -481,15 +634,7 @@ class Runtime:
             ba.apply_defaults()
             vals = [ba.arguments[p] for p in lf.params]
         else:
-            vals = list(pos)
-            if kw:
-                vals = vals + [None] * (len(lf.params) - len(vals))
-                for k, v in kw.items():
-                    vals[lf.params.index(k)] = v
-            elif len(vals) != len(lf.params):
-                raise TypeError(
-                    f"{lf.name}() takes {len(lf.params)} arguments "
-                    f"({len(vals)} given)")
+            vals = bind_positional(lf.name, lf.params, pos, kw)
         return vals + list(captured) + [s_in]
 
     async def _deferred_call(self, op, fnv, pos, kw, fresh, s_in, dfut, sfut):

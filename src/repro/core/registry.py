@@ -53,18 +53,45 @@ def sequential_forced() -> bool:
     return _force_sequential.get()
 
 
+#: Offload modes for *synchronous* externals (async externals are always
+#: awaited on the loop).  ``"thread"`` dispatches on the runtime's
+#: ThreadPoolExecutor so blocking calls overlap; ``"inline"`` executes on
+#: the event-loop thread (right for sub-microsecond operators and calls
+#: that must not cross threads).  ``None`` defers to the runtime default.
+OFFLOAD_THREAD = "thread"
+OFFLOAD_INLINE = "inline"
+_OFFLOADS = (OFFLOAD_THREAD, OFFLOAD_INLINE)
+
+
 class ExternalInfo:
     """Attached to external callables as ``__poppy_external__``."""
 
-    __slots__ = ("cls", "classify", "name")
+    __slots__ = ("cls", "classify", "name", "offload")
 
-    def __init__(self, cls=None, classify=None, name=""):
+    def __init__(self, cls=None, classify=None, name="", offload=None):
         assert (cls is None) != (classify is None)
         if cls is not None:
             assert cls in _CLASSES, cls
+        if offload is not None:
+            assert offload in _OFFLOADS, offload
         self.cls = cls
         self.classify = classify
         self.name = name
+        self.offload = offload
+
+
+def annotated_offload(fn):
+    """The annotation-level offload choice for ``fn``.
+
+    ``"inline"`` for un-annotated callables (dynamically-classified
+    operators, methods, builtins — interpreter-level work that would only
+    get slower on a thread), the annotation's explicit choice if one was
+    made, else ``None`` (meaning: use the runtime default, which is
+    ``"thread"`` for annotated sync externals — the blocking-SDK case)."""
+    info = getattr(fn, "__poppy_external__", None)
+    if info is None:
+        return OFFLOAD_INLINE
+    return info.offload
 
 
 # ---------------------------------------------------------------------------

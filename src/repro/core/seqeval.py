@@ -141,13 +141,8 @@ def call_internal_sequential(fn_obj, pos, kw):
         ba.apply_defaults()
         vals = [ba.arguments[p] for p in lf.params]
     else:
-        vals = list(pos)
-        if kw:
-            vals = vals + [None] * (len(lf.params) - len(vals))
-            for k, v in kw.items():
-                vals[lf.params.index(k)] = v
-        elif len(vals) != len(lf.params):
-            raise TypeError(f"{lf.name}() takes {len(lf.params)} arguments")
+        from .engine import bind_positional
+        vals = bind_positional(lf.name, lf.params, pos, kw)
     inputs = vals + list(captured) + [_SEQ_TOKEN]
     outs = run_block_sequential(lf, lf.block, inputs)
     return check_bound(outs[0])

@@ -23,9 +23,12 @@ from .registry import (
 
 
 def _intrinsic(classify, name=None):
+    # offload="inline": intrinsics are interpreter-level work (an add, an
+    # index) — a thread round-trip would cost orders of magnitude more than
+    # the operation itself, so they always execute on the loop thread.
     def deco(fn):
         fn.__poppy_external__ = ExternalInfo(
-            classify=classify, name=name or fn.__name__)
+            classify=classify, name=name or fn.__name__, offload="inline")
         return fn
     return deco
 
@@ -79,10 +82,11 @@ py_not_contains = _binary("py_not_contains", lambda c, x: x not in c)
 
 # identity is pure regardless of mutability
 py_is = _binary("py_is", _op.is_)
-py_is.__poppy_external__ = ExternalInfo(classify=classify_unordered, name="py_is")
+py_is.__poppy_external__ = ExternalInfo(
+    classify=classify_unordered, name="py_is", offload="inline")
 py_is_not = _binary("py_is_not", _op.is_not)
 py_is_not.__poppy_external__ = ExternalInfo(
-    classify=classify_unordered, name="py_is_not")
+    classify=classify_unordered, name="py_is_not", offload="inline")
 
 # in-place operators ----------------------------------------------------------
 py_iadd = _inplace("py_iadd", _op.iadd)

@@ -15,7 +15,7 @@ The checker below is used by the differential and property-based tests.
 from __future__ import annotations
 
 import contextvars
-import itertools
+import threading
 import time
 from collections import Counter
 from dataclasses import dataclass, field
@@ -49,15 +49,28 @@ class TraceEvent:
 
 @dataclass
 class Trace:
+    """Event recording is thread-safe: external code runs on the offload
+    executor's worker threads (and the ai bridge loop), and an external may
+    record events — directly or via annotated calls it makes — from any of
+    them concurrently with the engine thread."""
+
     events: list[TraceEvent] = field(default_factory=list)
-    _counter: itertools.count = field(default_factory=itertools.count)
+    _seq: int = field(default=0, repr=False)
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def _next_seq(self) -> int:
+        with self._lock:
+            n = self._seq
+            self._seq += 1
+            return n
 
     # -- engine-side API --------------------------------------------------
 
     def queued(self, name, callsite="", wrapped=True) -> TraceEvent:
         ev = TraceEvent(name=name, callsite=callsite,
                         t_queue=time.monotonic(), wrapped=wrapped)
-        self.events.append(ev)
+        with self._lock:
+            self.events.append(ev)
         return ev
 
     def classified(self, ev: TraceEvent, cls: str):
@@ -66,7 +79,7 @@ class Trace:
     def dispatched(self, ev: TraceEvent, args_repr=""):
         ev.t_dispatch = time.monotonic()
         ev.args_repr = args_repr
-        ev.seq_no = next(self._counter)
+        ev.seq_no = self._next_seq()
 
     def resolved(self, ev: TraceEvent):
         ev.t_resolve = time.monotonic()
@@ -77,9 +90,10 @@ class Trace:
         now = time.monotonic()
         ev = TraceEvent(name=name, callsite=callsite, cls=cls,
                         t_queue=now, t_dispatch=now, t_resolve=now,
-                        args_repr=args_repr, seq_no=next(self._counter),
+                        args_repr=args_repr, seq_no=self._next_seq(),
                         wrapped=True)
-        self.events.append(ev)
+        with self._lock:
+            self.events.append(ev)
         return ev
 
     # -- views ---------------------------------------------------------------

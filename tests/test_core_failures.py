@@ -1,0 +1,317 @@
+"""Failure semantics and call-binding regressions.
+
+Covers the paper's §4.1 guarantee under parallelism — the first failing
+external terminates the program cleanly (no wedged sibling controllers, no
+externals dispatched that standard sequential Python would never have
+reached, no "Task exception was never retrieved" noise) — plus CPython-
+faithful TypeErrors for signature-less (closure) call binding and the
+inline-fast-path unbound-kwarg leak.
+"""
+
+import asyncio
+import gc
+import logging
+import time
+
+import pytest
+
+from repro.core import (
+    ExternalCallError,
+    PoppyUnboundLocalError,
+    poppy,
+    readonly,
+    sequential,
+    sequential_mode,
+    unordered,
+)
+
+
+@pytest.fixture
+def asyncio_log(caplog):
+    """Collect asyncio's error log (where unretrieved-exception complaints
+    land) and assert it stays silent."""
+    caplog.set_level(logging.ERROR, logger="asyncio")
+    yield caplog
+    gc.collect()  # Task.__del__ is what emits "was never retrieved"
+    noise = [r for r in caplog.records
+             if "never retrieved" in r.getMessage()]
+    assert not noise, f"unretrieved task exceptions: {noise}"
+
+
+# ---------------------------------------------------------------------------
+# lock protocol under failure
+
+
+def test_failing_readonly_does_not_wedge_downstream_sequential(asyncio_log):
+    executed = []
+
+    @readonly
+    def bad_read():
+        raise ValueError("boom")
+
+    @sequential
+    def commit(x):
+        executed.append(x)
+        return None
+
+    @poppy
+    def prog():
+        bad_read()
+        commit(1)
+        return None
+
+    t0 = time.perf_counter()
+    with pytest.raises(ExternalCallError) as ei:
+        prog()
+    dt = time.perf_counter() - t0
+    assert isinstance(ei.value.original, ValueError)
+    assert dt < 2.0, f"downstream sequential call wedged the run: {dt:.1f}s"
+    # sequential Python would have terminated at bad_read: commit must not run
+    assert executed == []
+
+
+def test_failing_sequential_does_not_wedge_downstream_calls(asyncio_log):
+    executed = []
+
+    @sequential
+    def bad_write():
+        raise ValueError("boom")
+
+    @readonly
+    def peek():
+        executed.append("peek")
+        return None
+
+    @sequential
+    def commit():
+        executed.append("commit")
+        return None
+
+    @poppy
+    def prog():
+        bad_write()
+        peek()
+        commit()
+        return None
+
+    t0 = time.perf_counter()
+    with pytest.raises(ExternalCallError):
+        prog()
+    assert time.perf_counter() - t0 < 2.0
+    assert executed == []
+
+
+def test_failing_readonly_with_slow_sequential_predecessor(asyncio_log):
+    """The readonly fails while parked behind an in-flight sequential call:
+    locks must still resolve and the failure must surface."""
+    @sequential
+    async def slow_write():
+        await asyncio.sleep(0.05)
+        return None
+
+    @readonly
+    def bad_read():
+        raise ValueError("boom")
+
+    @sequential
+    def commit():  # pragma: no cover - must never run
+        raise AssertionError("dispatched past a failure")
+
+    @poppy
+    def prog():
+        slow_write()
+        bad_read()
+        commit()
+        return None
+
+    with pytest.raises(ExternalCallError):
+        prog()
+
+
+# ---------------------------------------------------------------------------
+# first-failure propagation cancels outstanding controllers cleanly
+
+
+def test_first_failure_cancels_inflight_async_externals(asyncio_log):
+    @unordered
+    async def slow(i):
+        await asyncio.sleep(5.0)
+        return i
+
+    @unordered
+    async def boom():
+        await asyncio.sleep(0.01)
+        raise RuntimeError("kaput")
+
+    @poppy
+    def prog():
+        a = slow(1)
+        b = slow(2)
+        c = boom()
+        return (a, b, c)
+
+    t0 = time.perf_counter()
+    with pytest.raises(ExternalCallError):
+        prog()
+    assert time.perf_counter() - t0 < 2.0, "abort waited for 5s stragglers"
+
+
+def test_first_failure_with_offloaded_externals(asyncio_log):
+    started = []
+
+    @unordered
+    def slow(i):
+        started.append(i)
+        time.sleep(0.3)
+        return i
+
+    @unordered
+    def boom():
+        raise RuntimeError("kaput")
+
+    @poppy
+    def prog():
+        a = slow(1)
+        b = boom()
+        c = slow(2)
+        return (a, b, c)
+
+    t0 = time.perf_counter()
+    with pytest.raises(ExternalCallError):
+        prog()
+    assert time.perf_counter() - t0 < 2.0
+
+
+def test_failure_in_plain_mode_matches(asyncio_log):
+    @unordered
+    def boom():
+        raise RuntimeError("kaput")
+
+    @poppy
+    def prog():
+        return boom()
+
+    with sequential_mode(), pytest.raises(RuntimeError):
+        prog()  # plain Python: the raw exception
+    with pytest.raises(ExternalCallError):
+        prog()  # PopPy: wrapped, per §4.1
+
+
+# ---------------------------------------------------------------------------
+# inline fast path: unbound locals must not leak into external calls
+
+
+@unordered(offload="inline")
+def _echo_kw(*, v=None):
+    return v
+
+
+def test_inline_fast_path_checks_kwarg_boundness():
+    @poppy
+    def prog(flag):
+        if flag:
+            x = 1
+        return _echo_kw(v=x)
+
+    assert prog(True) == 1
+    with pytest.raises(PoppyUnboundLocalError):
+        prog(False)
+
+
+def test_inline_fast_path_checks_positional_boundness():
+    @unordered(offload="inline")
+    def echo(v):
+        return v
+
+    @poppy
+    def prog(flag):
+        if flag:
+            x = 1
+        return echo(x)
+
+    assert prog(True) == 1
+    with pytest.raises(PoppyUnboundLocalError):
+        prog(False)
+
+
+# ---------------------------------------------------------------------------
+# signature-less (closure) call binding: CPython-faithful TypeErrors
+
+
+@poppy
+def _closure_ok():
+    def inner(a, b):
+        return (a, b)
+    return inner(1, b=2)
+
+
+@poppy
+def _closure_missing():
+    def inner(a, b):
+        return (a, b)
+    return inner(1)
+
+
+@poppy
+def _closure_extra_pos():
+    def inner(a, b):
+        return (a, b)
+    return inner(1, 2, 3)
+
+
+@poppy
+def _closure_unknown_kw():
+    def inner(a, b):
+        return (a, b)
+    return inner(1, c=2)
+
+
+@poppy
+def _closure_dup():
+    def inner(a, b):
+        return (a, b)
+    return inner(1, a=2)
+
+
+def test_closure_programs_are_in_fragment():
+    for fn in (_closure_ok, _closure_missing, _closure_extra_pos,
+               _closure_unknown_kw, _closure_dup):
+        assert fn.compiles, fn
+
+
+@pytest.mark.parametrize("runner", ["poppy", "plain"])
+def test_closure_binding_ok(runner):
+    if runner == "plain":
+        with sequential_mode():
+            assert _closure_ok() == (1, 2)
+    else:
+        assert _closure_ok() == (1, 2)
+
+
+@pytest.mark.parametrize("fn,match", [
+    (_closure_missing, r"missing 1 required positional argument: 'b'"),
+    (_closure_extra_pos, r"takes 2 positional arguments but 3 were given"),
+    (_closure_unknown_kw, r"got an unexpected keyword argument 'c'"),
+    (_closure_dup, r"got multiple values for argument 'a'"),
+])
+@pytest.mark.parametrize("runner", ["poppy", "plain"])
+def test_closure_binding_typeerrors(fn, match, runner):
+    if runner == "plain":
+        with sequential_mode(), pytest.raises(TypeError, match=match):
+            fn()
+    else:
+        with pytest.raises(TypeError, match=match):
+            fn()
+
+
+def test_binding_missing_two_args_message():
+    from repro.core.engine import bind_positional
+
+    with pytest.raises(TypeError,
+                       match=r"missing 2 required positional arguments: "
+                             r"'a' and 'b'"):
+        bind_positional("f", ["a", "b"], (), {})
+    with pytest.raises(TypeError,
+                       match=r"missing 3 required positional arguments: "
+                             r"'a', 'b', and 'c'"):
+        bind_positional("f", ["a", "b", "c"], (), {})

@@ -1,0 +1,387 @@
+"""Executor offload: blocking (synchronous) externals must parallelize.
+
+The engine dispatches sync externals on a per-runtime ThreadPoolExecutor
+(``loop.run_in_executor``) by default, so the dominant real-world case —
+blocking SDK clients — overlaps exactly like async externals, while the
+lock protocol, trace ordering, and sequential semantics are preserved.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    ExternalCallError,
+    OffloadPolicy,
+    equivalent,
+    offload_policy,
+    poppy,
+    readonly,
+    recording,
+    sequential,
+    sequential_mode,
+    unordered,
+)
+from repro.core import ai as ai_mod
+from repro.core.ai import (
+    SimulatedBackend,
+    embed_sync,
+    llm,
+    llm_sync,
+    use_backend,
+    use_sync_clients,
+)
+from repro.core.trace import Trace
+
+
+class Overlap:
+    """Thread-safe concurrency meter for blocking externals."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.cur = 0
+        self.max = 0
+
+    def __enter__(self):
+        with self.lock:
+            self.cur += 1
+            self.max = max(self.max, self.cur)
+        return self
+
+    def __exit__(self, *exc):
+        with self.lock:
+            self.cur -= 1
+        return False
+
+
+# ---------------------------------------------------------------------------
+# the headline: blocking externals overlap
+
+
+def make_fetch(meter, delay=0.05):
+    @unordered
+    def fetch(i):
+        with meter:
+            time.sleep(delay)
+        return f"r{i}"
+    return fetch
+
+
+@poppy
+def _gather4(fetch):
+    a = fetch(0)
+    b = fetch(1)
+    c = fetch(2)
+    d = fetch(3)
+    return (a, b, c, d)
+
+
+def test_blocking_unordered_externals_overlap():
+    meter = Overlap()
+    fetch = make_fetch(meter)
+    t0 = time.perf_counter()
+    out = _gather4(fetch)
+    dt = time.perf_counter() - t0
+    assert out == ("r0", "r1", "r2", "r3")
+    assert meter.max >= 3, f"blocking calls serialized (max overlap {meter.max})"
+    assert dt < 0.15, f"no overlap: took {dt:.3f}s (sequential would be 0.2s)"
+
+
+def test_blocking_externals_match_sequential_mode():
+    meter = Overlap()
+    fetch = make_fetch(meter)
+    with recording() as t_poppy:
+        r_poppy = _gather4(fetch)
+    with recording() as t_plain, sequential_mode():
+        r_plain = _gather4(fetch)
+    assert r_poppy == r_plain
+    ok, why = equivalent(t_plain, t_poppy)
+    assert ok, why
+
+
+def test_offloaded_external_runs_on_worker_thread():
+    @unordered
+    def where():
+        return threading.current_thread().name
+
+    @unordered(offload="inline")
+    def where_inline():
+        return threading.current_thread().name
+
+    @poppy
+    def prog():
+        return (where(), where_inline())
+
+    offloaded, inline = prog()
+    assert offloaded.startswith("poppy-offload")
+    assert inline == threading.main_thread().name
+
+
+# ---------------------------------------------------------------------------
+# configuration: per-annotation and per-runtime policy
+
+
+def test_inline_annotation_serializes():
+    meter = Overlap()
+
+    @unordered(offload="inline")
+    def fetch(i):
+        with meter:
+            time.sleep(0.03)
+        return i
+
+    @poppy
+    def prog():
+        a = fetch(0)
+        b = fetch(1)
+        c = fetch(2)
+        return (a, b, c)
+
+    t0 = time.perf_counter()
+    assert prog() == (0, 1, 2)
+    dt = time.perf_counter() - t0
+    assert meter.max == 1
+    assert dt > 0.08, f"inline externals overlapped: {dt:.3f}s"
+
+
+def test_offload_policy_inline_serializes():
+    meter = Overlap()
+    fetch = make_fetch(meter, delay=0.03)
+    with offload_policy(mode="inline"):
+        t0 = time.perf_counter()
+        out = _gather4(fetch)
+        dt = time.perf_counter() - t0
+    assert out == ("r0", "r1", "r2", "r3")
+    assert meter.max == 1
+    assert dt > 0.1
+
+
+def test_offload_policy_caps_workers():
+    meter = Overlap()
+    fetch = make_fetch(meter, delay=0.04)
+    with offload_policy(max_workers=2):
+        out = _gather4(fetch)
+    assert out == ("r0", "r1", "r2", "r3")
+    assert meter.max <= 2
+
+
+def test_offload_policy_validation():
+    with pytest.raises(ValueError):
+        OffloadPolicy(mode="process")
+    with pytest.raises(ValueError):
+        OffloadPolicy(max_workers=0)
+
+
+# ---------------------------------------------------------------------------
+# lock protocol across threads
+
+
+def test_sequential_blocking_externals_keep_program_order():
+    order = []
+
+    @sequential
+    def step(i):
+        time.sleep(0.01 * (5 - i))  # later steps are faster
+        order.append(i)
+        return i
+
+    @poppy
+    def prog():
+        for i in range(5):
+            step(i)
+        return None
+
+    prog()
+    assert order == [0, 1, 2, 3, 4]
+
+
+def test_readonly_window_with_blocking_externals():
+    state = {"v": 0}
+
+    @sequential
+    def write(v):
+        time.sleep(0.01)
+        state["v"] = v
+        return None
+
+    @readonly
+    def read(tag):
+        time.sleep(0.01)
+        return state["v"]
+
+    @poppy
+    def prog():
+        write(1)
+        a = read("a")
+        b = read("b")
+        write(2)
+        c = read("c")
+        return (a, b, c)
+
+    assert prog() == (1, 1, 2)
+    with sequential_mode():
+        assert prog() == (1, 1, 2)
+
+
+def test_mixed_async_and_blocking_externals():
+    import asyncio
+
+    meter = Overlap()
+
+    @unordered
+    async def a_fetch(i):
+        await asyncio.sleep(0.05)
+        return f"a{i}"
+
+    @unordered
+    def s_fetch(i):
+        with meter:
+            time.sleep(0.05)
+        return f"s{i}"
+
+    @poppy
+    def prog():
+        w = a_fetch(0)
+        x = s_fetch(1)
+        y = a_fetch(2)
+        z = s_fetch(3)
+        return (w, x, y, z)
+
+    t0 = time.perf_counter()
+    assert prog() == ("a0", "s1", "a2", "s3")
+    dt = time.perf_counter() - t0
+    assert dt < 0.15, f"async/sync mix serialized: {dt:.3f}s"
+
+
+# ---------------------------------------------------------------------------
+# the ambient bridge: blocking components and externals calling components
+
+
+def test_llm_sync_components_overlap_and_match_plain():
+    @poppy
+    def ask(topics):
+        out = tuple()
+        for t in topics:
+            out += (llm_sync(f"about {t}"),)
+        return out
+
+    be = SimulatedBackend(base_s=0.05)
+    with use_backend(be):
+        t0 = time.perf_counter()
+        r = ask(("a", "b", "c", "d"))
+        dt = time.perf_counter() - t0
+    assert be.max_in_flight >= 2, "blocking LLM calls serialized"
+    assert dt < 0.25
+
+    be2 = SimulatedBackend(base_s=0.05)
+    with use_backend(be2), sequential_mode():
+        assert ask(("a", "b", "c", "d")) == r
+
+
+def test_embed_sync_roundtrip():
+    be = SimulatedBackend(base_s=0.01)
+    with use_backend(be):
+        v = embed_sync("hello")
+    assert isinstance(v, tuple) and len(v) == 8
+
+
+def test_blocking_external_may_call_async_component():
+    # a worker thread has no running loop, so the annotation wrapper drives
+    # the coroutine to completion there; ambient backend resolves through
+    # the propagated context
+    @unordered
+    def summarize(t):
+        return ai_mod.llm(f"sum {t}")
+
+    @poppy
+    def prog():
+        a = summarize("x")
+        b = summarize("y")
+        return (a, b)
+
+    be = SimulatedBackend(base_s=0.03)
+    with use_backend(be):
+        r = prog()
+    assert len(r) == 2 and all(isinstance(s, str) for s in r)
+
+
+def test_use_sync_clients_swaps_and_restores():
+    @poppy
+    def ask(topics):
+        out = tuple()
+        for t in topics:
+            out += (llm(f"topic {t}"),)
+        return out
+
+    be = SimulatedBackend(base_s=0.04)
+    with use_backend(be), use_sync_clients():
+        r_poppy = ask(("a", "b", "c"))
+        with sequential_mode():
+            r_plain = ask(("a", "b", "c"))
+    assert r_poppy == r_plain
+    assert be.max_in_flight >= 2
+    # restored: back to the async client
+    import repro.core.registry as registry
+    from repro.core.controllers import unwrap_external
+    assert registry.is_async_callable(unwrap_external(llm))
+
+
+def test_run_blocking_rejects_running_loop():
+    import asyncio
+
+    async def inner():
+        with pytest.raises(RuntimeError, match="running event loop"):
+            llm_sync("boom")
+
+    asyncio.run(inner())
+
+
+# ---------------------------------------------------------------------------
+# trace thread-safety
+
+
+def test_trace_recording_is_thread_safe():
+    tr = Trace()
+    n_threads, per_thread = 8, 200
+
+    def pound():
+        for i in range(per_thread):
+            tr.record_direct(f"call{i}", "unordered")
+
+    threads = [threading.Thread(target=pound) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(tr.events) == n_threads * per_thread
+    seqs = [e.seq_no for e in tr.events]
+    assert len(set(seqs)) == len(seqs), "duplicate dispatch sequence numbers"
+
+
+# ---------------------------------------------------------------------------
+# failure propagation through the executor
+
+
+def test_offloaded_failure_wraps_and_propagates_promptly():
+    @unordered
+    def boom():
+        raise RuntimeError("kaput")
+
+    @unordered
+    def slow(i):
+        time.sleep(0.3)
+        return i
+
+    @poppy
+    def prog():
+        a = slow(1)
+        b = boom()
+        return (a, b)
+
+    t0 = time.perf_counter()
+    with pytest.raises(ExternalCallError) as ei:
+        prog()
+    dt = time.perf_counter() - t0
+    assert isinstance(ei.value.original, RuntimeError)
+    assert dt < 2.0, f"failure propagation waited for stragglers: {dt:.1f}s"
