@@ -76,7 +76,7 @@ def bench(n: int, delay: float, trials: int = 3) -> dict:
 
 
 def run(out_dir="experiments/apps", trials=3, delay=0.1,
-        sweep=(2, 4, 8, 16)):
+        sweep=(2, 4, 8, 16), smoke=False):
     rows = []
     for n in sweep:
         r = bench(n, delay, trials=trials)
@@ -87,7 +87,10 @@ def run(out_dir="experiments/apps", trials=3, delay=0.1,
               f"(inline {r['inline_speedup']:.2f}×)", flush=True)
 
     four = next((r for r in rows if r["n"] == 4), None)
-    if four is not None:
+    # the speedup bar is skipped under --smoke (tiny N / one trial is
+    # timing noise on a loaded CI runner; the result-equality asserts in
+    # bench() are the smoke contract)
+    if four is not None and not smoke:
         assert four["speedup"] >= 3.0, (
             f"acceptance: N=4 blocking externals must overlap ≥3×, "
             f"got {four['speedup']:.2f}×")

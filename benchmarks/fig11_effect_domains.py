@@ -1,0 +1,175 @@
+"""Fig. 11: effect-domain-keyed sequence variables (beyond-paper;
+DESIGN.md §2.2, EXPERIMENTS.md §Fig. 11).
+
+K independent agents each run a chain of N strictly ordered steps:
+``think`` (an @unordered llm call) feeding ``commit`` — a slow
+@sequential external (a per-agent DB/memory persistence write).  Under
+the paper's single sequence variable every ``commit`` serializes against
+every other, so the program costs ~K·N commit latencies.  With
+``effects=("db:{agent}",)`` each agent's chain is its own lock domain:
+chains overlap and the program costs ~N.
+
+Three runs per trial, all on the same deterministic backend:
+
+  plain    standard sequential Python (the semantic oracle)
+  single   PopPy, commits declared with no effect domains ("*" — the
+           paper's single-chain behavior)
+  keyed    PopPy, commits keyed per agent
+
+Every trial asserts byte-identical results across all three runs and
+per-domain ≡_A trace equivalence of the keyed run against the oracle.
+The acceptance bar is keyed ≥3× over single at K=4.
+
+    PYTHONPATH=src:. python benchmarks/fig11_effect_domains.py
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import statistics
+import time
+from pathlib import Path
+
+from repro.core import equivalent, poppy, recording, sequential, \
+    sequential_mode
+from repro.core.ai import llm, use_backend
+
+from benchmarks.common import make_backend
+
+K_AGENTS = 4
+N_STEPS = 6
+COMMIT_S = 0.03
+
+
+class _World:
+    """The persistence layer: per-agent append-only logs with a slow
+    sequential ``commit``.  ``keyed=True`` declares per-agent effect
+    domains; ``keyed=False`` reproduces the single-chain behavior."""
+
+    def __init__(self, keyed: bool, commit_s: float = COMMIT_S):
+        self.logs: dict = {}
+        self.in_flight = 0
+        self.max_in_flight = 0
+        world = self
+        effects = ("db:{agent}",) if keyed else None
+
+        @sequential(effects=effects, returns_immutable=True)
+        async def commit(agent, text):
+            world.in_flight += 1
+            world.max_in_flight = max(world.max_in_flight, world.in_flight)
+            await asyncio.sleep(commit_s)
+            world.in_flight -= 1
+            world.logs.setdefault(agent, []).append(text)
+            return f"{agent}#{len(world.logs[agent])}"
+
+        commit.__name__ = commit.__qualname__ = "commit"
+        commit.__poppy_external__.name = "commit"
+        self.commit = commit
+
+    def snapshot(self):
+        return {k: tuple(v) for k, v in sorted(self.logs.items())}
+
+
+def _make_app(world, k_agents, n_steps):
+    commit = world.commit
+
+    @poppy
+    def chains():
+        receipts = ()
+        for a in range(k_agents):
+            prev = "start"
+            for s in range(n_steps):
+                thought = llm(f"agent{a} step{s}: {prev}", max_tokens=8)
+                prev = commit(f"agent{a}", thought)
+            receipts += (prev,)
+        return receipts
+
+    return chains
+
+
+def _run_once(plain, keyed, *, k_agents, n_steps, scale, commit_s):
+    world = _World(keyed, commit_s=commit_s)
+    app = _make_app(world, k_agents, n_steps)
+    be = make_backend(scale)
+    with use_backend(be), recording() as tr:
+        t0 = time.perf_counter()
+        if plain:
+            with sequential_mode():
+                result = app()
+        else:
+            result = app()
+        dt = time.perf_counter() - t0
+    return result, world.snapshot(), dt, tr, world
+
+
+def bench(k_agents=K_AGENTS, n_steps=N_STEPS, *, trials=3, scale=0.2,
+          commit_s=COMMIT_S):
+    times = {"plain": [], "single": [], "keyed": []}
+    overlap = 0
+    kw = dict(k_agents=k_agents, n_steps=n_steps, scale=scale,
+              commit_s=commit_s)
+    for _ in range(trials):
+        # the ≡_A oracle must carry the same *declarations* as the run it
+        # is compared against (effect keys are part of the trace), so each
+        # PopPy configuration gets a sequential oracle with matching
+        # annotations; results must be byte-identical across all of them
+        r_ref, logs_ref, dt, _, _ = _run_once(True, False, **kw)
+        times["plain"].append(dt)
+        for mode, keyed in (("single", False), ("keyed", True)):
+            r_or, logs_or, _, tr_or, _ = _run_once(True, keyed, **kw)
+            assert r_or == r_ref and logs_or == logs_ref, (
+                "effect declarations changed plain-Python results")
+            r, logs, dt, tr, world = _run_once(False, keyed, **kw)
+            times[mode].append(dt)
+            assert r == r_ref, f"{mode}: results diverge: {r!r} vs {r_ref!r}"
+            assert logs == logs_ref, f"{mode}: logs diverge"
+            ok, why = equivalent(tr_or, tr)
+            assert ok, f"{mode}: trace not ≡_A: {why}"
+            if mode == "keyed":
+                overlap = max(overlap, world.max_in_flight)
+    med = {m: statistics.median(ts) for m, ts in times.items()}
+    return {
+        "k_agents": k_agents,
+        "n_steps": n_steps,
+        "commit_s": commit_s,
+        **{f"{m}_s": t for m, t in med.items()},
+        "speedup_vs_single": med["single"] / med["keyed"],
+        "speedup_vs_plain": med["plain"] / med["keyed"],
+        "max_commit_overlap": overlap,
+    }
+
+
+def run(out_dir="experiments/apps", trials=3, scale=0.2,
+        sweep=(1, 2, 4, 8), n_steps=N_STEPS, smoke=False):
+    rows = []
+    for k in sweep:
+        r = bench(k, n_steps, trials=trials, scale=scale)
+        rows.append(r)
+        print(f"K={k:2d}  plain {r['plain_s']:.3f}s  single "
+              f"{r['single_s']:.3f}s  keyed {r['keyed_s']:.3f}s  "
+              f"keyed/single {r['speedup_vs_single']:.2f}×  "
+              f"(commit overlap {r['max_commit_overlap']})", flush=True)
+
+    four = next((r for r in rows if r["k_agents"] == 4), None)
+    if four is not None and not smoke:
+        assert four["speedup_vs_single"] >= 3.0, (
+            f"acceptance: K=4 independent sequential chains must run ≥3× "
+            f"faster keyed than single-domain, got "
+            f"{four['speedup_vs_single']:.2f}×")
+        print(f"\nK=4 acceptance: {four['speedup_vs_single']:.2f}× ≥ 3× ✓")
+
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig11.json").write_text(json.dumps({"rows": rows}, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--scale", type=float, default=0.2)
+    args = ap.parse_args()
+    run(trials=args.trials, scale=args.scale)

@@ -3,12 +3,14 @@
     Table 1  program characteristics       table1_characteristics
     Fig. 5   PopPy vs Python speedups      fig5_speedup (async + sync clients)
     Fig. 10  blocking-external offload     fig10_sync_offload
+    Fig. 11  effect-domain keying          fig11_effect_domains
     Fig. 6   ToT execution trace           fig6_trace
     Fig. 7   interpreter overhead          fig7_overhead
     Fig. 8   parallelism scaling           fig8_scaling
     §Roofline  per-(arch×shape) terms      roofline (subprocess, 512 devs)
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-roofline]
+    PYTHONPATH=src python -m benchmarks.run --smoke     # CI equivalence job
 
 Results land in experiments/apps/ and experiments/roofline/.
 """
@@ -21,21 +23,54 @@ import sys
 import time
 
 
+def smoke():
+    """Benchmark smoke job (CI): run fig5/fig9/fig10/fig11 with tiny
+    parameters.  Every one of these figures asserts result equality (and,
+    for fig5/fig11, ≡_A trace equivalence) against sequential-mode Python
+    on every trial — so an equivalence regression fails this job in
+    minutes instead of surfacing in a full benchmark run.  Speedup
+    acceptance bars are *not* enforced here (tiny N is timing noise);
+    correctness is."""
+    from benchmarks import (fig5_speedup, fig9_dispatch, fig10_sync_offload,
+                            fig11_effect_domains)
+
+    t0 = time.time()
+    print("== smoke: fig5 (equality + ≡_A per trial) ==", flush=True)
+    fig5_speedup.run(trials=1, scale=0.1, camel_count=2)
+    print("\n== smoke: fig9 (dispatch preserves sequential semantics) ==",
+          flush=True)
+    fig9_dispatch.run(trials=1, scale=0.3)
+    print("\n== smoke: fig10 (offload result equality) ==", flush=True)
+    fig10_sync_offload.run(trials=1, delay=0.05, sweep=(2, 4), smoke=True)
+    print("\n== smoke: fig11 (per-domain equality + ≡_A per trial) ==",
+          flush=True)
+    fig11_effect_domains.run(trials=1, scale=0.1, sweep=(2, 4), n_steps=3,
+                             smoke=True)
+    print(f"\nbenchmark smoke passed in {time.time() - t0:.0f}s")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer trials / smaller sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-N equivalence smoke (fig5/9/10/11); "
+                         "used by CI")
     ap.add_argument("--skip-roofline", action="store_true",
                     help="skip the 512-device roofline subprocess")
     ap.add_argument("--roofline-arch", action="append", default=None)
     args = ap.parse_args()
+
+    if args.smoke:
+        return smoke()
 
     trials = 2 if args.quick else 3
     t0 = time.time()
 
     from benchmarks import (fig5_speedup, fig6_trace, fig7_overhead,
                             fig8_scaling, fig10_sync_offload,
-                            table1_characteristics)
+                            fig11_effect_domains, table1_characteristics)
 
     print("=" * 72)
     print("Table 1 — benchmark program characteristics")
@@ -58,6 +93,14 @@ def main():
     print("Fig. 10 — executor offload: overlap of blocking externals")
     print("=" * 72)
     fig10_sync_offload.run(trials=trials)
+
+    print("\n" + "=" * 72)
+    print("Fig. 11 — effect-domain keying: independent sequential chains")
+    print("=" * 72)
+    if args.quick:
+        fig11_effect_domains.run(trials=trials, sweep=(2, 4))
+    else:
+        fig11_effect_domains.run(trials=trials)
 
     print("\n" + "=" * 72)
     print("Fig. 6 — ToT execution trace (queue → dispatch → resolve)")

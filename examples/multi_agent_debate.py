@@ -1,32 +1,99 @@
-"""Multi-agent debate (DiverseAgentEntropy-style) under PopPy: agents
-answer in parallel within each round; rounds stay ordered.
+"""Multi-agent debate (DiverseAgentEntropy-style) under PopPy, with
+**per-agent memory effect domains** (DESIGN.md §2.2).
+
+Each agent keeps a private history in a session-keyed ``MemoryStore``:
+``memory.append(agent, ...)`` is ``@sequential`` *within that agent's
+domain* — so one agent's history stays in program order while different
+agents' appends (and the llm calls feeding them) all overlap.  Under the
+paper's single sequence variable, every append would serialize against
+every other agent's.
+
+The example runs the debate under standard sequential Python (the
+oracle) and under PopPy, checks results and per-agent memories are
+identical, and reports the per-domain trace summary.
 
     PYTHONPATH=src:. python examples/multi_agent_debate.py
 """
 
 import time
 
-from benchmarks.apps import dae
-from repro.core import sequential_mode
-from repro.core.ai import SimulatedBackend, use_backend
+from repro.core import poppy, recording, sequential_mode
+from repro.core.ai import MemoryStore, SimulatedBackend, llm, use_backend
+
+N_AGENTS = 5
+N_ROUNDS = 2
+PERSPECTIVES = ("scientist", "historian", "engineer", "economist", "critic")
+
+memory = MemoryStore("debate")
+
+
+@poppy
+def agent_turn(agent, persona, question, others):
+    """One agent's turn: think, then persist the position to the agent's
+    own memory domain (ordered only within this agent's history)."""
+    position = llm(f"as a {persona}, answer briefly: {question} | "
+                   f"others said: {others}", max_tokens=12)
+    memory.append(agent, position)
+    return position.split()[0] if position else "unknown"
+
+
+@poppy
+def debate(question):
+    answers = ()
+    for i in range(N_AGENTS):
+        a = agent_turn(f"agent{i}", PERSPECTIVES[i], question, "")
+        answers += (a,)
+    for rnd in range(N_ROUNDS):
+        revised = ()
+        for i in range(N_AGENTS):
+            others = answers[:i] + answers[i + 1:]
+            a = agent_turn(f"agent{i}", PERSPECTIVES[i], question,
+                           f"{others}")
+            revised += (a,)
+        answers = revised
+    counts = {}
+    for a in answers:
+        counts[a] = counts.get(a, 0) + 1
+    best = None
+    best_n = 0
+    for a, n in sorted(counts.items()):
+        if n > best_n:
+            best, best_n = a, n
+    return (best, best_n, len(counts))
+
+
+QUESTION = "what is the boiling point of water at sea level?"
+
+
+def run_once(plain):
+    memory.clear()
+    with recording() as tr:
+        t0 = time.perf_counter()
+        if plain:
+            with sequential_mode():
+                result = debate(QUESTION)
+        else:
+            result = debate(QUESTION)
+        dt = time.perf_counter() - t0
+    return result, memory.snapshot(), dt, tr
 
 
 def main():
     backend = SimulatedBackend(base_s=0.15, per_token_s=0.01)
     with use_backend(backend):
-        t0 = time.perf_counter()
-        with sequential_mode():
-            r1 = dae.run()
-        t_plain = time.perf_counter() - t0
+        r1, mem1, t_plain, _ = run_once(plain=True)
+        r2, mem2, t_poppy, tr = run_once(plain=False)
 
-        t0 = time.perf_counter()
-        r2 = dae.run()
-        t_poppy = time.perf_counter() - t0
-
-    assert r1 == r2
+    assert r1 == r2, (r1, r2)
+    assert mem1 == mem2, "per-agent memories diverged"
     answer, votes, distinct = r2
-    print(f"consensus answer: {answer!r} ({votes}/{dae.N_AGENTS} agents, "
+    print(f"consensus answer: {answer!r} ({votes}/{N_AGENTS} agents, "
           f"{distinct} distinct answers)")
+    for agent, history in mem2.items():
+        print(f"  {agent}: {len(history)} positions, last={history[-1]!r}")
+    doms = {d: n for d, n in sorted(tr.domain_summary().items())
+            if d.startswith("debate:")}
+    print(f"memory effect domains: {doms}")
     print(f"standard Python : {t_plain:.2f}s")
     print(f"PopPy           : {t_poppy:.2f}s ({t_plain/t_poppy:.2f}×)")
 

@@ -31,7 +31,8 @@ import math
 import threading
 from dataclasses import dataclass, field
 
-from .annotations import sequential, unordered
+from .annotations import readonly, sequential, unordered
+from .values import is_pending, peek
 
 
 class Backend:
@@ -204,7 +205,7 @@ class use_dispatcher:
 # annotated external components
 
 
-@unordered
+@unordered(returns_immutable=True)
 async def llm(prompt: str, *, max_tokens: int = 64, temperature: float = 0.0,
               stop=None) -> str:
     """Stateless LLM completion — @unordered: dispatches the moment the
@@ -213,18 +214,108 @@ async def llm(prompt: str, *, max_tokens: int = 64, temperature: float = 0.0,
         prompt, max_tokens=max_tokens, temperature=temperature, stop=stop)
 
 
-@unordered
+@unordered(returns_immutable=True)
 async def embed(text: str) -> tuple:
     """Text-embedding model call."""
     return await get_dispatcher().embed(text)
 
 
-@unordered
+def _url_host(url) -> str:
+    """Scheme-agnostic host extraction (no urllib import on the hot path)."""
+    s = str(url)
+    rest = s.split("://", 1)[1] if "://" in s else s
+    return rest.split("/", 1)[0].split("?", 1)[0] or "unknown"
+
+
+def _http_effects(args, kwargs):
+    url = peek(args[0] if args else kwargs.get("url"))
+    if url is None or is_pending(url):
+        return None
+    return (f"http:{_url_host(url)}",)
+
+
+@unordered(effects=_http_effects, returns_immutable=True)
 async def http(url: str, payload=None) -> str:
-    """Generic asynchronous HTTP method for arbitrary stateless remote APIs.
-    Offline container: served by the simulated backend keyed on the URL."""
+    """Generic asynchronous HTTP method for arbitrary stateless remote APIs
+    (GETs — @unordered).  Declares a per-host effect domain for
+    observability (per-domain trace/dispatch stats); being unordered it
+    imposes no ordering regardless.  Offline container: served by the
+    simulated backend keyed on the URL."""
+    keys = _http_effects([url], {}) or ()
     return await get_dispatcher().generate(
-        f"{url}::{payload}", max_tokens=32, temperature=0.0, stop=None)
+        f"{url}::{payload}", max_tokens=32, temperature=0.0, stop=None,
+        domains=keys)
+
+
+@sequential(effects=_http_effects, returns_immutable=True)
+async def http_post(url: str, payload=None) -> str:
+    """Mutating HTTP call (POST/PUT — @sequential), ordered *per host*:
+    posts to distinct hosts overlap, posts to one host keep program order.
+    Offline container: served by the simulated backend."""
+    keys = _http_effects([url], {}) or ()
+    return await get_dispatcher().generate(
+        f"POST {url}::{payload}", max_tokens=32, temperature=0.0, stop=None,
+        domains=keys)
+
+
+# ---------------------------------------------------------------------------
+# session-keyed memory
+#
+# The canonical *stateful* component of compound-AI apps: per-session
+# conversation/agent memory.  Reads are @readonly and writes @sequential —
+# but keyed to the session's effect domain (DESIGN.md §2.2), so two
+# agents' memories never serialize against each other while one agent's
+# history keeps strict program order.
+
+
+class MemoryStore:
+    """Session-keyed memory with effect-domain-annotated accessors.
+
+    ``append(session, text)`` is ``@sequential(effects=("<name>:{session}",))``
+    and ``read(session)`` / ``size(session)`` are ``@readonly`` on the same
+    domain: within one session, reads see every preceding append and
+    appends keep program order; across sessions, everything overlaps.
+
+    Accessors run inline (``offload="inline"``) — they are dict operations,
+    not I/O.  ``name`` namespaces the effect domain (default ``"memory"``),
+    so two stores with different names are independent even for equal
+    session ids.
+    """
+
+    def __init__(self, name: str = "memory"):
+        self.name = name
+        self._data: dict = {}
+        store = self
+        dom = (f"{name}:{{session}}",)
+
+        @sequential(effects=dom, offload="inline", returns_immutable=True)
+        def append(session, text):
+            store._data.setdefault(session, []).append(text)
+            return None
+
+        @readonly(effects=dom, offload="inline", returns_immutable=True)
+        def read(session):
+            return tuple(store._data.get(session, ()))
+
+        @readonly(effects=dom, offload="inline", returns_immutable=True)
+        def size(session):
+            return len(store._data.get(session, ()))
+
+        for f, label in ((append, "append"), (read, "read"), (size, "size")):
+            f.__name__ = f.__qualname__ = f"{name}.{label}"
+            f.__poppy_external__.name = f"{name}.{label}"
+        self.append = append
+        self.read = read
+        self.size = size
+
+    def sessions(self) -> tuple:
+        return tuple(sorted(self._data))
+
+    def snapshot(self) -> dict:
+        return {k: tuple(v) for k, v in self._data.items()}
+
+    def clear(self):
+        self._data.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -301,7 +392,7 @@ def run_blocking(make_coro):
         "call to a worker thread")
 
 
-@unordered
+@unordered(returns_immutable=True)
 def llm_sync(prompt: str, *, max_tokens: int = 64, temperature: float = 0.0,
              stop=None) -> str:
     """Blocking LLM completion (the classic sync-SDK client).  @unordered:
@@ -311,17 +402,19 @@ def llm_sync(prompt: str, *, max_tokens: int = 64, temperature: float = 0.0,
         prompt, max_tokens=max_tokens, temperature=temperature, stop=stop))
 
 
-@unordered
+@unordered(returns_immutable=True)
 def embed_sync(text: str) -> tuple:
     """Blocking text-embedding call."""
     return run_blocking(lambda: get_dispatcher().embed(text))
 
 
-@unordered
+@unordered(effects=_http_effects, returns_immutable=True)
 def http_sync(url: str, payload=None) -> str:
     """Blocking HTTP method (the ``requests`` case)."""
+    keys = _http_effects([url], {}) or ()
     return run_blocking(lambda: get_dispatcher().generate(
-        f"{url}::{payload}", max_tokens=32, temperature=0.0, stop=None))
+        f"{url}::{payload}", max_tokens=32, temperature=0.0, stop=None,
+        domains=keys))
 
 
 class use_sync_clients:

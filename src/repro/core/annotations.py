@@ -17,6 +17,7 @@ from __future__ import annotations
 import asyncio
 import contextvars
 import functools
+import inspect
 import warnings
 
 from . import registry
@@ -144,8 +145,11 @@ def _external(info_factory):
             if tr is not None and current_runtime() is None:
                 cls = info.cls if info.cls is not None else \
                     info.classify(args, kwargs, ())
+                effs = registry.effect_keys(info, args, kwargs) \
+                    or (registry.STAR,)
                 tr.record_direct(info.name, cls,
-                                 args_repr=safe_repr((args, kwargs)))
+                                 args_repr=safe_repr((args, kwargs)),
+                                 effects=effs)
 
         # The engine never calls this wrapper — it dispatches
         # __poppy_dispatch__ directly.  The wrapper serves standard
@@ -173,17 +177,30 @@ def _external(info_factory):
     return deco
 
 
-def _static_info(cls_name, offload=None):
+def _sig_params(fn):
+    """Parameter names, for binding named effects-template fields
+    (``{session}``) to positional arguments.  Best effort."""
+    try:
+        return tuple(inspect.signature(fn).parameters)
+    except (ValueError, TypeError):
+        return None
+
+
+def _static_info(cls_name, offload=None, effects=None, imm_result=False):
     return lambda fn: registry.ExternalInfo(
-        cls=cls_name, name=registry.callable_name(fn), offload=offload)
+        cls=cls_name, name=registry.callable_name(fn), offload=offload,
+        effects=effects, params=_sig_params(fn), imm_result=imm_result)
 
 
-def _static_annotation(cls_name, fn, offload):
-    deco = _external(_static_info(cls_name, offload=offload))
+def _static_annotation(cls_name, fn, offload, effects=None,
+                       returns_immutable=False):
+    deco = _external(_static_info(cls_name, offload=offload, effects=effects,
+                                  imm_result=returns_immutable))
     return deco if fn is None else deco(fn)
 
 
-def unordered(fn=None, *, offload=None):
+def unordered(fn=None, *, offload=None, effects=None,
+              returns_immutable=False):
     """External call that may execute in any order (stateless externals,
     pure operations on immutable data).
 
@@ -191,29 +208,51 @@ def unordered(fn=None, *, offload=None):
     engine: ``"thread"`` (the default for sync externals) dispatches it on
     the runtime's thread-pool executor so blocking calls overlap;
     ``"inline"`` keeps it on the event-loop thread (for cheap calls, or
-    thread-affine clients)."""
-    return _static_annotation(registry.UNORDERED, fn, offload)
+    thread-affine clients).
+
+    ``effects`` declares the call's effect domains (DESIGN.md §2.2) — a
+    tuple of keys (entries may be per-call templates like
+    ``"memory:{session}"``) or a callable ``(args, kwargs) -> keys | None``.
+    Ordered calls (``@readonly``/``@sequential``) keyed to disjoint domains
+    run in parallel; the default ``None`` is the global domain ``"*"``.
+
+    ``returns_immutable`` declares the result a core builtin immutable
+    (str/tuple/int/…): downstream operators over the still-pending result
+    (f-strings, accumulators) then classify at queue time, keeping
+    unrelated effect domains decoupled."""
+    return _static_annotation(registry.UNORDERED, fn, offload, effects,
+                              returns_immutable)
 
 
-def readonly(fn=None, *, offload=None):
+def readonly(fn=None, *, offload=None, effects=None,
+             returns_immutable=False):
     """External call reorderable among other readonly calls but ordered with
-    respect to sequential calls (reads of mutable state)."""
-    return _static_annotation(registry.READONLY, fn, offload)
+    respect to sequential calls (reads of mutable state).  With ``effects``,
+    the ordering applies per effect domain (see ``unordered``)."""
+    return _static_annotation(registry.READONLY, fn, offload, effects,
+                              returns_immutable)
 
 
-def sequential(fn=None, *, offload=None):
+def sequential(fn=None, *, offload=None, effects=None,
+               returns_immutable=False):
     """External call that must execute in original program order (mutation,
-    I/O).  This is also the default for unannotated externals."""
-    return _static_annotation(registry.SEQUENTIAL, fn, offload)
+    I/O).  This is also the default for unannotated externals.  With
+    ``effects``, program order is preserved *per effect domain* — two
+    sequential calls on disjoint domains may overlap (see ``unordered``)."""
+    return _static_annotation(registry.SEQUENTIAL, fn, offload, effects,
+                              returns_immutable)
 
 
-def external(fn=None, *, classify, offload=None):
+def external(fn=None, *, classify, offload=None, effects=None,
+             returns_immutable=False):
     """External call with a *dynamic* classifier: ``classify(args, kwargs,
     fresh_mask) -> 'unordered'|'readonly'|'sequential'``."""
     def info_factory(f):
         return registry.ExternalInfo(classify=classify,
                                      name=registry.callable_name(f),
-                                     offload=offload)
+                                     offload=offload, effects=effects,
+                                     params=_sig_params(f),
+                                     imm_result=returns_immutable)
     if fn is None:
         return _external(info_factory)
     return _external(info_factory)(fn)

@@ -67,6 +67,10 @@ class BCall(BStmt):
     args: list[Reg]
     kwarg_names: list[str]  # names for the trailing len(kwarg_names) args
     callsite: str = ""      # "file:line fn-ish" for traces
+    # unpack=True — a call site with *args/**kwargs: ``args`` is exactly
+    # [positional-tuple reg, keyword-dict reg] (built by the frontend) and
+    # the engine splices them at dispatch.
+    unpack: bool = False
 
 
 @dataclass

@@ -1,10 +1,12 @@
-"""Dynamic concurrency control (paper §6.2).
+"""Dynamic concurrency control (paper §6.2, generalized to effect domains
+— DESIGN.md §2.2).
 
 Every queued external call is owned by a *concurrency controller* — a
 lightweight asyncio task that (1) learns which function is actually being
 called (solving dynamic dispatch), (2) classifies it (``unordered`` /
 ``readonly`` / ``sequential``) via the annotation registry, and (3) follows
-the lock protocol over the sequence-variable futures:
+the lock protocol over the sequence-variable futures of every effect
+domain the call is keyed to:
 
   F_R  — all preceding @sequential calls resolved         ("read lock")
   F_W  — all preceding @sequential and @readonly resolved ("write lock")
@@ -14,8 +16,11 @@ the lock protocol over the sequence-variable futures:
               await F_W → fulfill F_W'
   unordered:  forward both immediately; dispatch as soon as args resolve.
 
-Passing locks through the sequence variables is extensible — finer-grained
-reorderability = finer-grained locks.
+A call keyed to several domains awaits the *union* of their in-locks and
+fulfills one shared out-state that the engine installed for each key; a
+``"*"``-keyed call (the default) joins every live domain — exactly the
+paper's single-chain protocol.  Finer-grained reorderability =
+finer-grained locks.
 """
 
 from __future__ import annotations
@@ -37,19 +42,29 @@ def _resolve_lock(f):
         f.set_result(None)
 
 
-def _chain_lock(src, dst):
-    """dst resolves when src does (src may already be resolved/None)."""
+def _chain_all(srcs, dst):
+    """dst resolves when every src future has (srcs may be resolved/None)."""
     if dst is None:
         return
-    if src is None or src.done():
+    pending = [f for f in srcs if f is not None and not f.done()]
+    if not pending:
         _resolve_lock(dst)
-    else:
-        src.add_done_callback(lambda _: _resolve_lock(dst))
+        return
+    remaining = {"n": len(pending)}
+
+    def one_done(_):
+        remaining["n"] -= 1
+        if remaining["n"] == 0:
+            _resolve_lock(dst)
+
+    for f in pending:
+        f.add_done_callback(one_done)
 
 
-async def _await_lock(f):
-    if f is not None and not f.done():
-        await f
+async def _await_locks(futs):
+    for f in futs:
+        if f is not None and not f.done():
+            await f
 
 
 def unwrap_external(fn):
@@ -88,20 +103,42 @@ async def invoke_external(rt, fn, pos, kw, ev):
         raise ExternalCallError(registry.callable_name(fn), e) from e
     if rt.trace is not None:
         rt.trace.resolved(ev)
+        if ev is not None:
+            # record the *declared* effect keys now that arguments are
+            # concrete — locking may have been degraded to "*" while a key
+            # argument was still pending, but the trace must carry the
+            # deterministic declaration so per-domain ≡_A projections
+            # match the plain-Python run
+            info = getattr(fn, "__poppy_external__", None)
+            if info is not None and info.effects is not None:
+                effs = registry.effect_keys(info, pos, kw)
+                if effs is not None:
+                    rt.trace.set_effects(ev, effs)
     return result
 
 
-async def external_controller(rt, fn, pos, kw, fresh, s_in, out_state: SeqState,
-                              dfut: asyncio.Future, callsite: str):
-    """The controller coroutine for one queued external call."""
+async def external_controller(rt, fn, pos, kw, fresh, keys, links,
+                              dfut: asyncio.Future, callsite: str,
+                              resolve_links=None):
+    """The controller coroutine for one queued external call.
+
+    ``keys`` are the effect-domain keys the engine resolved for this call;
+    ``links`` pairs each affected domain's in-state with the fresh
+    out-state the engine installed under that key
+    (:meth:`KeyedSeqState.fork`).
+
+    When the incoming keyed state was itself still a placeholder at queue
+    time (a control-flow boundary still expanding), the engine passes
+    ``links=None`` plus ``resolve_links`` — an async thunk that awaits the
+    state, forks it, and returns ``(keys, links)``.  Unordered calls then
+    dispatch *immediately* and plumb their lock-chaining concurrently:
+    they never wait on locks, so a pending ordering state must not delay
+    them (an LLM fan-out downstream of an unresolved conditional is the
+    paper's bread-and-butter parallelism).
+    """
     ev = rt.trace.queued(registry.callable_name(fn), callsite,
                          wrapped=hasattr(fn, "__poppy_dispatch__")) \
         if rt.trace is not None else None
-
-    s_in = await shallow(s_in)
-    if not isinstance(s_in, SeqState):
-        raise PoppyRuntimeError(
-            f"internal: sequence variable resolved to {type(s_in)}")
 
     info = getattr(fn, "__poppy_external__", None)
     if registry.sequential_forced():
@@ -117,38 +154,62 @@ async def external_controller(rt, fn, pos, kw, fresh, s_in, out_state: SeqState,
         pos = cpos
         kw = ckw
     if ev is not None:
-        rt.trace.classified(ev, cls)
+        rt.trace.classified(ev, cls, effects=keys)
 
+    if links is None:
+        if cls == UNORDERED:
+            # dispatch now; chain each domain's locks through once the
+            # keyed state lands (unordered never waits on locks)
+            async def plumb():
+                _, late_links = await resolve_links()
+                for s, o in late_links:
+                    _chain_all([s.f_r], o.f_r)
+                    _chain_all([s.f_w], o.f_w)
+
+            rt.spawn(plumb())
+            result = await invoke_external(rt, fn, pos, kw, ev)
+            dfut.set_result(result)
+            return
+        keys, links = await resolve_links()
+        if ev is not None:
+            rt.trace.classified(ev, cls, effects=keys)
+
+    outs = list({id(o): o for _, o in links}.values())
     # Lock futures are resolved in a ``finally``: a failing call must not
-    # leave ``out_state`` unresolved, or every downstream controller parks
+    # leave an out-state unresolved, or every downstream controller parks
     # on a lock nobody will ever release.  Failure is recorded on the
     # runtime *before* the locks release (the ``except`` below runs first),
     # so a sibling waking on a freed lock sees ``rt.error`` set and parks in
     # ``invoke_external`` instead of dispatching an external that standard
     # sequential Python would never have reached.
     if cls == UNORDERED:
-        _chain_lock(s_in.f_r, out_state.f_r)
-        _chain_lock(s_in.f_w, out_state.f_w)
+        # no ordering: forward each domain's chain through *its own*
+        # out-state, never coupling domains
+        for s, o in links:
+            _chain_all([s.f_r], o.f_r)
+            _chain_all([s.f_w], o.f_w)
         result = await invoke_external(rt, fn, pos, kw, ev)
         dfut.set_result(result)
     elif cls == READONLY:
         try:
-            await s_in.wait_r()
-            _resolve_lock(out_state.f_r)  # forward before dispatching
+            await _await_locks([s.f_r for s, _ in links])
+            for o in outs:
+                _resolve_lock(o.f_r)  # forward before dispatching
             result = await invoke_external(rt, fn, pos, kw, ev)
             dfut.set_result(result)
-            await s_in.wait_w()
+            await _await_locks([s.f_w for s, _ in links])
         except BaseException as e:
             if not isinstance(e, asyncio.CancelledError):
                 rt.fail(e)
             raise
         finally:
-            _resolve_lock(out_state.f_r)
-            _resolve_lock(out_state.f_w)
+            for o in outs:
+                _resolve_lock(o.f_r)
+                _resolve_lock(o.f_w)
     elif cls == SEQUENTIAL:
         try:
-            await s_in.wait_r()
-            await s_in.wait_w()
+            await _await_locks([s.f_r for s, _ in links])
+            await _await_locks([s.f_w for s, _ in links])
             result = await invoke_external(rt, fn, pos, kw, ev)
             dfut.set_result(result)
         except BaseException as e:
@@ -156,7 +217,8 @@ async def external_controller(rt, fn, pos, kw, fresh, s_in, out_state: SeqState,
                 rt.fail(e)
             raise
         finally:
-            _resolve_lock(out_state.f_r)
-            _resolve_lock(out_state.f_w)
+            for o in outs:
+                _resolve_lock(o.f_r)
+                _resolve_lock(o.f_w)
     else:  # pragma: no cover
         raise PoppyRuntimeError(f"unknown reordering class {cls!r}")

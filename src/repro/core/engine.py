@@ -42,7 +42,8 @@ from .lambda_o import (
 )
 from .trace import Trace, current_trace
 from .values import (
-    S_READY,
+    KS_READY,
+    STAR,
     UNBOUND,
     Pending,
     SeqState,
@@ -50,6 +51,7 @@ from .values import (
     deep_ready,
     deep_resolve,
     is_pending,
+    peek,
     shallow,
 )
 
@@ -336,7 +338,7 @@ class Runtime:
             vals = [ba.arguments[p] for p in lf.params]
         else:
             vals = bind_positional(lf.name, lf.params, pos, kw)
-        return vals + list(captured) + [S_READY]
+        return vals + list(captured) + [KS_READY]
 
     # -- block instantiation ----------------------------------------------------
 
@@ -561,8 +563,27 @@ class Runtime:
     def _step_call(self, op: LCallOp, frame: Frame):
         regs = frame.regs
         fnv = regs[op.fn]
-        s_in = regs[op.s_in]
-        pos, kw, fresh = self._split_args(op, frame)
+        s_in = peek(regs[op.s_in])
+
+        if op.unpack:
+            # *args/**kwargs call site: args = (pos-tuple reg, kw-dict reg);
+            # splice once the container spines are known (elements may
+            # still be Pending — exactly like normal call arguments)
+            pos_c = peek(regs[op.args[0]])
+            kw_c = peek(regs[op.args[1]])
+            if is_pending(pos_c) or is_pending(kw_c):
+                dfut = self.new_future()
+                sfut = self.new_future()
+                regs[op.dst] = Pending(dfut)
+                regs[op.s_out] = Pending(sfut)
+                self.spawn(self._deferred_unpack(op, fnv, pos_c, kw_c, s_in,
+                                                 dfut, sfut))
+                return
+            pos = list(check_bound(pos_c))
+            kw = dict(check_bound(kw_c))
+            fresh = ()
+        else:
+            pos, kw, fresh = self._split_args(op, frame)
 
         if not is_pending(fnv):
             fn = check_bound(fnv)
@@ -588,14 +609,47 @@ class Runtime:
                                                          op.callsite)
                     regs[op.s_out] = s_in  # forward locks unchanged
                     return
-            # queued external call: spawn a concurrency controller
+            # static-unordered fast path: loop glue (operators over
+            # immutable accumulators) classifies at queue time even while
+            # argument *values* are pending, so it forwards the keyed
+            # ordering state untouched — independent domains stay
+            # independent across ``acc += (x,)`` chains
+            su = registry.static_unordered(fn, pos, kw, fresh)
+            if su is not None:
+                dfut = self.new_future()
+                regs[op.dst] = Pending(dfut, imm_hint=su)
+                regs[op.s_out] = s_in
+                self.spawn(external_controller(
+                    self, fn, pos, kw, fresh, (STAR,), [], dfut,
+                    op.callsite))
+                return
+            # queued external call: resolve the effect-domain keys, fork
+            # the keyed ordering state, and spawn a concurrency controller.
+            # The result hint is trusted only for *statically-classed*
+            # annotations (the user's returns_immutable contract) — for a
+            # dynamically-classified intrinsic, imm_result is conditional
+            # on the arguments being immutable, which only the
+            # static-unordered fast path above proves (list + list returns
+            # a mutable list).
+            info = getattr(fn, "__poppy_external__", None)
             dfut = self.new_future()
-            out_state = SeqState(self.new_future(), self.new_future())
-            regs[op.dst] = Pending(dfut)
-            regs[op.s_out] = out_state
+            regs[op.dst] = Pending(
+                dfut, imm_hint=info is not None and info.cls is not None
+                and info.imm_result)
+            if is_pending(s_in):
+                # ordering state not yet known (e.g. downstream of a
+                # deferred method call): defer the fork itself so per-domain
+                # precision is preserved — the locks, not the state value,
+                # are what gates dispatch
+                sfut = self.new_future()
+                regs[op.s_out] = Pending(sfut)
+                self.spawn(self._queued_after_s(op, fn, pos, kw, fresh,
+                                                s_in, dfut, sfut))
+                return
+            keys, out_keyed, links = self._fork_keyed(fn, pos, kw, s_in)
+            regs[op.s_out] = out_keyed
             self.spawn(external_controller(
-                self, fn, pos, kw, fresh, s_in, out_state, dfut,
-                op.callsite))
+                self, fn, pos, kw, fresh, keys, links, dfut, op.callsite))
             return
 
         # unknown callee: defer everything
@@ -605,6 +659,43 @@ class Runtime:
         regs[op.s_out] = Pending(sfut)
         self.spawn(self._deferred_call(op, fnv, pos, kw, fresh, s_in,
                                        dfut, sfut))
+
+    def _new_seq_state(self) -> SeqState:
+        return SeqState(self.new_future(), self.new_future())
+
+    def _fork_keyed(self, fn, pos, kw, s_in):
+        """Resolve a queued call's effect keys and fork the keyed state.
+
+        When a key-determining argument is still pending, locking degrades
+        to the ``"*"`` domain — the call orders against everything, which
+        only over-orders (always sound); the trace later records the
+        declared keys once arguments resolve."""
+        keys = registry.resolve_effect_keys(fn, pos, kw)
+        keys = (STAR,) if keys is None else tuple(dict.fromkeys(keys))
+        out_keyed, links = s_in.fork(keys, self._new_seq_state)
+        return keys, out_keyed, links
+
+    async def _deferred_unpack(self, op, fnv, pos_c, kw_c, s_in, dfut, sfut):
+        pos_c = check_bound(await shallow(pos_c))
+        kw_c = check_bound(await shallow(kw_c))
+        await self._deferred_call(op, fnv, list(pos_c), dict(kw_c), (),
+                                  s_in, dfut, sfut)
+
+    async def _queued_after_s(self, op, fn, pos, kw, fresh, s_in, dfut, sfut):
+        """Known external callee, pending ordering state: run the
+        controller now with a thunk that awaits the keyed state and forks
+        it with full per-domain precision.  The controller uses the thunk
+        lazily — unordered calls dispatch before the state even lands."""
+
+        async def resolve_links():
+            s = await shallow(s_in)
+            keys, out_keyed, links = self._fork_keyed(fn, pos, kw, s)
+            sfut.set_result(out_keyed)
+            return keys, links
+
+        await external_controller(self, fn, pos, kw, fresh, (STAR,), None,
+                                  dfut, op.callsite,
+                                  resolve_links=resolve_links)
 
     def _dispatch_inline(self, fn, pos, kw, callsite):
         from .controllers import unwrap_external
@@ -645,9 +736,13 @@ class Runtime:
             _fulfill(dfut, outs[0])
             _fulfill(sfut, outs[1])
             return
-        out_state = SeqState(self.new_future(), self.new_future())
-        sfut.set_result(out_state)
-        await external_controller(self, fn, pos, kw, fresh, s_in, out_state,
+        # the deferred path can afford to await the keyed in-state, so it
+        # resolves effect keys with full precision (no "*" degradation for
+        # a merely-pending ordering state)
+        s_in = await shallow(s_in)
+        keys, out_keyed, links = self._fork_keyed(fn, pos, kw, s_in)
+        sfut.set_result(out_keyed)
+        await external_controller(self, fn, pos, kw, fresh, keys, links,
                                   dfut, op.callsite)
 
 

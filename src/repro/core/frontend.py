@@ -314,18 +314,87 @@ class _FuncCompiler:
 
     def call_expr(self, e: ast.Call, out) -> int:
         fn = self.expr(e.func, out)
+        if any(isinstance(a, ast.Starred) for a in e.args) or \
+                any(kw.arg is None for kw in e.keywords):
+            return self.unpacked_call(fn, e, out)
         args = []
         for a in e.args:
-            if isinstance(a, ast.Starred):
-                raise PoppyCompileError("*args at call site unsupported", e)
             args.append(self.expr(a, out))
         kwnames = []
         for kw in e.keywords:
-            if kw.arg is None:
-                raise PoppyCompileError("**kwargs at call site unsupported", e)
             kwnames.append(kw.arg)
             args.append(self.expr(kw.value, out))
         return self.call(fn, args, out, e, kwarg_names=kwnames)
+
+    def unpacked_call(self, fn, e: ast.Call, out) -> int:
+        """Call site with ``*args``/``**kwargs``: build one positional
+        tuple and one keyword dict (CPython's left-to-right evaluation
+        order), then emit a ``BCall(unpack=True)`` that the engine splices
+        at dispatch.  Starred segments snapshot through ``iter_spine``
+        (same read classification as a ``for`` spine); ``**m`` goes
+        through ``py_kwargs`` (string-key validation) and segments merge
+        via ``py_kw_merge`` (CPython's duplicate-keyword TypeError)."""
+        seg_regs = []
+        plain: list[int] = []
+
+        def flush_plain():
+            if plain:
+                r = self.reg()
+                out.append(BPrim(r, "tuple", list(plain), lineno=e.lineno))
+                seg_regs.append(r)
+                plain.clear()
+
+        for a in e.args:
+            if isinstance(a, ast.Starred):
+                flush_plain()
+                v = self.expr(a.value, out)
+                seg_regs.append(
+                    self.call_intrinsic(stdlib.iter_spine, [v], out, e))
+            else:
+                plain.append(self.expr(a, out))
+        flush_plain()
+        if not seg_regs:
+            pos_reg = self.const((), out, e)
+        else:
+            pos_reg = seg_regs[0]
+            for s in seg_regs[1:]:
+                pos_reg = self.call_intrinsic(
+                    stdlib.py_add, [pos_reg, s], out, e)
+
+        kseg_regs = []
+        pairs: list[int] = []
+
+        def flush_pairs():
+            if pairs:
+                r = self.reg()
+                out.append(BPrim(r, "dict", list(pairs), lineno=e.lineno))
+                kseg_regs.append(r)
+                pairs.clear()
+
+        for kw in e.keywords:
+            if kw.arg is None:
+                flush_pairs()
+                m = self.expr(kw.value, out)
+                kseg_regs.append(
+                    self.call_intrinsic(stdlib.py_kwargs, [m], out, e))
+            else:
+                pairs.append(self.const(kw.arg, out, e))
+                pairs.append(self.expr(kw.value, out))
+        flush_pairs()
+        if not kseg_regs:
+            kw_reg = self.reg()
+            out.append(BPrim(kw_reg, "dict", [], lineno=e.lineno))
+        else:
+            kw_reg = kseg_regs[0]
+            for s in kseg_regs[1:]:
+                kw_reg = self.call_intrinsic(
+                    stdlib.py_kw_merge, [kw_reg, s], out, e)
+
+        r = self.reg()
+        out.append(BCall(r, fn, [pos_reg, kw_reg], [],
+                         callsite=self.callsite(e),
+                         lineno=getattr(e, "lineno", 0), unpack=True))
+        return r
 
     def truth(self, reg, out, node) -> int:
         return self.call_intrinsic(stdlib.py_truth, [reg], out, node)

@@ -71,6 +71,9 @@ class LCallOp:
     s_in: int
     fresh: tuple           # per-arg static freshness (unaliased literal)
     callsite: str = ""
+    # unpack=True — *args/**kwargs call site: ``args`` is exactly
+    # (pos-tuple reg, kw-dict reg), spliced by the engine at dispatch
+    unpack: bool = False
 
 
 @dataclass

@@ -173,7 +173,8 @@ class _BlockBuilder:
                 dst = self.newreg()
                 s_out = self.newreg()
                 self.emit(LCallOp(dst, s_out, fn, args, tuple(s.kwarg_names),
-                                  s_in, fresh=(), callsite=s.callsite))
+                                  s_in, fresh=(), callsite=s.callsite,
+                                  unpack=s.unpack))
                 self.bmap[s.dst] = dst
                 self.env[_S] = s_out
             elif isinstance(s, BIf):

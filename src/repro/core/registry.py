@@ -22,9 +22,12 @@ import datetime
 import enum
 import functools
 import inspect
+import string
 import types
 
 import contextvars
+
+from .values import STAR, Pending, deep_ready, is_pending, peek
 
 UNORDERED = "unordered"
 READONLY = "readonly"
@@ -64,20 +67,55 @@ _OFFLOADS = (OFFLOAD_THREAD, OFFLOAD_INLINE)
 
 
 class ExternalInfo:
-    """Attached to external callables as ``__poppy_external__``."""
+    """Attached to external callables as ``__poppy_external__``.
 
-    __slots__ = ("cls", "classify", "name", "offload")
+    ``effects`` declares the call's *effect domains* (DESIGN.md §2.2):
 
-    def __init__(self, cls=None, classify=None, name="", offload=None):
+      * ``None`` — the default domain ``"*"`` (orders against everything;
+        today's single-chain behavior).
+      * a tuple of strings — static keys; entries containing ``{field}``
+        placeholders are per-call templates formatted from the argument
+        named/indexed by ``field`` (``{0}``, ``{session}``).
+      * a callable ``(args, kwargs) -> keys | None`` — evaluated per call;
+        arguments may still be ``Pending`` placeholders (check with
+        ``repro.core.values.is_pending``); return ``None`` when the keys
+        cannot be determined yet, and the engine conservatively degrades
+        the *locking* to ``"*"`` (the trace still records the declared
+        keys once arguments resolve).
+
+    Keys must be deterministic functions of the arguments for annotated
+    (wrapped) externals — the per-domain ≡_A projections compare them
+    across plain-Python and PopPy runs.
+
+    ``imm_result`` declares that the call always returns a *core builtin
+    immutable* (str/tuple/int/…).  The engine then marks the result's
+    placeholder with an ``imm_hint``, which lets downstream operator
+    intrinsics (f-strings over an LLM answer, tuple accumulators) classify
+    at queue time instead of conservatively routing every effect domain
+    through themselves.  True for the entire AI component library — LLM
+    answers and embeddings are strings/tuples.
+    """
+
+    __slots__ = ("cls", "classify", "name", "offload", "effects", "params",
+                 "imm_result")
+
+    def __init__(self, cls=None, classify=None, name="", offload=None,
+                 effects=None, params=None, imm_result=False):
         assert (cls is None) != (classify is None)
         if cls is not None:
             assert cls in _CLASSES, cls
         if offload is not None:
             assert offload in _OFFLOADS, offload
+        if effects is not None and not callable(effects):
+            effects = tuple(effects)
+            assert all(isinstance(k, str) for k in effects), effects
         self.cls = cls
         self.classify = classify
         self.name = name
         self.offload = offload
+        self.effects = effects
+        self.params = tuple(params) if params is not None else None
+        self.imm_result = bool(imm_result)
 
 
 def annotated_offload(fn):
@@ -197,6 +235,21 @@ def classify_inplace(args, kwargs, fresh_mask):
     return UNORDERED
 
 
+def classify_write(args, kwargs, fresh_mask):
+    """Mutating writes (``py_setattr``/``py_setitem``): mirrors
+    ``classify_inplace``.  The target (``args[0]``) is mutated →
+    sequential; but a *fresh* target (single-consumer literal whose
+    contents are immutable — ``arg_immutable``'s upgrade) is unaliased
+    and unobservable, so the write orders only by its value arguments:
+    any mutable value → readonly, all immutable → unordered."""
+    target = args[0]
+    if not arg_immutable(target, fresh_mask[0] if fresh_mask else False):
+        return SEQUENTIAL
+    rest = args[1:]
+    rest_mask = fresh_mask[1:] if fresh_mask else ()
+    return UNORDERED if _all_imm(rest, rest_mask) else READONLY
+
+
 def classify_read(args, kwargs, fresh_mask):
     """Pure reads: unordered on immutable data, readonly on mutable."""
     return UNORDERED if _all_imm(args, fresh_mask) else READONLY
@@ -264,6 +317,240 @@ def classify_iter_spine(args, kwargs, fresh_mask):
     if exhausts_iterator(v):
         return READONLY
     return classify_read(args, kwargs, fresh_mask)
+
+
+# ---------------------------------------------------------------------------
+# static-unordered fast path (engine queue-time classification)
+#
+# Loop glue — operators on immutable accumulators (``acc += (x,)``) — is
+# dynamically classified, which normally means the controller must await
+# argument *spines* before it can forward any locks.  Under keyed sequence
+# variables that laziness is costly: an unclassified call must
+# conservatively route every domain through itself.  But when every
+# argument is either a core builtin immutable or a ``Pending`` carrying an
+# ``imm_hint``, the class is *statically* unordered: the engine skips the
+# keyed fork entirely and threads the ordering state through unchanged.
+
+#: Core builtin immutables: types whose operator results are themselves
+#: builtin immutables and which are never exhaustible iterators.  (Shallow
+#: rule: tuple/frozenset qualify regardless of element types, exactly like
+#: ``is_immutable``.)  Deliberately excludes module/function/method atoms —
+#: reading through those can reach arbitrary objects.
+_HINT_IMM_TYPES = frozenset({
+    bool, int, float, complex, str, bytes, type(None), tuple, frozenset,
+    range, slice, type(Ellipsis), type(NotImplemented), datetime.date,
+    datetime.time, datetime.datetime, datetime.timedelta, datetime.timezone,
+})
+
+
+def static_unordered(fn, pos, kw, fresh_mask):
+    """Queue-time classification for dynamic intrinsics.
+
+    Returns ``None`` unless the call is *provably* unordered from argument
+    types/hints alone; otherwise returns the result ``imm_hint``
+    (``info.imm_result`` — True for operator intrinsics and f-strings,
+    whose results over builtin immutables are builtin immutables; False
+    for reads like ``py_getitem``, whose result may be a mutable element).
+    Sound by construction: the controller's dynamic classification of the
+    same call necessarily agrees (every hinted argument resolves to a
+    builtin immutable)."""
+    if kw or _force_sequential.get():
+        return None
+    info = getattr(fn, "__poppy_external__", None)
+    if info is None or info.classify not in _STATIC_UNORDERED_CLASSIFIERS:
+        return None
+    for a in pos:
+        a = peek(a)
+        if type(a) is Pending:
+            if not a.imm_hint:
+                return None
+        elif type(a) not in _HINT_IMM_TYPES:
+            return None
+    return info.imm_result
+
+
+_STATIC_UNORDERED_CLASSIFIERS = frozenset({
+    classify_binary, classify_inplace, classify_read, classify_iter_spine,
+    classify_unordered,
+})
+
+
+# ---------------------------------------------------------------------------
+# effect domains (DESIGN.md §2.2)
+#
+# Every queued external call carries a tuple of *effect-domain keys* that
+# select which per-domain lock chains it orders against.  ``("*",)`` — the
+# default — joins every live domain (the paper's single-chain behavior).
+
+_formatter = string.Formatter()
+
+
+def object_domain(obj) -> str:
+    """Anonymous per-object effect domain, keyed by identity.  Used for
+    interpreter intrinsics and container methods: mutations/reads of one
+    concrete object order among themselves but not against unrelated
+    domains.  ``obj:`` keys are run-local (ids differ across runs) — only
+    sound for *unwrapped* events, which the ≡_A checker never compares."""
+    return f"obj:{id(obj):x}"
+
+
+def _effects_obj(args, kwargs):
+    """Effects callable for intrinsics whose first argument is the object
+    read or written (``py_getitem``, ``py_setitem``, ``py_truth``,
+    ``iter_spine``).
+
+    Identity-keying is restricted to the four known mutable container
+    types, whose spine operations provably touch only the receiver.  Any
+    other mutable target keeps the global ``"*"`` domain — a custom
+    ``__getitem__``/``__bool__``/``__iter__`` can run arbitrary code, so it
+    must stay ordered against everything (the paper's table discipline).
+    """
+    target = peek(args[0]) if args else None
+    if is_pending(target):
+        return None
+    if type(target) in _MUTATING_METHODS:  # list, dict, set, bytearray
+        return (object_domain(target),)
+    return (STAR,)
+
+
+def _effects_obj_attr(args, kwargs):
+    """Effects callable for ``py_getattr``/``py_setattr``: the target's
+    identity domain, but only for plain instances — default
+    ``__getattribute__``/``__setattr__`` and no descriptor under the
+    attribute name — so the access provably touches only the instance
+    ``__dict__``.  Properties, slots, and custom attribute hooks can run
+    arbitrary code and stay on ``"*"``."""
+    o = peek(args[0]) if args else None
+    name = peek(args[1]) if len(args) > 1 else None
+    if is_pending(o) or is_pending(name):
+        return None
+    t = type(o)
+    if (getattr(t, "__getattribute__", None) is not object.__getattribute__
+            or getattr(t, "__setattr__", None) is not object.__setattr__
+            or getattr(t, "__getattr__", None) is not None):
+        return (STAR,)
+    cattr = getattr(t, name, None) if isinstance(name, str) else None
+    if cattr is not None and (hasattr(type(cattr), "__get__")
+                              or hasattr(type(cattr), "__set__")):
+        return (STAR,)  # descriptor (property/slot/method) — arbitrary code
+    return (object_domain(o),)
+
+
+def _template_value(field, pos, kw, params):
+    """Resolve one ``{field}`` of an effects template against a call's
+    arguments.  Returns (found, value)."""
+    if field in kw:
+        return True, kw[field]
+    if field.isdigit():
+        i = int(field)
+        return (True, pos[i]) if i < len(pos) else (False, None)
+    if params and field in params:
+        i = params.index(field)
+        if i < len(pos):
+            return True, pos[i]
+    return False, None
+
+
+def _format_effect_key(template, pos, kw, params):
+    """Format one effects template; ``None`` if a referenced argument is
+    missing or not yet resolved."""
+    out = []
+    for literal, field, spec, conv in _formatter.parse(template):
+        out.append(literal)
+        if field is None:
+            continue
+        found, v = _template_value(field, pos, kw, params)
+        if not found:
+            return None
+        v = peek(v)
+        if not deep_ready(v):
+            return None
+        if conv == "r":
+            v = repr(v)
+        elif conv == "s":
+            v = str(v)
+        out.append(format(v, spec or ""))
+    return "".join(out)
+
+
+def effect_keys(info: ExternalInfo, pos, kw):
+    """Evaluate an annotation's declared effect keys for one call.
+
+    Returns a tuple of keys, or ``None`` when they cannot be determined yet
+    (an argument a template/callable needs is still ``Pending``).  A
+    callable that raises degrades to ``("*",)`` — deterministically, so
+    plain-Python and PopPy runs record the same keys."""
+    eff = info.effects
+    if eff is None:
+        return (STAR,)
+    if callable(eff):
+        try:
+            keys = eff(list(pos), dict(kw))
+        except Exception:
+            return (STAR,)
+        if keys is None:
+            return None
+        keys = tuple(str(k) for k in keys)
+        return keys if keys else (STAR,)
+    out = []
+    for t in eff:
+        if "{" not in t:
+            out.append(t)
+            continue
+        k = _format_effect_key(t, pos, kw, info.params)
+        if k is None:
+            return None
+        out.append(k)
+    # an empty declaration normalizes to the global domain, like the
+    # callable branch — zero keys would mean zero locks (no ordering)
+    return tuple(out) or (STAR,)
+
+
+# Receiver-only container methods: provably touch nothing beyond the
+# receiver (no element __eq__/__hash__ content reads of *other* mutable
+# objects, no callable arguments, no iteration of a foreign iterable), so
+# they may be keyed to the receiver's identity domain.  ``sort(key=...)``,
+# ``extend(iterable)``, ``count(x)`` etc. stay on ``"*"``.
+_RECEIVER_ONLY_METHODS: dict[type, frozenset] = {
+    list: frozenset({"append", "insert", "pop", "clear", "reverse", "copy",
+                     "__setitem__", "__delitem__", "__len__"}),
+    dict: frozenset({"__setitem__", "__delitem__", "clear", "pop", "popitem",
+                     "setdefault", "get", "keys", "values", "items", "copy",
+                     "__len__"}),
+    set: frozenset({"add", "discard", "remove", "pop", "clear", "copy",
+                    "__len__"}),
+    bytearray: frozenset({"append", "pop", "clear", "reverse", "copy",
+                          "__setitem__", "__delitem__", "__len__"}),
+}
+
+
+def dynamic_effect_keys(fn):
+    """Effect keys for an *unannotated* callable: receiver-only bound
+    methods of the four known mutable container types are keyed to their
+    receiver's identity domain (``lst.append(x)`` orders with other
+    operations on ``lst``, not with the world); everything else — unknown
+    functions, builtins, constructors, content-reading methods — defaults
+    to ``"*"`` (may touch anything)."""
+    if isinstance(fn, functools.partial):
+        return dynamic_effect_keys(fn.func)
+    self_obj = getattr(fn, "__self__", None)
+    if self_obj is not None:
+        safe = _RECEIVER_ONLY_METHODS.get(type(self_obj))
+        if safe is not None and getattr(fn, "__name__", "") in safe:
+            return (object_domain(self_obj),)
+    return (STAR,)
+
+
+def resolve_effect_keys(fn, pos, kw):
+    """Effect-domain keys for a call to ``fn``, or ``None`` if not yet
+    determinable (the engine then degrades locking to ``"*"``, which only
+    over-orders — always sound)."""
+    if _force_sequential.get():
+        return (STAR,)  # Fig. 7 overhead mode: one chain, zero parallelism
+    info = getattr(fn, "__poppy_external__", None)
+    if info is None:
+        return dynamic_effect_keys(fn)
+    return effect_keys(info, pos, kw)
 
 
 def get_callable_class(fn, args, kwargs, fresh_mask):

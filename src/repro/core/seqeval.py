@@ -87,8 +87,11 @@ def run_block_sequential(lfunc: LFunc, block: LBlock, inputs):
         elif t is LCallOp:
             fn = check_bound(regs[op.fn])
             vals = [check_bound(regs[a]) for a in op.args]
-            npos = len(vals) - len(op.kwnames)
-            pos, kw = vals[:npos], dict(zip(op.kwnames, vals[npos:]))
+            if op.unpack:
+                pos, kw = list(vals[0]), dict(vals[1])
+            else:
+                npos = len(vals) - len(op.kwnames)
+                pos, kw = vals[:npos], dict(zip(op.kwnames, vals[npos:]))
             if getattr(fn, "__poppy_internal__", False):
                 regs[op.dst] = call_internal_sequential(fn, pos, kw)
             else:

@@ -13,28 +13,36 @@ import operator as _op
 
 from .registry import (
     ExternalInfo,
+    _effects_obj,
+    _effects_obj_attr,
     classify_binary,
     classify_inplace,
     classify_iter_spine,
     classify_read,
-    classify_sequential,
     classify_unordered,
+    classify_write,
 )
 
 
-def _intrinsic(classify, name=None):
+def _intrinsic(classify, name=None, effects=None, imm_result=False):
     # offload="inline": intrinsics are interpreter-level work (an add, an
     # index) — a thread round-trip would cost orders of magnitude more than
     # the operation itself, so they always execute on the loop thread.
+    #
+    # effects=_effects_obj keys object-touching intrinsics to the target's
+    # *identity domain* (DESIGN.md §2.2): a ``d[k] = v`` on one local dict
+    # orders with other reads/writes of that same dict, not with unrelated
+    # sequential externals.
     def deco(fn):
         fn.__poppy_external__ = ExternalInfo(
-            classify=classify, name=name or fn.__name__, offload="inline")
+            classify=classify, name=name or fn.__name__, offload="inline",
+            effects=effects, imm_result=imm_result)
         return fn
     return deco
 
 
 def _binary(name, fn):
-    @_intrinsic(classify_binary, name)
+    @_intrinsic(classify_binary, name, imm_result=True)
     def g(a, b, _fn=fn):
         return _fn(a, b)
     g.__name__ = g.__qualname__ = name
@@ -42,7 +50,7 @@ def _binary(name, fn):
 
 
 def _inplace(name, fn):
-    @_intrinsic(classify_inplace, name)
+    @_intrinsic(classify_inplace, name, imm_result=True)
     def g(a, b, _fn=fn):
         return _fn(a, b)
     g.__name__ = g.__qualname__ = name
@@ -50,7 +58,7 @@ def _inplace(name, fn):
 
 
 def _unary(name, fn):
-    @_intrinsic(classify_binary, name)
+    @_intrinsic(classify_binary, name, imm_result=True)
     def g(a, _fn=fn):
         return _fn(a)
     g.__name__ = g.__qualname__ = name
@@ -83,10 +91,12 @@ py_not_contains = _binary("py_not_contains", lambda c, x: x not in c)
 # identity is pure regardless of mutability
 py_is = _binary("py_is", _op.is_)
 py_is.__poppy_external__ = ExternalInfo(
-    classify=classify_unordered, name="py_is", offload="inline")
+    classify=classify_unordered, name="py_is", offload="inline",
+    imm_result=True)
 py_is_not = _binary("py_is_not", _op.is_not)
 py_is_not.__poppy_external__ = ExternalInfo(
-    classify=classify_unordered, name="py_is_not", offload="inline")
+    classify=classify_unordered, name="py_is_not", offload="inline",
+    imm_result=True)
 
 # in-place operators ----------------------------------------------------------
 py_iadd = _inplace("py_iadd", _op.iadd)
@@ -111,42 +121,50 @@ py_not = _unary("py_not", _op.not_)
 
 
 # attribute / item access ------------------------------------------------------
-@_intrinsic(classify_read)
+#
+# Reads and writes of one object are keyed to its identity effect domain
+# (``_effects_obj``): they order among themselves and against any
+# ``"*"``-keyed call (every unannotated external), but not against
+# unrelated domains — a local-dict build no longer serializes unrelated
+# sequential externals.  Writes use ``classify_write`` (the
+# ``classify_inplace`` mirror): mutation → sequential-in-domain, unless the
+# target is a fresh single-consumer literal.
+@_intrinsic(classify_read, effects=_effects_obj_attr)
 def py_getattr(o, name):
     return getattr(o, name)
 
 
-@_intrinsic(classify_sequential)
+@_intrinsic(classify_write, effects=_effects_obj_attr, imm_result=True)
 def py_setattr(o, name, v):
     setattr(o, name, v)
     return None
 
 
-@_intrinsic(classify_read)
+@_intrinsic(classify_read, effects=_effects_obj)
 def py_getitem(o, i):
     return o[i]
 
 
-@_intrinsic(classify_sequential)
+@_intrinsic(classify_write, effects=_effects_obj, imm_result=True)
 def py_setitem(o, i, v):
     o[i] = v
     return None
 
 
 # control-flow support ---------------------------------------------------------
-@_intrinsic(classify_read)
+@_intrinsic(classify_read, effects=_effects_obj, imm_result=True)
 def py_truth(x):
     return bool(x)
 
 
-@_intrinsic(classify_iter_spine)
+@_intrinsic(classify_iter_spine, effects=_effects_obj, imm_result=True)
 def iter_spine(x):
     """Snapshot an iterable's spine for a ``for`` loop (elements may still be
     placeholders; the tuple structure is what the fold needs)."""
     return tuple(x)
 
 
-@_intrinsic(classify_read)
+@_intrinsic(classify_read, imm_result=True)
 def py_unpack(v, n):
     t = tuple(v)
     if len(t) != n:
@@ -155,11 +173,37 @@ def py_unpack(v, n):
     return t
 
 
+# call-site unpacking (*args / **kwargs) -----------------------------------------
+@_intrinsic(classify_read)
+def py_kwargs(m):
+    """Snapshot a ``**m`` mapping at a call site (CPython's semantics:
+    keys must be strings; the mapping is read once)."""
+    d = {}
+    for k in m:
+        if not isinstance(k, str):
+            raise TypeError("keywords must be strings")
+        d[k] = m[k]
+    return d
+
+
+@_intrinsic(classify_read)
+def py_kw_merge(a, b):
+    """Merge two keyword-argument dicts, rejecting duplicates like CPython
+    (``f(x=1, **{'x': 2})`` → TypeError)."""
+    out = dict(a)
+    for k, v in b.items():
+        if k in out:
+            raise TypeError(
+                f"got multiple values for keyword argument '{k}'")
+        out[k] = v
+    return out
+
+
 # f-strings ---------------------------------------------------------------------
 _CONV = {"s": str, "r": repr, "a": ascii, "": lambda v: v}
 
 
-@_intrinsic(classify_read)
+@_intrinsic(classify_read, imm_result=True)
 def py_fstring(spec, *values):
     out = []
     vi = 0

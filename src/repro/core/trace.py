@@ -1,13 +1,22 @@
-"""External-call traces and the ≡_A equivalence relation (paper §4.3).
+"""External-call traces and the ≡_A equivalence relation (paper §4.3),
+generalized to per-effect-domain projections (DESIGN.md §2.2).
 
 A *trace* is the sequence of external calls a program makes.  PopPy's
 soundness guarantee is that its trace is ≡_A-equivalent to the standard
-sequential Python trace:
+sequential Python trace.  With effect-domain-keyed sequence variables the
+guarantee holds **per domain** — for every domain ``d`` (each concrete key
+plus ``"*"``), projecting both traces onto the events that touch ``d``
+(events keyed ``d`` or keyed ``"*"``, which joins every domain):
 
-  * ``sequential`` calls appear in exactly the same order;
-  * ``readonly`` calls may permute among themselves but stay within the same
-    window between consecutive sequential calls;
-  * ``unordered`` calls may appear anywhere (multiset equality).
+  * ``sequential`` calls of the projection appear in exactly the same
+    order;
+  * ``readonly`` calls may permute among themselves but stay within the
+    same window between consecutive sequential calls of the projection;
+  * ``unordered`` calls may appear anywhere (one global multiset equality
+    — they never order with anything).
+
+When every event carries the default ``("*",)`` key, every projection is
+the full trace and this is exactly the paper's single-domain Prop. 1.
 
 The checker below is used by the differential and property-based tests.
 """
@@ -45,6 +54,11 @@ class TraceEvent:
     # plain-Python and PopPy runs; the ≡_A checker compares only these
     # (operators/builtins are not interceptable under standard Python).
     wrapped: bool = True
+    # effect-domain keys (DESIGN.md §2.2); ("*",) = the global domain.
+    # Declared (annotation-level) keys are deterministic functions of the
+    # arguments, so they match across plain and PopPy runs; anonymous
+    # ``obj:``-keyed intrinsic events are unwrapped and never compared.
+    effects: tuple = ("*",)
 
 
 @dataclass
@@ -73,8 +87,15 @@ class Trace:
             self.events.append(ev)
         return ev
 
-    def classified(self, ev: TraceEvent, cls: str):
+    def classified(self, ev: TraceEvent, cls: str, effects=None):
         ev.cls = cls
+        if effects is not None:
+            ev.effects = tuple(effects)
+
+    def set_effects(self, ev: TraceEvent, effects):
+        """Overwrite with the *declared* keys once arguments resolved (the
+        locking keys may have been conservatively degraded to ``"*"``)."""
+        ev.effects = tuple(effects)
 
     def dispatched(self, ev: TraceEvent, args_repr=""):
         ev.t_dispatch = time.monotonic()
@@ -86,12 +107,13 @@ class Trace:
 
     # -- plain-Python-side API ---------------------------------------------
 
-    def record_direct(self, name, cls, args_repr="", callsite=""):
+    def record_direct(self, name, cls, args_repr="", callsite="",
+                      effects=("*",)):
         now = time.monotonic()
         ev = TraceEvent(name=name, callsite=callsite, cls=cls,
                         t_queue=now, t_dispatch=now, t_resolve=now,
                         args_repr=args_repr, seq_no=self._next_seq(),
-                        wrapped=True)
+                        wrapped=True, effects=tuple(effects))
         with self._lock:
             self.events.append(ev)
         return ev
@@ -105,8 +127,16 @@ class Trace:
         return evs
 
     def keys(self, only_wrapped=True):
-        return [(e.name, e.cls, e.args_repr)
+        return [(e.name, e.cls, e.args_repr, e.effects)
                 for e in self.dispatch_order(only_wrapped=only_wrapped)]
+
+    def domain_summary(self, only_wrapped=True) -> dict:
+        """Per-effect-domain dispatch counts (observability)."""
+        out: dict[str, int] = {}
+        for e in self.dispatch_order(only_wrapped=only_wrapped):
+            for d in e.effects:
+                out[d] = out.get(d, 0) + 1
+        return out
 
 
 _current_trace: contextvars.ContextVar[Trace | None] = contextvars.ContextVar(
@@ -137,43 +167,71 @@ class recording:
 
 
 def _segments(keys):
-    """Split a dispatch-ordered key list at sequential events.
+    """Split a dispatch-ordered (name, cls, args) list at sequential events.
 
-    Returns (sequential_keys, readonly_segments, unordered_multiset) where
-    readonly_segments[i] is the multiset of readonly calls between the i-th
-    and (i+1)-th sequential call.
+    Returns (sequential_keys, readonly_segments) where readonly_segments[i]
+    is the multiset of readonly calls between the i-th and (i+1)-th
+    sequential call.
     """
     seq = []
     ro_segments = [Counter()]
-    unordered = Counter()
     for name, cls, args in keys:
         k = (name, args)
         if cls == "sequential":
             seq.append(k)
             ro_segments.append(Counter())
-        elif cls == "readonly":
-            ro_segments[-1][k] += 1
         else:
-            unordered[k] += 1
-    return seq, ro_segments, unordered
+            ro_segments[-1][k] += 1
+    return seq, ro_segments
 
 
-def equivalent(trace_a: Trace, trace_b: Trace) -> tuple[bool, str]:
-    """Check trace_a ≡_A trace_b. Returns (ok, explanation)."""
-    sa, ra, ua = _segments(trace_a.keys())
-    sb, rb, ub = _segments(trace_b.keys())
+def _project(keys, domain):
+    """Ordered (sequential/readonly) events of one domain's projection: an
+    event participates if it is keyed to ``domain`` or keyed ``"*"`` (a
+    ``"*"`` call joins every domain)."""
+    return [(name, cls, args) for name, cls, args, effs in keys
+            if cls in ("sequential", "readonly")
+            and ("*" in effs or domain in effs)]
+
+
+def _check_projection(ka, kb, domain) -> tuple[bool, str]:
+    sa, ra = _segments(_project(ka, domain))
+    sb, rb = _segments(_project(kb, domain))
+    where = f" in domain {domain!r}" if domain != "*" else ""
     if sa != sb:
         for i, (x, y) in enumerate(zip(sa, sb)):
             if x != y:
-                return False, f"sequential calls diverge at #{i}: {x} vs {y}"
-        return False, (f"sequential call count differs: "
+                return False, (f"sequential calls diverge at #{i}{where}: "
+                               f"{x} vs {y}")
+        return False, (f"sequential call count differs{where}: "
                        f"{len(sa)} vs {len(sb)}")
-    if len(ra) != len(rb):
-        return False, "internal error: segment count mismatch"
+    if len(ra) != len(rb):  # pragma: no cover - implied by sa == sb
+        return False, f"internal error: segment count mismatch{where}"
     for i, (x, y) in enumerate(zip(ra, rb)):
         if x != y:
-            return False, (f"readonly calls differ in segment {i}: "
+            return False, (f"readonly calls differ in segment {i}{where}: "
                            f"{(x - y) + (y - x)}")
+    return True, "equivalent"
+
+
+def equivalent(trace_a: Trace, trace_b: Trace) -> tuple[bool, str]:
+    """Check trace_a ≡_A trace_b, per effect domain (Prop. 1 per-domain:
+    every domain's projection must satisfy the single-domain relation).
+    Returns (ok, explanation)."""
+    ka = trace_a.keys()
+    kb = trace_b.keys()
+    # unordered calls never order with anything: one global multiset
+    ua = Counter((n, a) for n, c, a, _ in ka if c == "unordered")
+    ub = Counter((n, a) for n, c, a, _ in kb if c == "unordered")
     if ua != ub:
         return False, f"unordered multiset differs: {(ua - ub) + (ub - ua)}"
+    domains = {"*"}
+    for keys in (ka, kb):
+        for _, cls, _, effs in keys:
+            if cls in ("sequential", "readonly"):
+                domains.update(effs)
+    for d in sorted(domains):
+        ok, why = _check_projection(ka, kb, d)
+        if not ok:
+            return False, why
     return True, "equivalent"

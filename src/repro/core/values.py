@@ -35,15 +35,23 @@ UNBOUND = _UnboundType()
 
 
 class Pending:
-    """Placeholder for a not-yet-resolved register value."""
+    """Placeholder for a not-yet-resolved register value.
 
-    __slots__ = ("fut",)
+    ``imm_hint=True`` guarantees the eventual value is a *core builtin
+    immutable* (int/str/tuple/…): set by the engine's static-unordered
+    fast path for operator intrinsics over immutable inputs, and consumed
+    by the same path so chains of loop glue (``acc += (x,)``) classify at
+    queue time without awaiting upstream results.
+    """
 
-    def __init__(self, fut: asyncio.Future):
+    __slots__ = ("fut", "imm_hint")
+
+    def __init__(self, fut: asyncio.Future, imm_hint: bool = False):
         self.fut = fut
+        self.imm_hint = imm_hint
 
     def __repr__(self):
-        return f"<pending {id(self):#x}>"
+        return f"<pending{' imm' if self.imm_hint else ''} {id(self):#x}>"
 
 
 def is_pending(v) -> bool:
@@ -58,6 +66,23 @@ async def shallow(v):
     """Await the top-level value (its spine); embedded Pendings may remain."""
     while type(v) is Pending:
         v = await v.fut
+    return v
+
+
+def peek(v):
+    """Unwrap already-resolved Pendings *synchronously*.
+
+    Returns the underlying value when every layer of Pending has already
+    completed successfully; otherwise returns the outermost unresolved (or
+    failed/cancelled) Pending unchanged.  Lets synchronous engine code (the
+    inline fast path, effect-key resolution) see through a placeholder that
+    has in fact resolved, without awaiting.
+    """
+    while type(v) is Pending:
+        f = v.fut
+        if not f.done() or f.cancelled() or f.exception() is not None:
+            break
+        v = f.result()
     return v
 
 
@@ -162,3 +187,113 @@ class SeqState:
 
 
 S_READY = SeqState()
+
+
+#: The default effect domain.  A call keyed ``"*"`` orders against *every*
+#: live domain (it joins them all and its out-state becomes the new root),
+#: which is exactly the paper's single-sequence-variable behavior — so
+#: unannotated code is untouched by the keyed generalization.
+STAR = "*"
+
+
+class KeyedSeqState:
+    """Ordering state keyed by *effect domain* (DESIGN.md §2.2).
+
+    The paper threads one sequence variable through every call site, which
+    serializes ``@sequential`` externals that touch disjoint resources (two
+    agents' separate memories, a DB write vs. a log append).  The keyed
+    generalization carries a **map of per-domain lock chains**:
+
+      * ``domains[key]`` is the :class:`SeqState` at the head of domain
+        ``key``'s chain — the out-state of the most recent call that
+        affected ``key``.
+      * A missing key falls back to the ``"*"`` (root) entry: after a
+        ``"*"``-keyed call, every domain's chain passes through it.
+      * The empty map means fully quiescent (every domain ``S_READY``).
+
+    Instances are **immutable** (persistent): a call produces a *new*
+    ``KeyedSeqState`` via :meth:`fork`, so branch bodies and loop carries
+    can share a state value safely.  ``join`` collects the in-states a call
+    must order against; ``fork`` installs its out-state.
+    """
+
+    __slots__ = ("domains",)
+
+    def __init__(self, domains=None):
+        self.domains = domains if domains is not None else {}
+
+    def state_for(self, key) -> SeqState:
+        d = self.domains
+        s = d.get(key)
+        if s is None:
+            s = d.get(STAR)
+        return s if s is not None else S_READY
+
+    def join(self, keys) -> list:
+        """The (deduplicated) lock chains a call keyed ``keys`` orders
+        against.  ``"*"`` joins *all* live domains."""
+        if STAR in keys:
+            seen = {id(s): s for s in self.domains.values()}
+        else:
+            seen = {}
+            for k in keys:
+                s = self.state_for(k)
+                seen[id(s)] = s
+        return list(seen.values())
+
+    def fork(self, keys, new_state):
+        """Fork the keyed state for a queued call keyed ``keys``.
+
+        Returns ``(new KeyedSeqState, links)`` where ``links`` pairs each
+        affected domain's in-state with a **fresh per-domain out-state**
+        (created by ``new_state()``) installed in the new map.  Per-domain
+        out-states are what keep independent domains independent: the
+        controller chains/fulfills each link according to the call's
+        class, so e.g. an *unordered* ``"*"``-keyed call (loop glue whose
+        class is only known dynamically) forwards every domain's chain
+        without coupling them.
+
+        A ``"*"`` call touches the root and every live domain; fully
+        resolved side entries are pruned when the root is also resolved
+        (they would fall back to a chain that carries no pending
+        ordering), bounding map growth from anonymous ``obj:`` domains.
+        """
+        links = []
+        old = self.domains
+        root = old.get(STAR)
+        root_resolved = root is None or root.resolved
+        if STAR in keys:
+            d = {}
+            new_root = new_state()
+            links.append((root if root is not None else S_READY, new_root))
+            d[STAR] = new_root
+            for k, s in old.items():
+                if k == STAR:
+                    continue
+                if root_resolved and s.resolved:
+                    continue  # prune: new_root carries this call's ordering
+                o = new_state()
+                links.append((s, o))
+                d[k] = o
+            return KeyedSeqState(d), links
+        d = dict(old)
+        if root_resolved:
+            for k in [k for k, s in d.items()
+                      if k != STAR and s.resolved and k not in keys]:
+                del d[k]
+        for k in keys:
+            o = new_state()
+            links.append((self.state_for(k), o))
+            d[k] = o
+        return KeyedSeqState(d), links
+
+    @property
+    def resolved(self) -> bool:
+        return all(s.resolved for s in self.domains.values())
+
+    def __repr__(self):
+        inner = ", ".join(f"{k}={s!r}" for k, s in sorted(self.domains.items()))
+        return f"<KS {inner or '∅'}>"
+
+
+KS_READY = KeyedSeqState()

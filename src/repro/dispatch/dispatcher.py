@@ -82,26 +82,31 @@ class Dispatcher(Backend):
 
     # -- Backend interface ---------------------------------------------------
 
-    async def generate(self, prompt, *, max_tokens, temperature, stop):
+    async def generate(self, prompt, *, max_tokens, temperature, stop,
+                       domains=()):
         # sampled completions (temperature > 0) are independent draws, not a
         # pure function of the request — never serve them from cache
         return await self.dispatch(
             "generate", (prompt, max_tokens, temperature, stop),
             lambda b: b.generate(prompt, max_tokens=max_tokens,
                                  temperature=temperature, stop=stop),
-            cacheable=temperature <= 0.0)
+            cacheable=temperature <= 0.0, domains=domains)
 
-    async def embed(self, text):
+    async def embed(self, text, domains=()):
         return await self.dispatch("embed", (text,),
-                                   lambda b: b.embed(text))
+                                   lambda b: b.embed(text), domains=domains)
 
     # -- dispatch pipeline ---------------------------------------------------
 
-    async def dispatch(self, kind: str, payload, call, *, cacheable=True):
+    async def dispatch(self, kind: str, payload, call, *, cacheable=True,
+                       domains=()):
         """Dispatch ``call(backend) -> awaitable`` for a request identified
         by ``(kind, payload)`` through cache → hedge → route → admit →
-        retry."""
+        retry.  ``domains`` tags the request with its effect-domain keys
+        for the per-domain stats view (purely observational)."""
         self.stats.requests += 1
+        if domains:
+            self.stats.note_domains(domains)
         use_cache = self.cache is not None and cacheable
         needs_key = use_cache or self.retry is not None
         key = request_key(kind, payload) if needs_key else ""

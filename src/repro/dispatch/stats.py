@@ -2,14 +2,16 @@
 
 Counters and latency digests for the dispatch subsystem (DESIGN.md §5):
 cache hit rate, in-flight coalescing, retries, hedges and hedge wins,
-admission queue depth, and per-backend latency percentiles.  Consumed by
-``benchmarks/fig9_dispatch.py`` and by the serving example's end-of-run
-report.  Everything is plain counters updated from the event loop — no
-locks needed under asyncio's single-threaded execution.
+admission queue depth, per-effect-domain request counts, and per-backend
+latency percentiles.  Consumed by ``benchmarks/fig9_dispatch.py`` and by
+the serving example's end-of-run report.  Multi-step counter updates are
+lock-protected: with blocking (sync-SDK) components the dispatcher is
+driven from the bridge loop's thread concurrently with the engine loop.
 """
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 
@@ -81,6 +83,10 @@ class DispatchStats:
         self.queue_depth = 0        # currently waiting on admission
         self.queue_peak = 0
         self.per_backend: dict[str, BackendStats] = {}
+        # requests per effect domain (DESIGN.md §2.2) — which sessions /
+        # hosts / resources drive the traffic
+        self.per_domain: dict[str, int] = {}
+        self._lock = threading.Lock()
 
     # -- event hooks ---------------------------------------------------------
 
@@ -90,20 +96,28 @@ class DispatchStats:
             bs = self.per_backend[name] = BackendStats()
         return bs
 
+    def note_domains(self, domains):
+        with self._lock:
+            for d in domains:
+                self.per_domain[d] = self.per_domain.get(d, 0) + 1
+
     def enqueue(self):
-        self.queue_depth += 1
-        self.queue_peak = max(self.queue_peak, self.queue_depth)
+        with self._lock:
+            self.queue_depth += 1
+            self.queue_peak = max(self.queue_peak, self.queue_depth)
 
     def dequeue(self):
-        self.queue_depth -= 1
+        with self._lock:
+            self.queue_depth -= 1
 
     def observe(self, name: str, seconds: float, *, error: bool = False):
-        bs = self.backend(name)
-        bs.requests += 1
-        if error:
-            bs.errors += 1
-        else:
-            bs.latency.add(seconds)
+        with self._lock:
+            bs = self.backend(name)
+            bs.requests += 1
+            if error:
+                bs.errors += 1
+            else:
+                bs.latency.add(seconds)
 
     # -- reporting -----------------------------------------------------------
 
@@ -126,6 +140,7 @@ class DispatchStats:
             "hedge_wins": self.hedge_wins,
             "rejected": self.rejected,
             "queue_peak": self.queue_peak,
+            "per_domain": dict(self.per_domain),
             "backends": {
                 name: {
                     "requests": bs.requests,
@@ -151,6 +166,11 @@ class DispatchStats:
             f"{snap['hedges']} hedges ({snap['hedge_wins']} wins), "
             f"queue peak {snap['queue_peak']}"
         ]
+        if snap["per_domain"]:
+            top = sorted(snap["per_domain"].items(),
+                         key=lambda kv: -kv[1])[:8]
+            lines.append("  domains: " + ", ".join(
+                f"{d}={n}" for d, n in top))
         for name, bs in snap["backends"].items():
             lines.append(
                 f"  {name}: {bs['requests']} reqs, {bs['errors']} errors, "

@@ -1,0 +1,623 @@
+"""Effect-domain-keyed sequence variables (DESIGN.md §2.2).
+
+Covers the keyed ordering state (KeyedSeqState fork/join), the
+``effects=`` annotation surface (static keys, per-call templates,
+callables), per-domain lock-protocol behavior (independent sequential
+chains overlap; ``"*"`` joins everything; per-domain program order is
+preserved), the per-domain ≡_A checker, the freshness/object-identity
+classification of mutating intrinsics, and the session-keyed MemoryStore.
+"""
+
+import asyncio
+
+import pytest
+
+from helpers_core import ExternalWorld, assert_same, run_both
+from repro.core import (
+    equivalent,
+    poppy,
+    readonly,
+    recording,
+    sequential,
+    sequential_mode,
+    unordered,
+)
+from repro.core import registry
+from repro.core.registry import force_sequential_annotations
+from repro.core.trace import Trace
+from repro.core.values import KS_READY, S_READY, KeyedSeqState, SeqState
+
+
+# ---------------------------------------------------------------------------
+# a keyed world: per-session ordered externals with latency + observability
+
+
+class KeyedWorld:
+    def __init__(self, latency=0.02):
+        self.latency = latency
+        self.reset()
+        world = self
+
+        @sequential(effects=("mem:{session}",), returns_immutable=True)
+        async def write(session, text):
+            world.in_flight += 1
+            world.max_in_flight = max(world.max_in_flight, world.in_flight)
+            await asyncio.sleep(world.latency)
+            world.in_flight -= 1
+            world.log.append((session, text))
+            world.cells[session] = text
+            return f"{session}:{text}"
+
+        @readonly(effects=("mem:{session}",), returns_immutable=True)
+        async def read(session):
+            await asyncio.sleep(world.latency / 2)
+            world.log.append((session, "<read>"))
+            return world.cells.get(session, "")
+
+        @sequential
+        async def global_sync(tag):
+            world.in_flight += 1
+            world.max_in_flight = max(world.max_in_flight, world.in_flight)
+            await asyncio.sleep(world.latency)
+            world.in_flight -= 1
+            world.log.append(("*", tag))
+            return tag
+
+        self.write = write
+        self.read = read
+        self.global_sync = global_sync
+
+    def reset(self):
+        self.log = []
+        self.cells = {}
+        self.in_flight = 0
+        self.max_in_flight = 0
+
+    def session_log(self, session):
+        return [t for s, t in self.log if s == session]
+
+
+W = KeyedWorld()
+
+
+# ---------------------------------------------------------------------------
+# KeyedSeqState unit behavior
+
+
+def _state():
+    loop = asyncio.new_event_loop()
+    try:
+        return SeqState(loop.create_future(), loop.create_future()), loop
+    finally:
+        pass
+
+
+def test_keyed_state_fallback_and_join():
+    assert KS_READY.state_for("anything") is S_READY
+    loop = asyncio.new_event_loop()
+    try:
+        a = SeqState(loop.create_future(), loop.create_future())
+        root = SeqState(loop.create_future(), loop.create_future())
+        ks = KeyedSeqState({"*": root, "mem:a": a})
+        assert ks.state_for("mem:a") is a
+        assert ks.state_for("mem:b") is root  # falls back to the root
+        joined = ks.join(("*",))
+        assert set(map(id, joined)) == {id(a), id(root)}
+        assert ks.join(("mem:a", "mem:a")) == [a]
+    finally:
+        loop.close()
+
+
+def test_keyed_fork_star_collapses_and_keyed_updates():
+    loop = asyncio.new_event_loop()
+    try:
+        mk = lambda: SeqState(loop.create_future(), loop.create_future())
+        ks0 = KS_READY
+        ks1, links1 = ks0.fork(("mem:a",), mk)
+        assert set(ks1.domains) == {"mem:a"}
+        assert len(links1) == 1 and links1[0][0] is S_READY
+        ks2, links2 = ks1.fork(("*",), mk)
+        # the "*" fork touches the root and the live domain
+        assert set(ks2.domains) == {"*", "mem:a"}
+        assert len(links2) == 2
+        # a later key falls back to the new root
+        assert ks2.state_for("mem:b") is ks2.domains["*"]
+    finally:
+        loop.close()
+
+
+def test_keyed_fork_prunes_resolved_domains():
+    loop = asyncio.new_event_loop()
+    try:
+        mk = lambda: SeqState(loop.create_future(), loop.create_future())
+        ks = KeyedSeqState({"mem:a": S_READY, "mem:b": S_READY})
+        ks2, _ = ks.fork(("mem:c",), mk)
+        # resolved side entries (root also resolved) are dropped
+        assert set(ks2.domains) == {"mem:c"}
+    finally:
+        loop.close()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: independent sequential chains overlap, order preserved
+
+
+@poppy
+def two_chains(n):
+    r = ()
+    for i in range(n):
+        a = W.write("a", f"a{i}")
+        b = W.write("b", f"b{i}")
+        r += (a, b)
+    return r
+
+
+def test_disjoint_sequential_domains_overlap():
+    W.reset()
+    with recording() as t1, sequential_mode():
+        r1 = two_chains(3)
+    W.reset()
+    with recording() as t2:
+        r2 = two_chains(3)
+    assert r1 == r2
+    ok, why = equivalent(t1, t2)
+    assert ok, why
+    # under PopPy the two chains ran concurrently...
+    assert W.max_in_flight >= 2
+    # ...while each session's writes stayed in program order
+    assert W.session_log("a") == ["a0", "a1", "a2"]
+    assert W.session_log("b") == ["b0", "b1", "b2"]
+
+
+@poppy
+def chain_with_global(n):
+    r = ()
+    for i in range(n):
+        r += (W.write("a", f"a{i}"), W.write("b", f"b{i}"))
+    g = W.global_sync("barrier")
+    r += (W.write("a", "post"), W.write("b", "post"), g)
+    return r
+
+
+def test_star_call_joins_all_domains():
+    W.reset()
+    with recording() as t1, sequential_mode():
+        r1 = chain_with_global(2)
+    W.reset()
+    with recording() as t2:
+        r2 = chain_with_global(2)
+    assert r1 == r2
+    ok, why = equivalent(t1, t2)
+    assert ok, why
+    # the unkeyed sequential call is a barrier: it runs after every keyed
+    # write before it, and the post-barrier writes run after it
+    log = W.log
+    bar = log.index(("*", "barrier"))
+    pre = [e for e in log[:bar] if e[1] != "<read>"]
+    post = [e for e in log[bar + 1:]]
+    assert {t for _, t in pre} == {"a0", "a1", "b0", "b1"}
+    assert {t for _, t in post} == {"post"}
+
+
+@poppy
+def readers_and_writers():
+    w1 = W.write("a", "v1")
+    r1 = W.read("a")
+    w2 = W.write("a", "v2")
+    r2 = W.read("a")
+    rb = W.read("b")
+    return (w1, r1, w2, r2, rb)
+
+
+def test_readonly_keyed_windows():
+    W.reset()
+    assert_same(readers_and_writers)
+
+
+def test_force_sequential_collapses_domains():
+    W.reset()
+    with recording() as t_plain, sequential_mode():
+        r1 = two_chains(3)
+    W.reset()
+    W.max_in_flight = 0
+    with force_sequential_annotations(), recording():
+        r2 = two_chains(3)
+    assert r1 == r2
+    assert W.max_in_flight == 1  # Fig. 7 mode: zero extracted parallelism
+
+
+# ---------------------------------------------------------------------------
+# effects declaration surface: templates, callables, degradation
+
+
+def test_effect_keys_template_and_params():
+    @sequential(effects=("mem:{session}", "audit"))
+    def f(session, text):
+        return None
+
+    info = f.__poppy_external__
+    assert registry.effect_keys(info, ["s1", "x"], {}) == ("mem:s1", "audit")
+    assert registry.effect_keys(info, [], {"session": "s2", "text": "x"}) \
+        == ("mem:s2", "audit")
+    # a missing field cannot resolve → None (engine degrades locking)
+    assert registry.effect_keys(info, [], {}) is None
+
+
+def test_effect_keys_callable_and_failure_degrades():
+    @sequential(effects=lambda a, k: (f"dom:{a[0]}",))
+    def f(x):
+        return None
+
+    info = f.__poppy_external__
+    assert registry.effect_keys(info, [7], {}) == ("dom:7",)
+
+    @sequential(effects=lambda a, k: a[5])  # raises IndexError
+    def g(x):
+        return None
+
+    assert registry.effect_keys(g.__poppy_external__, [1], {}) == ("*",)
+
+
+class _EffWorld:
+    def __init__(self):
+        self.log = []
+        world = self
+
+        @sequential(effects=lambda a, k: (f"k:{a[0] % 2}",),
+                    returns_immutable=True)
+        async def kw(x):
+            await asyncio.sleep(0.005)
+            world.log.append(x)
+            return x
+
+        self.kw = kw
+
+
+EFF = _EffWorld()
+
+
+@poppy
+def callable_keyed(n):
+    r = ()
+    for i in range(n):
+        r += (EFF.kw(i),)
+    return r
+
+
+def test_callable_effects_differential():
+    EFF.log.clear()
+    with recording() as t1, sequential_mode():
+        r1 = callable_keyed(6)
+    EFF.log.clear()
+    with recording() as t2:
+        r2 = callable_keyed(6)
+    assert r1 == r2
+    ok, why = equivalent(t1, t2)
+    assert ok, why
+    # per-parity order preserved
+    assert [x for x in EFF.log if x % 2 == 0] == [0, 2, 4]
+    assert [x for x in EFF.log if x % 2 == 1] == [1, 3, 5]
+
+
+@poppy
+def pending_key_arg():
+    # the *session* argument of the second write is itself a pending
+    # external result → locking degrades to "*", which only over-orders;
+    # results and per-domain traces must still match plain Python
+    s = W.write("a", "seed")
+    r = W.write(s, "x")
+    return (s, r)
+
+
+def test_pending_key_argument_degrades_soundly():
+    W.reset()
+    assert_same(pending_key_arg)
+
+
+# ---------------------------------------------------------------------------
+# per-domain ≡_A checker
+
+
+def _mk_trace(events):
+    tr = Trace()
+    for name, cls, effects in events:
+        tr.record_direct(name, cls, args_repr="()", effects=effects)
+    return tr
+
+
+def test_equivalent_per_domain_allows_cross_domain_reorder():
+    a = _mk_trace([("w", "sequential", ("d:a",)),
+                   ("w", "sequential", ("d:b",))])
+    b = _mk_trace([("w", "sequential", ("d:b",)),
+                   ("w", "sequential", ("d:a",))])
+    ok, why = equivalent(a, b)
+    assert ok, why
+
+
+def test_equivalent_per_domain_rejects_in_domain_reorder():
+    a = _mk_trace([("w1", "sequential", ("d:a",)),
+                   ("w2", "sequential", ("d:a",))])
+    b = _mk_trace([("w2", "sequential", ("d:a",)),
+                   ("w1", "sequential", ("d:a",))])
+    ok, why = equivalent(a, b)
+    assert not ok
+    assert "d:a" in why
+
+
+def test_equivalent_star_orders_against_every_domain():
+    a = _mk_trace([("w", "sequential", ("d:a",)),
+                   ("g", "sequential", ("*",))])
+    b = _mk_trace([("g", "sequential", ("*",)),
+                   ("w", "sequential", ("d:a",))])
+    ok, why = equivalent(a, b)
+    assert not ok
+
+
+def test_equivalent_readonly_windows_per_domain():
+    a = _mk_trace([("r", "readonly", ("d:a",)),
+                   ("w", "sequential", ("d:a",))])
+    b = _mk_trace([("w", "sequential", ("d:a",)),
+                   ("r", "readonly", ("d:a",))])
+    ok, _ = equivalent(a, b)
+    assert not ok  # readonly crossed a sequential point of its domain
+
+
+def test_equivalent_backwards_compatible_default_domain():
+    a = _mk_trace([("x", "sequential", ("*",)), ("u", "unordered", ("*",))])
+    b = _mk_trace([("u", "unordered", ("*",)), ("x", "sequential", ("*",))])
+    ok, why = equivalent(a, b)
+    assert ok, why
+
+
+# ---------------------------------------------------------------------------
+# mutating-intrinsic classification (satellite: freshness + object domains)
+
+
+def test_classify_write_mirrors_classify_inplace():
+    cw = registry.classify_write
+    d = {}
+    # mutable, non-fresh target → sequential
+    assert cw([d, "k", 1], {}, ()) == registry.SEQUENTIAL
+    # fresh target with immutable contents → upgraded like classify_inplace
+    assert cw([{}, "k", 1], {}, (True,)) == registry.UNORDERED
+    assert cw([{}, "k", []], {}, (True,)) == registry.READONLY
+
+
+def test_mutating_intrinsics_are_object_keyed():
+    eff = registry._effects_obj([{"x": 1}, "x", 2], {})
+    assert len(eff) == 1 and eff[0].startswith("obj:")
+    # unknown mutable targets stay on the global domain (custom
+    # __setitem__ may run arbitrary code)
+    class C:
+        pass
+
+    assert registry._effects_obj([C(), "x", 2], {}) == ("*",)
+
+
+def test_attr_intrinsics_object_keyed_only_for_plain_instances():
+    class Plain:
+        pass
+
+    class Propped:
+        @property
+        def x(self):
+            return 1
+
+    eff = registry._effects_obj_attr([Plain(), "x", 2], {})
+    assert eff[0].startswith("obj:")
+    assert registry._effects_obj_attr([Propped(), "x", 2], {}) == ("*",)
+
+
+def test_receiver_only_methods_object_keyed():
+    lst = [1]
+    assert registry.dynamic_effect_keys(lst.append)[0].startswith("obj:")
+    # content-reading / callable-taking methods stay global
+    assert registry.dynamic_effect_keys(lst.sort) == ("*",)
+    assert registry.dynamic_effect_keys(len) == ("*",)
+
+
+SLOW = ExternalWorld(latency=0.03)
+
+
+@poppy
+def dict_build_with_externals():
+    d = {}
+    d["a"] = SLOW.compute("a")
+    d["b"] = SLOW.compute("b")
+    SLOW.emit("e1")
+    SLOW.emit("e2")
+    return (d["a"], d["b"])
+
+
+def test_local_dict_build_does_not_serialize_unrelated_externals():
+    """Regression (satellite): py_setitem on a local dict is keyed to the
+    dict's identity domain, so the unrelated @sequential emits no longer
+    wait for the dict writes (which wait for the slow computes)."""
+    import time
+
+    SLOW.reset()
+    with recording() as t_plain, sequential_mode():
+        r1 = dict_build_with_externals()
+    SLOW.reset()
+    t0 = time.perf_counter()
+    with recording() as t_poppy:
+        r2 = dict_build_with_externals()
+    dt = time.perf_counter() - t0
+    assert r1 == r2
+    ok, why = equivalent(t_plain, t_poppy)
+    assert ok, why
+    assert SLOW.out == [("emit", "e1"), ("emit", "e2")]
+    # plain time ≈ 2·compute + 2·emit-ish; keyed-poppy overlaps the
+    # computes with each other; the dict writes wait on the computes but
+    # the emits don't wait on the dict writes
+    assert dt < 3.5 * SLOW.latency, dt
+
+
+@poppy
+def dict_read_after_write():
+    d = {}
+    d["a"] = SLOW.compute("x")
+    v = d["a"]
+    d["a"] = "overwritten"
+    return (v, d["a"])
+
+
+def test_object_domain_preserves_read_write_order():
+    SLOW.reset()
+    assert_same(dict_read_after_write)
+
+
+@poppy
+def list_method_chain():
+    acc = []
+    acc.append(SLOW.compute("1"))
+    acc.append(SLOW.compute("2"))
+    SLOW.emit("between")
+    acc.append("3")
+    return tuple(acc)
+
+
+def test_list_methods_object_keyed_differential():
+    SLOW.reset()
+    assert_same(list_method_chain)
+
+
+# ---------------------------------------------------------------------------
+# MemoryStore
+
+
+from repro.core.ai import MemoryStore, SimulatedBackend, llm, use_backend
+
+MEM = MemoryStore("m")
+
+
+@poppy
+def memory_sessions(n):
+    outs = ()
+    for k in range(n):
+        a = llm(f"think {k}", max_tokens=8)
+        MEM.append(f"s{k}", a)
+        MEM.append(f"s{k}", "done")
+        outs += (MEM.read(f"s{k}"),)
+    return outs
+
+
+def test_memory_store_differential_and_parallel():
+    be = SimulatedBackend(base_s=0.03)
+    with use_backend(be):
+        MEM.clear()
+        with recording() as t1, sequential_mode():
+            r1 = memory_sessions(3)
+        snap1 = MEM.snapshot()
+        MEM.clear()
+        with recording() as t2:
+            r2 = memory_sessions(3)
+    assert r1 == r2
+    assert snap1 == MEM.snapshot()
+    ok, why = equivalent(t1, t2)
+    assert ok, why
+    assert be.max_in_flight >= 2  # llm calls overlapped across sessions
+    doms = t2.domain_summary()
+    assert doms.get("m:s0") == 3  # two appends + one read
+
+
+def test_memory_store_namespaces_are_independent():
+    m1, m2 = MemoryStore("n1"), MemoryStore("n2")
+    info1 = m1.append.__poppy_external__
+    assert registry.effect_keys(info1, ["sess", "x"], {}) == ("n1:sess",)
+    info2 = m2.append.__poppy_external__
+    assert registry.effect_keys(info2, ["sess", "x"], {}) == ("n2:sess",)
+
+
+# ---------------------------------------------------------------------------
+# returns_immutable hint
+
+
+def test_returns_immutable_seeds_static_classification():
+    @unordered(returns_immutable=True)
+    async def gen(x):
+        return f"g{x}"
+
+    @poppy
+    def chain():
+        acc = ()
+        for i in range(3):
+            g = gen(f"p{i}")
+            acc += (f"<{g}>",)  # f-string over a pending hinted result
+        return acc
+
+    assert_same(chain)
+
+
+def test_operator_result_hint_not_trusted_for_mutable_operands():
+    """Regression: ``list + list`` returns a *mutable* list even though the
+    operator intrinsic declares imm_result (valid only for immutable
+    operands).  The downstream truth-test must stay ordered against the
+    pending mutation."""
+
+    @sequential(returns_immutable=False)
+    async def make_list():
+        await asyncio.sleep(0.01)
+        return []
+
+    @poppy
+    def truth_after_mutation():
+        x = make_list()
+        y = x + []
+        y.append(1)
+        out = "falsy"
+        if y:
+            out = "truthy"
+        return out
+
+    assert_same(truth_after_mutation)
+
+
+def test_empty_effects_tuple_normalizes_to_star():
+    @sequential(effects=())
+    def f(x):
+        return None
+
+    assert registry.effect_keys(f.__poppy_external__, [1], {}) == ("*",)
+
+    log = []
+
+    @sequential(effects=(), returns_immutable=True)
+    async def write(x):
+        await asyncio.sleep((5 - x) / 200.0)
+        log.append(x)
+        return x
+
+    @poppy
+    def two_writes():
+        a = write(1)
+        b = write(2)
+        return (a, b)
+
+    with recording() as t1, sequential_mode():
+        r1 = two_writes()
+    plain_log, log[:] = list(log), []
+    with recording() as t2:
+        r2 = two_writes()
+    assert r1 == r2
+    assert plain_log == log == [1, 2]  # program order preserved
+    ok, why = equivalent(t1, t2)
+    assert ok, why
+
+
+def test_http_effects_keyword_url():
+    from repro.core.ai import _http_effects
+
+    assert _http_effects([], {"url": "https://h.example/x"}) \
+        == ("http:h.example",)
+    assert _http_effects(["https://h.example/x"], {}) == ("http:h.example",)
+
+
+def test_dispatch_stats_per_domain():
+    from repro.dispatch import DispatchStats
+
+    st = DispatchStats()
+    st.note_domains(("http:a", "http:b"))
+    st.note_domains(("http:a",))
+    assert st.per_domain == {"http:a": 2, "http:b": 1}
+    assert st.snapshot()["per_domain"] == {"http:a": 2, "http:b": 1}

@@ -1,0 +1,171 @@
+"""Call-site ``*args`` / ``**kwargs`` unpacking (frontend ``unpacked_call``
+→ ``BCall(unpack=True)`` → engine splice), differential against standard
+Python, including CPython error semantics and preserved parallelism."""
+
+import asyncio
+
+import pytest
+
+from helpers_core import ExternalWorld, assert_same
+from repro.core import PoppyError, poppy, sequential_mode, unordered
+from repro.core.errors import ExternalCallError
+
+W = ExternalWorld(latency=0.02)
+
+
+@unordered
+async def add3(a, b=0, c=0):
+    await asyncio.sleep(0.01)
+    return a + b + c
+
+
+@poppy
+def star_pos(xs):
+    return add3(*xs)
+
+
+@poppy
+def star_mixed(xs):
+    return add3(1, *xs)
+
+
+@poppy
+def double_star(kw):
+    return add3(1, **kw)
+
+
+@poppy
+def star_and_kw(xs, kw):
+    return add3(*xs, **kw)
+
+
+@poppy
+def multi_star(xs, ys):
+    return add3(*xs, *ys)
+
+
+@poppy
+def kw_then_star(kw):
+    return add3(1, c=5, **kw)
+
+
+def test_star_positional():
+    assert_same(star_pos, (1, 2, 3))
+    assert_same(star_pos, (4,))
+
+
+def test_star_mixed():
+    assert_same(star_mixed, (2, 3))
+
+
+def test_double_star():
+    assert_same(double_star, {"b": 7})
+    assert_same(double_star, {"b": 7, "c": 2})
+
+
+def test_star_and_double_star():
+    assert_same(star_and_kw, (1, 2), {"c": 9})
+
+
+def test_multiple_stars():
+    assert_same(multi_star, (1,), (2, 3))
+
+
+def test_literal_kw_merged_with_double_star():
+    assert_same(kw_then_star, {"b": 4})
+
+
+def test_star_over_list_and_generator_types():
+    assert_same(star_pos, [5, 6])
+    assert_same(star_pos, range(2))
+
+
+# -- internal callees ---------------------------------------------------------
+
+
+@poppy
+def inner(a, b, c=10):
+    return a * 100 + b * 10 + c
+
+
+@poppy
+def star_into_internal(xs, kw):
+    return inner(*xs, **kw)
+
+
+def test_unpack_into_internal_function():
+    assert_same(star_into_internal, (1, 2), {"c": 3})
+    assert_same(star_into_internal, (7, 8), {})
+
+
+# -- error semantics ----------------------------------------------------------
+
+
+@poppy
+def dup_kw(kw):
+    return add3(1, b=2, **kw)
+
+
+def test_duplicate_keyword_raises_typeerror():
+    with sequential_mode():
+        with pytest.raises(TypeError):
+            dup_kw({"b": 9})
+    with pytest.raises((TypeError, PoppyError, ExternalCallError)):
+        dup_kw({"b": 9})
+
+
+@poppy
+def non_str_keys(kw):
+    return add3(1, **kw)
+
+
+def test_non_string_keys_raise_typeerror():
+    with pytest.raises((TypeError, PoppyError, ExternalCallError)):
+        non_str_keys({1: 2})
+
+
+@poppy
+def too_many(xs):
+    return add3(*xs)
+
+
+def test_too_many_args_raises():
+    with pytest.raises((TypeError, PoppyError, ExternalCallError)):
+        too_many((1, 2, 3, 4))
+
+
+# -- parallelism is preserved through unpacked call sites ---------------------
+
+
+@poppy
+def fanout_with_stars(n):
+    out = ()
+    for i in range(n):
+        args = (f"x{i}",)
+        out += (W.compute(*args),)
+    return out
+
+
+def test_unpacked_externals_still_overlap():
+    W.reset()
+    with sequential_mode():
+        r1 = fanout_with_stars(4)
+    W.reset()
+    r2 = fanout_with_stars(4)
+    assert r1 == r2
+    assert W.max_in_flight >= 2
+
+
+@poppy
+def star_with_pending_container(n):
+    # the *container* itself is a pending external result
+    xs = W.compute("seed")
+    out = ()
+    for i in range(n):
+        out += (W.slow(*(xs, 0.01)),)
+    return out
+
+
+def test_pending_unpack_container_defers_correctly():
+    W.reset()
+    assert_same(star_with_pending_container, 2, world=W)
