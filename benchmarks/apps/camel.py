@@ -7,7 +7,7 @@ some make zero LLM calls, some fan out over drive files, some chain
 dependent calls — matching Table 1's ranges (LoC 2–114, 0–8 externals).
 Programs are generated deterministically from their index."""
 
-from repro.core import poppy, readonly, sequential, unordered
+from repro.core import poppy, readonly, sequential
 from repro.core.ai import llm
 
 NAME = "CaMeL"

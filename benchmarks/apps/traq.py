@@ -3,7 +3,7 @@ query, retrieve top-k documents from a vector store (embedding calls
 parallelize), generate multiple answers per document (parallel LLM calls),
 cluster the answers, and emit a conformal answer set."""
 
-from repro.core import poppy, readonly, sequential, unordered
+from repro.core import poppy, sequential, unordered
 from repro.core.ai import embed, llm
 
 NAME = "TRAQ"

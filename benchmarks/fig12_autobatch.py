@@ -1,0 +1,201 @@
+"""Fig. 12: auto-batching of pending unordered externals (beyond-paper;
+DESIGN.md §2.3, EXPERIMENTS.md §Fig. 12).
+
+A RAG-style app: an embedding fan-out over N docs (plus the query), a
+similarity computation, a map-style LLM summarization of every doc, and a
+combine call.  The backend models a real serving endpoint with
+server-side batching: every request costs ``request_s + per_item_s·n``
+inside one of ``max_concurrency`` admission units, and it accepts list
+payloads — so a batch of n costs *one* admission and one request
+overhead where n singles cost n of each.
+
+Three runs per trial, all on the same deterministic backend:
+
+  plain      standard sequential Python (the semantic oracle)
+  unbatched  PopPy opportunistic execution, one request per call
+  batched    PopPy + ``batching()``: the engine's queue-time windows
+             coalesce each fan-out into one batched request
+
+Every trial asserts byte-identical results across all three runs and ≡_A
+trace equivalence of both PopPy runs against the oracle.  The acceptance
+bar is batched ≥3× over unbatched at N=32.
+
+    PYTHONPATH=src:. python benchmarks/fig12_autobatch.py
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import statistics
+import time
+from pathlib import Path
+
+from repro.core import batching, equivalent, poppy, recording, \
+    sequential_mode
+from repro.core.ai import SimulatedBackend, embed, llm, use_backend, \
+    use_dispatcher
+from repro.dispatch import Dispatcher
+
+N_DOCS = 32
+REQUEST_S = 0.05
+PER_ITEM_S = 0.001
+MAX_CONCURRENCY = 2
+
+
+class BatchyBackend(SimulatedBackend):
+    """A latency model where per-request overhead dominates: request cost
+    ``request_s + per_item_s·n_items`` inside one of ``max_concurrency``
+    concurrent admission units (the shape of a real LLM/embedding API,
+    whose server batches internally and rate-limits requests).  Responses
+    are the deterministic ``SimulatedBackend`` ones, so batched, unbatched,
+    and sequential runs are comparable call-for-call."""
+
+    def __init__(self, *, scale=1.0, request_s=REQUEST_S,
+                 per_item_s=PER_ITEM_S, max_concurrency=MAX_CONCURRENCY):
+        super().__init__(time_scale=scale)
+        self.request_s = request_s
+        self.per_item_s = per_item_s
+        self._sem = asyncio.Semaphore(max_concurrency)
+
+    async def _request(self, keys):
+        async with self._sem:
+            for k in keys:
+                self._enter(k)
+            try:
+                await asyncio.sleep(
+                    (self.request_s + self.per_item_s * len(keys))
+                    * self.time_scale)
+            finally:
+                for _ in keys:
+                    self._exit()
+
+    async def generate(self, prompt, *, max_tokens, temperature, stop):
+        await self._request([prompt])
+        return self.response(prompt, max_tokens)
+
+    async def embed(self, text):
+        await self._request([text])
+        return self._embedding(text)
+
+    async def generate_batch(self, prompts, *, max_tokens, temperature,
+                             stop):
+        prompts = list(prompts)
+        with self._count_lock:
+            self.batches.append(len(prompts))
+        await self._request(prompts)
+        return [self.response(p, max_tokens) for p in prompts]
+
+    async def embed_batch(self, texts):
+        texts = list(texts)
+        with self._count_lock:
+            self.batches.append(len(texts))
+        await self._request(texts)
+        return [self._embedding(t) for t in texts]
+
+
+@poppy
+def rag(docs, query):
+    vecs = ()
+    for d in docs:
+        vecs += (embed(d),)          # fan-out: one batch window
+    qv = embed(query)
+    sims = ()
+    for v in vecs:
+        s = 0.0
+        for j in range(8):
+            s += v[j] * qv[j]
+        sims += (round(s, 3),)
+    summaries = ()
+    k = 0
+    for d in docs:                   # map step: a second batch window
+        summaries += (llm(f"summarize[{sims[k]}] {d}", max_tokens=8),)
+        k += 1
+    return llm(f"combine: {summaries}", max_tokens=16)
+
+
+def _run_once(mode, docs, query, scale):
+    be = BatchyBackend(scale=scale)
+    d = Dispatcher()
+    with use_backend(be), use_dispatcher(d), recording() as tr:
+        t0 = time.perf_counter()
+        if mode == "plain":
+            with sequential_mode():
+                result = rag(docs, query)
+        elif mode == "batched":
+            with batching():
+                result = rag(docs, query)
+        else:
+            result = rag(docs, query)
+        dt = time.perf_counter() - t0
+    return result, dt, tr, be, d
+
+
+def bench(n_docs=N_DOCS, *, trials=3, scale=1.0):
+    docs = tuple(f"document {i} about topic {i % 5}" for i in range(n_docs))
+    query = "what do the documents say?"
+    times = {"plain": [], "unbatched": [], "batched": []}
+    batch_sizes = []
+    for _ in range(trials):
+        r_ref, dt, tr_ref, be_ref, _ = _run_once("plain", docs, query, scale)
+        times["plain"].append(dt)
+        n_calls = len(be_ref.calls)
+        for mode in ("unbatched", "batched"):
+            r, dt, tr, be, d = _run_once(mode, docs, query, scale)
+            times[mode].append(dt)
+            assert r == r_ref, f"{mode}: results diverge: {r!r} vs {r_ref!r}"
+            ok, why = equivalent(tr_ref, tr)
+            assert ok, f"{mode}: trace not ≡_A: {why}"
+            assert len(be.calls) == n_calls, (
+                f"{mode}: element count diverges: "
+                f"{len(be.calls)} vs {n_calls}")
+            if mode == "batched":
+                assert be.batches, "batched run produced no batches"
+                batch_sizes = sorted(be.batches, reverse=True)
+            else:
+                assert not be.batches, "unbatched run batched?!"
+    med = {m: statistics.median(ts) for m, ts in times.items()}
+    return {
+        "n_docs": n_docs,
+        "request_s": REQUEST_S,
+        "per_item_s": PER_ITEM_S,
+        "max_concurrency": MAX_CONCURRENCY,
+        **{f"{m}_s": t for m, t in med.items()},
+        "speedup_batched_vs_unbatched": med["unbatched"] / med["batched"],
+        "speedup_batched_vs_plain": med["plain"] / med["batched"],
+        "speedup_unbatched_vs_plain": med["plain"] / med["unbatched"],
+        "batch_sizes": batch_sizes,
+    }
+
+
+def run(out_dir="experiments/apps", trials=3, n_docs=N_DOCS, scale=1.0,
+        smoke=False):
+    r = bench(n_docs, trials=trials, scale=scale)
+    print(f"N={r['n_docs']:3d}  plain {r['plain_s']:.3f}s  unbatched "
+          f"{r['unbatched_s']:.3f}s  batched {r['batched_s']:.3f}s  "
+          f"batched/unbatched {r['speedup_batched_vs_unbatched']:.2f}×  "
+          f"(batches: {r['batch_sizes']})", flush=True)
+    # the speedup bar is skipped under --smoke (tiny N / one trial is
+    # timing noise); result equality and ≡_A were asserted every trial
+    if not smoke:
+        assert r["speedup_batched_vs_unbatched"] >= 3.0, (
+            f"acceptance: auto-batching must be ≥3× over unbatched "
+            f"opportunistic execution at N={n_docs}, got "
+            f"{r['speedup_batched_vs_unbatched']:.2f}×")
+        print(f"\nN={n_docs} acceptance: "
+              f"{r['speedup_batched_vs_unbatched']:.2f}× ≥ 3× ✓")
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig12.json").write_text(json.dumps(r, indent=1))
+    return r
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--n-docs", type=int, default=N_DOCS)
+    args = ap.parse_args()
+    run(trials=args.trials, scale=args.scale, n_docs=args.n_docs)

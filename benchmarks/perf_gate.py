@@ -1,0 +1,136 @@
+"""CI perf gate: compare a ``--smoke`` run against the checked-in baseline.
+
+``benchmarks/run.py --smoke`` writes ``experiments/ci/BENCH_smoke.json``
+with a per-figure ``equivalent`` boolean and ``speedups`` map.  This gate
+fails (exit 1) when
+
+* any figure's ``equivalent`` is false (a semantics regression — the
+  figure's per-trial result-equality / ≡_A assertion fired), or
+* any speedup metric listed in ``benchmarks/baseline.json`` regressed by
+  more than ``tolerance`` (default 20%) below its baseline value, or
+* a figure/metric the baseline tracks is missing from the current run
+  (the pipeline silently lost coverage).
+
+Refreshing the baseline (after an intentional perf change)::
+
+    PYTHONPATH=src python -m benchmarks.run --smoke
+    python benchmarks/perf_gate.py --refresh
+    git add benchmarks/baseline.json   # commit with the change
+
+``--refresh`` records the measured speedups verbatim.  Smoke-scale timings
+are noisy, so after refreshing on a quiet machine it is fine (encouraged)
+to hand-floor individual values further down — the gate only checks a
+lower bound, and a conservative floor still catches real regressions
+while staying quiet on loaded CI runners.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_CURRENT = "experiments/ci/BENCH_smoke.json"
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+DEFAULT_TOLERANCE = 0.2
+
+
+def compare(current: dict, baseline: dict,
+            tolerance: float = DEFAULT_TOLERANCE) -> list[str]:
+    """Return the list of gate failures (empty = pass)."""
+    failures = []
+    cur_figs = current.get("figures", {})
+    base_figs = baseline.get("figures", {})
+    for name, fig in sorted(cur_figs.items()):
+        if not fig.get("equivalent", False):
+            detail = fig.get("error", "")
+            failures.append(
+                f"{name}: equivalence FAILED"
+                + (f" — {detail}" if detail else ""))
+    for name, base in sorted(base_figs.items()):
+        cur = cur_figs.get(name)
+        if cur is None:
+            failures.append(f"{name}: tracked by baseline but missing "
+                            f"from the current run")
+            continue
+        cur_speedups = cur.get("speedups", {})
+        for metric, base_v in sorted(base.get("speedups", {}).items()):
+            cur_v = cur_speedups.get(metric)
+            if cur_v is None:
+                failures.append(f"{name}.{metric}: tracked by baseline "
+                                f"but missing from the current run")
+                continue
+            floor = base_v * (1.0 - tolerance)
+            if cur_v < floor:
+                failures.append(
+                    f"{name}.{metric}: speedup {cur_v:.2f}× is more than "
+                    f"{tolerance:.0%} below baseline {base_v:.2f}× "
+                    f"(floor {floor:.2f}×)")
+    return failures
+
+
+def refresh(current: dict, baseline_path) -> None:
+    payload = {
+        "_comment": (
+            "Speedup floors for the CI bench-gate, from "
+            "`benchmarks/run.py --smoke` via `perf_gate.py --refresh`. "
+            "Values may be hand-floored below measurements; the gate "
+            "fails when a metric drops more than `tolerance` below its "
+            "entry. See benchmarks/perf_gate.py for the refresh recipe."),
+        "tolerance": DEFAULT_TOLERANCE,
+        "figures": {
+            name: {"speedups": {m: round(v, 3)
+                                for m, v in fig.get("speedups", {}).items()}}
+            for name, fig in sorted(current.get("figures", {}).items())
+        },
+    }
+    Path(baseline_path).write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"wrote {baseline_path}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", default=DEFAULT_CURRENT,
+                    help="BENCH_smoke.json from `benchmarks.run --smoke`")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="allowed fractional regression (default: the "
+                         "baseline file's `tolerance`, else 0.2)")
+    ap.add_argument("--refresh", action="store_true",
+                    help="rewrite the baseline from the current run")
+    args = ap.parse_args(argv)
+
+    try:
+        current = json.loads(Path(args.current).read_text())
+    except (OSError, ValueError) as e:
+        print(f"perf-gate: cannot read current results "
+              f"{args.current!r}: {e}", file=sys.stderr)
+        return 1
+    if args.refresh:
+        refresh(current, args.baseline)
+        return 0
+    try:
+        baseline = json.loads(Path(args.baseline).read_text())
+    except (OSError, ValueError) as e:
+        print(f"perf-gate: cannot read baseline {args.baseline!r}: {e}",
+              file=sys.stderr)
+        return 1
+    tol = args.tolerance if args.tolerance is not None \
+        else baseline.get("tolerance", DEFAULT_TOLERANCE)
+    failures = compare(current, baseline, tolerance=tol)
+    if failures:
+        print(f"perf-gate FAILED ({len(failures)} problem"
+              f"{'s' if len(failures) != 1 else ''}):")
+        for f in failures:
+            print(f"  ✗ {f}")
+        return 1
+    n = sum(len(f.get("speedups", {}))
+            for f in baseline.get("figures", {}).values())
+    print(f"perf-gate passed: all figures equivalent, {n} speedup "
+          f"metric{'s' if n != 1 else ''} within {tol:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,6 +4,7 @@
     Fig. 5   PopPy vs Python speedups      fig5_speedup (async + sync clients)
     Fig. 10  blocking-external offload     fig10_sync_offload
     Fig. 11  effect-domain keying          fig11_effect_domains
+    Fig. 12  auto-batching                 fig12_autobatch
     Fig. 6   ToT execution trace           fig6_trace
     Fig. 7   interpreter overhead          fig7_overhead
     Fig. 8   parallelism scaling           fig8_scaling
@@ -12,41 +13,89 @@
     PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-roofline]
     PYTHONPATH=src python -m benchmarks.run --smoke     # CI equivalence job
 
-Results land in experiments/apps/ and experiments/roofline/.
+Results land in experiments/apps/ and experiments/roofline/; ``--smoke``
+additionally writes the machine-readable ``BENCH_smoke.json`` consumed by
+the ``bench-gate`` CI job (benchmarks/perf_gate.py).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import subprocess
 import sys
 import time
+from pathlib import Path
+
+#: Where --smoke writes its machine-readable result summary.
+SMOKE_JSON = "experiments/ci/BENCH_smoke.json"
 
 
-def smoke():
-    """Benchmark smoke job (CI): run fig5/fig9/fig10/fig11 with tiny
+def smoke(out_path=SMOKE_JSON):
+    """Benchmark smoke job (CI): run fig5/fig9/fig10/fig11/fig12 with tiny
     parameters.  Every one of these figures asserts result equality (and,
-    for fig5/fig11, ≡_A trace equivalence) against sequential-mode Python
-    on every trial — so an equivalence regression fails this job in
+    for fig5/fig11/fig12, ≡_A trace equivalence) against sequential-mode
+    Python on every trial — so an equivalence regression fails this job in
     minutes instead of surfacing in a full benchmark run.  Speedup
     acceptance bars are *not* enforced here (tiny N is timing noise);
-    correctness is."""
+    correctness is — but every figure's speedups are recorded in
+    ``BENCH_smoke.json`` (per-figure ``equivalent`` boolean + ``speedups``
+    map) so the ``bench-gate`` CI job can track the trajectory against
+    ``benchmarks/baseline.json``."""
     from benchmarks import (fig5_speedup, fig9_dispatch, fig10_sync_offload,
-                            fig11_effect_domains)
+                            fig11_effect_domains, fig12_autobatch)
 
     t0 = time.time()
-    print("== smoke: fig5 (equality + ≡_A per trial) ==", flush=True)
-    fig5_speedup.run(trials=1, scale=0.1, camel_count=2)
-    print("\n== smoke: fig9 (dispatch preserves sequential semantics) ==",
-          flush=True)
-    fig9_dispatch.run(trials=1, scale=0.3)
-    print("\n== smoke: fig10 (offload result equality) ==", flush=True)
-    fig10_sync_offload.run(trials=1, delay=0.05, sweep=(2, 4), smoke=True)
-    print("\n== smoke: fig11 (per-domain equality + ≡_A per trial) ==",
-          flush=True)
-    fig11_effect_domains.run(trials=1, scale=0.1, sweep=(2, 4), n_steps=3,
-                             smoke=True)
-    print(f"\nbenchmark smoke passed in {time.time() - t0:.0f}s")
+    figures = {}
+
+    def attempt(name, title, fn, extract):
+        print(f"== smoke: {name} ({title}) ==", flush=True)
+        try:
+            r = fn()
+            figures[name] = {"equivalent": True, "speedups": extract(r)}
+        except AssertionError as e:
+            figures[name] = {"equivalent": False, "error": str(e),
+                             "speedups": {}}
+            print(f"EQUIVALENCE FAILURE [{name}]: {e}", flush=True)
+        print(flush=True)
+
+    attempt("fig5", "equality + ≡_A per trial",
+            lambda: fig5_speedup.run(trials=1, scale=0.1, camel_count=2),
+            lambda r: {"geomean": r[1]["geomean"]})
+    attempt("fig9", "dispatch preserves sequential semantics",
+            lambda: fig9_dispatch.run(trials=1, scale=0.3),
+            lambda r: {"routed": r["speedup_routed"],
+                       "warm": r["speedup_warm"]})
+    attempt("fig10", "offload result equality",
+            lambda: fig10_sync_offload.run(trials=1, delay=0.05,
+                                           sweep=(2, 4), smoke=True),
+            lambda rows: {"offload_n4": next(
+                x["speedup"] for x in rows if x["n"] == 4)})
+    attempt("fig11", "per-domain equality + ≡_A per trial",
+            lambda: fig11_effect_domains.run(trials=1, scale=0.1,
+                                             sweep=(2, 4), n_steps=3,
+                                             smoke=True),
+            lambda rows: {"keyed_vs_single_k4": next(
+                x["speedup_vs_single"] for x in rows
+                if x["k_agents"] == 4)})
+    attempt("fig12", "batched equality + ≡_A per trial",
+            lambda: fig12_autobatch.run(trials=1, n_docs=8, scale=0.3,
+                                        smoke=True),
+            lambda r: {"batched_vs_unbatched":
+                       r["speedup_batched_vs_unbatched"],
+                       "batched_vs_plain": r["speedup_batched_vs_plain"]})
+
+    out = Path(out_path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    payload = {"figures": figures,
+               "elapsed_s": round(time.time() - t0, 1)}
+    out.write_text(json.dumps(payload, indent=1))
+    print(f"wrote {out}")
+    failed = [n for n, f in figures.items() if not f["equivalent"]]
+    if failed:
+        print(f"benchmark smoke FAILED (equivalence): {', '.join(failed)}")
+        return 1
+    print(f"benchmark smoke passed in {time.time() - t0:.0f}s")
     return 0
 
 
@@ -70,7 +119,8 @@ def main():
 
     from benchmarks import (fig5_speedup, fig6_trace, fig7_overhead,
                             fig8_scaling, fig10_sync_offload,
-                            fig11_effect_domains, table1_characteristics)
+                            fig11_effect_domains, fig12_autobatch,
+                            table1_characteristics)
 
     print("=" * 72)
     print("Table 1 — benchmark program characteristics")
@@ -101,6 +151,12 @@ def main():
         fig11_effect_domains.run(trials=trials, sweep=(2, 4))
     else:
         fig11_effect_domains.run(trials=trials)
+
+    print("\n" + "=" * 72)
+    print("Fig. 12 — auto-batching of pending unordered externals")
+    print("=" * 72)
+    fig12_autobatch.run(trials=trials,
+                        n_docs=8 if args.quick else 32)
 
     print("\n" + "=" * 72)
     print("Fig. 6 — ToT execution trace (queue → dispatch → resolve)")

@@ -11,7 +11,7 @@ import statistics
 import textwrap
 from pathlib import Path
 
-from benchmarks.common import make_backend, run_once
+from benchmarks.common import run_once
 from repro.core.bezoar import BCall, BConst
 
 

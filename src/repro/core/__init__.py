@@ -16,6 +16,7 @@ See DESIGN.md for the compiler (frontend → Bezoar → λ^O) and runtime
 
 from .annotations import (  # noqa: F401
     PoppyFn,
+    batch_handler,
     external,
     in_sequential_mode,
     poppy,
@@ -23,6 +24,11 @@ from .annotations import (  # noqa: F401
     sequential,
     sequential_mode,
     unordered,
+)
+from .batching import (  # noqa: F401
+    BatchingPolicy,
+    batching,
+    current_batching_policy,
 )
 from .engine import OffloadPolicy, current_offload_policy, offload_policy  # noqa: F401
 from .errors import (  # noqa: F401
@@ -36,6 +42,7 @@ from .registry import (  # noqa: F401
     READONLY,
     SEQUENTIAL,
     UNORDERED,
+    BatchSpec,
     register_immutable_type,
 )
 from .trace import Trace, equivalent, recording  # noqa: F401
@@ -48,4 +55,6 @@ __all__ = [
     "UNORDERED", "READONLY", "SEQUENTIAL", "register_immutable_type",
     "Trace", "recording", "equivalent",
     "OffloadPolicy", "offload_policy", "current_offload_policy",
+    "BatchSpec", "batch_handler", "BatchingPolicy", "batching",
+    "current_batching_policy",
 ]

@@ -31,12 +31,19 @@ import math
 import threading
 from dataclasses import dataclass, field
 
-from .annotations import readonly, sequential, unordered
+from .annotations import batch_handler, readonly, sequential, unordered
 from .values import is_pending, peek
 
 
 class Backend:
-    """Interface for LLM/embedding backends."""
+    """Interface for LLM/embedding backends.
+
+    The batch methods accept list payloads and return one result per
+    element *in order*; an entry may be an ``Exception`` instance, failing
+    only that element.  The defaults fan a batch out to the single-call
+    methods concurrently — a backend with true server-side batching (one
+    admission per batch) overrides them.
+    """
 
     async def generate(self, prompt: str, *, max_tokens: int,
                        temperature: float, stop) -> str:
@@ -44,6 +51,18 @@ class Backend:
 
     async def embed(self, text: str) -> tuple:
         raise NotImplementedError
+
+    async def generate_batch(self, prompts, *, max_tokens: int,
+                             temperature: float, stop) -> list:
+        return list(await asyncio.gather(
+            *(self.generate(p, max_tokens=max_tokens,
+                            temperature=temperature, stop=stop)
+              for p in prompts),
+            return_exceptions=True))
+
+    async def embed_batch(self, texts) -> list:
+        return list(await asyncio.gather(
+            *(self.embed(t) for t in texts), return_exceptions=True))
 
 
 @dataclass
@@ -68,6 +87,11 @@ class SimulatedBackend(Backend):
     _in_flight: int = 0
     time_scale: float = 1.0
     responder: object = None   # optional callable(prompt, max_tokens) -> str
+    # list-payload (batched) requests: one request carries n elements in
+    # max(element latencies) + per_batch_item_s·n — the server-side batching
+    # profile.  ``batches`` records each batched request's element count.
+    per_batch_item_s: float = 0.0
+    batches: list = field(default_factory=list)
 
     def _digest(self, prompt: str) -> int:
         return int.from_bytes(
@@ -119,9 +143,53 @@ class SimulatedBackend(Backend):
             await asyncio.sleep(self.base_s * self.time_scale)
         finally:
             self._exit()
+        return self._embedding(text)
+
+    def _embedding(self, text) -> tuple:
         d = self._digest(text)
         return tuple(
             math.sin((d % 997) * (i + 1) / 97.0) for i in range(8))
+
+    # -- list payloads (batched requests) ---------------------------------
+    # Responses are element-for-element identical to the single-call
+    # methods (a deterministic function of each prompt), so batched and
+    # unbatched runs produce byte-identical results.
+
+    async def generate_batch(self, prompts, *, max_tokens, temperature,
+                             stop):
+        prompts = list(prompts)
+        if not prompts:
+            return []
+        lat = max(self.latency(p, min(max_tokens, 1 + self._digest(p) % 7))
+                  for p in prompts)
+        lat += self.per_batch_item_s * self.time_scale * len(prompts)
+        with self._count_lock:
+            self.batches.append(len(prompts))
+        for p in prompts:
+            self._enter(p)
+        try:
+            await asyncio.sleep(lat)
+        finally:
+            for _ in prompts:
+                self._exit()
+        return [self.response(p, max_tokens) for p in prompts]
+
+    async def embed_batch(self, texts):
+        texts = list(texts)
+        if not texts:
+            return []
+        lat = (self.base_s
+               + self.per_batch_item_s * len(texts)) * self.time_scale
+        with self._count_lock:
+            self.batches.append(len(texts))
+        for t in texts:
+            self._enter(t)
+        try:
+            await asyncio.sleep(lat)
+        finally:
+            for _ in texts:
+                self._exit()
+        return [self._embedding(t) for t in texts]
 
 
 _backend: contextvars.ContextVar[Backend | None] = contextvars.ContextVar(
@@ -203,9 +271,26 @@ class use_dispatcher:
 
 # ---------------------------------------------------------------------------
 # annotated external components
+#
+# llm/embed declare ``batchable=``: under ``repro.core.batching`` the
+# engine coalesces concurrently pending calls that share decode options
+# and the ambient dispatcher into one list-payload dispatcher request
+# (DESIGN.md §2.3).  Batching is off by default — the declarations alone
+# change nothing.
 
 
-@unordered(returns_immutable=True)
+def _llm_batch_key(pos, kw):
+    # only calls sharing decode options and the same dispatcher may share
+    # a backend request (an unhashable ``stop`` opts the call out)
+    return (kw.get("max_tokens", 64), kw.get("temperature", 0.0),
+            kw.get("stop", None), id(get_dispatcher()))
+
+
+def _embed_batch_key(pos, kw):
+    return (id(get_dispatcher()),)
+
+
+@unordered(returns_immutable=True, batchable=(64, 25.0, _llm_batch_key))
 async def llm(prompt: str, *, max_tokens: int = 64, temperature: float = 0.0,
               stop=None) -> str:
     """Stateless LLM completion — @unordered: dispatches the moment the
@@ -214,10 +299,25 @@ async def llm(prompt: str, *, max_tokens: int = 64, temperature: float = 0.0,
         prompt, max_tokens=max_tokens, temperature=temperature, stop=stop)
 
 
-@unordered(returns_immutable=True)
+@batch_handler(llm)
+async def _llm_batch(calls):
+    _, kw0 = calls[0]
+    prompts = [pos[0] if pos else kw.get("prompt") for pos, kw in calls]
+    return await get_dispatcher().generate_batch(
+        prompts, max_tokens=kw0.get("max_tokens", 64),
+        temperature=kw0.get("temperature", 0.0), stop=kw0.get("stop", None))
+
+
+@unordered(returns_immutable=True, batchable=(128, 25.0, _embed_batch_key))
 async def embed(text: str) -> tuple:
     """Text-embedding model call."""
     return await get_dispatcher().embed(text)
+
+
+@batch_handler(embed)
+async def _embed_batch(calls):
+    texts = [pos[0] if pos else kw.get("text") for pos, kw in calls]
+    return await get_dispatcher().embed_batch(texts)
 
 
 def _url_host(url) -> str:

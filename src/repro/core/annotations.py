@@ -186,21 +186,54 @@ def _sig_params(fn):
         return None
 
 
-def _static_info(cls_name, offload=None, effects=None, imm_result=False):
+def _static_info(cls_name, offload=None, effects=None, imm_result=False,
+                 batchable=None):
     return lambda fn: registry.ExternalInfo(
         cls=cls_name, name=registry.callable_name(fn), offload=offload,
-        effects=effects, params=_sig_params(fn), imm_result=imm_result)
+        effects=effects, params=_sig_params(fn), imm_result=imm_result,
+        batchable=batchable)
 
 
 def _static_annotation(cls_name, fn, offload, effects=None,
-                       returns_immutable=False):
+                       returns_immutable=False, batchable=None):
     deco = _external(_static_info(cls_name, offload=offload, effects=effects,
-                                  imm_result=returns_immutable))
+                                  imm_result=returns_immutable,
+                                  batchable=batchable))
     return deco if fn is None else deco(fn)
 
 
+def batch_handler(wrapper):
+    """Attach the batched implementation to a ``batchable=`` external::
+
+        @unordered(batchable=(64, 25.0))
+        async def embed(text): ...
+
+        @batch_handler(embed)
+        async def _embed_batch(calls):
+            # calls: [(pos_tuple, kw_dict), ...] — fully resolved arguments
+            return await backend.embed_batch([p[0] for p, _ in calls])
+
+    The handler must be async and return one result per call *in order*;
+    an entry may be an ``Exception`` instance to fail only that element's
+    placeholder.  A ``batchable=`` component without a handler never
+    batches (its calls dispatch singly).
+    """
+    info = getattr(wrapper, "__poppy_external__", None)
+    if info is None or info.batchable is None:
+        raise TypeError("batch_handler requires an external annotated "
+                        "with batchable=")
+
+    def deco(fn):
+        if not registry.is_async_callable(fn):
+            raise TypeError("batch handler must be an async callable")
+        info.batchable.handler = fn
+        return fn
+
+    return deco
+
+
 def unordered(fn=None, *, offload=None, effects=None,
-              returns_immutable=False):
+              returns_immutable=False, batchable=None):
     """External call that may execute in any order (stateless externals,
     pure operations on immutable data).
 
@@ -219,9 +252,15 @@ def unordered(fn=None, *, offload=None, effects=None,
     ``returns_immutable`` declares the result a core builtin immutable
     (str/tuple/int/…): downstream operators over the still-pending result
     (f-strings, accumulators) then classify at queue time, keeping
-    unrelated effect domains decoupled."""
+    unrelated effect domains decoupled.
+
+    ``batchable`` declares that concurrently pending calls may coalesce
+    into one batched backend request — a ``(max_batch, max_wait_ms,
+    key_fn)`` tuple / ``BatchSpec`` / ``True`` (DESIGN.md §2.3); attach
+    the batched implementation with :func:`batch_handler` and enable the
+    windows per scope with ``repro.core.batching``."""
     return _static_annotation(registry.UNORDERED, fn, offload, effects,
-                              returns_immutable)
+                              returns_immutable, batchable)
 
 
 def readonly(fn=None, *, offload=None, effects=None,
@@ -244,15 +283,18 @@ def sequential(fn=None, *, offload=None, effects=None,
 
 
 def external(fn=None, *, classify, offload=None, effects=None,
-             returns_immutable=False):
+             returns_immutable=False, batchable=None):
     """External call with a *dynamic* classifier: ``classify(args, kwargs,
-    fresh_mask) -> 'unordered'|'readonly'|'sequential'``."""
+    fresh_mask) -> 'unordered'|'readonly'|'sequential'``.  With
+    ``batchable=``, calls that classify *unordered* may coalesce (see
+    ``unordered``); ordered classifications always dispatch singly."""
     def info_factory(f):
         return registry.ExternalInfo(classify=classify,
                                      name=registry.callable_name(f),
                                      offload=offload, effects=effects,
                                      params=_sig_params(f),
-                                     imm_result=returns_immutable)
+                                     imm_result=returns_immutable,
+                                     batchable=batchable)
     if fn is None:
         return _external(info_factory)
     return _external(info_factory)(fn)

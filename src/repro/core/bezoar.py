@@ -18,7 +18,7 @@ The printer (``format_func``) exists so tests and users can inspect the IR.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any
 
 Reg = int
 

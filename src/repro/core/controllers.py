@@ -30,7 +30,7 @@ import asyncio
 from . import registry
 from .errors import ExternalCallError, PoppyRuntimeError
 from .trace import safe_repr
-from .values import SeqState, check_bound, deep_resolve, shallow
+from .values import check_bound, deep_resolve, shallow
 
 UNORDERED = registry.UNORDERED
 READONLY = registry.READONLY
@@ -74,8 +74,17 @@ def unwrap_external(fn):
     return inner if inner is not None else fn
 
 
-async def invoke_external(rt, fn, pos, kw, ev):
-    """Dispatch an external call with fully resolved arguments."""
+async def invoke_external(rt, fn, pos, kw, ev, *, allow_batch=False):
+    """Dispatch an external call with fully resolved arguments.
+
+    ``allow_batch=True`` (set by the *unordered* dispatch paths only) lets
+    a call to a ``batchable=`` component park in the runtime's batch
+    window instead of firing immediately — concurrently pending calls then
+    coalesce into one batched backend request (DESIGN.md §2.3).  Ordered
+    classes never batch: reordering *within* the batch flush would be
+    unobservable, but the window delays dispatch, and only unordered calls
+    are free to wait on unrelated work.
+    """
     pos = [check_bound(await deep_resolve(a)) for a in pos]
     kw = {k: check_bound(await deep_resolve(v)) for k, v in kw.items()}
     if rt.error is not None:
@@ -83,6 +92,14 @@ async def invoke_external(rt, fn, pos, kw, ev):
         # cancellation) instead of dispatching preserves sequential
         # semantics (plain Python would have terminated before this call)
         raise asyncio.CancelledError
+    if allow_batch and rt.batching:
+        spec = registry.batch_spec(fn)
+        if spec is not None:
+            key = registry.batch_element_key(spec, pos, kw)
+            if key is not None:
+                # the collector records dispatch/resolve trace events at
+                # flush/scatter time (when the batch actually goes out)
+                return await rt.batches.submit(fn, spec, key, pos, kw, ev)
     if rt.trace is not None:
         rt.trace.dispatched(ev, args_repr=safe_repr((tuple(pos), kw)))
     target = unwrap_external(fn)
@@ -167,7 +184,8 @@ async def external_controller(rt, fn, pos, kw, fresh, keys, links,
                     _chain_all([s.f_w], o.f_w)
 
             rt.spawn(plumb())
-            result = await invoke_external(rt, fn, pos, kw, ev)
+            result = await invoke_external(rt, fn, pos, kw, ev,
+                                           allow_batch=True)
             dfut.set_result(result)
             return
         keys, links = await resolve_links()
@@ -188,7 +206,8 @@ async def external_controller(rt, fn, pos, kw, fresh, keys, links,
         for s, o in links:
             _chain_all([s.f_r], o.f_r)
             _chain_all([s.f_w], o.f_w)
-        result = await invoke_external(rt, fn, pos, kw, ev)
+        result = await invoke_external(rt, fn, pos, kw, ev,
+                                       allow_batch=True)
         dfut.set_result(result)
     elif cls == READONLY:
         try:

@@ -23,10 +23,10 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
 from . import registry
-from .controllers import external_controller, invoke_external
+from .batching import BatchCollector, current_batching_policy
+from .controllers import external_controller
 from .errors import PoppyRuntimeError
 from .lambda_o import (
-    CARRY,
     ITEM,
     LBlock,
     LCallOp,
@@ -219,6 +219,18 @@ class Runtime:
         self.offload_workers = offload_workers if offload_workers is not None \
             else pol.max_workers
         self._executor: ThreadPoolExecutor | None = None
+        self.batching = current_batching_policy().enabled
+        self._batches: BatchCollector | None = None
+
+    # -- auto-batching -----------------------------------------------------
+
+    @property
+    def batches(self) -> BatchCollector:
+        """Lazily-created batch-window collector (never allocated for runs
+        that don't batch)."""
+        if self._batches is None:
+            self._batches = BatchCollector(self)
+        return self._batches
 
     # -- executor offload --------------------------------------------------
 
@@ -314,6 +326,11 @@ class Runtime:
         finally:
             _current_runtime.reset(tok)
             sys.setrecursionlimit(old_limit)
+            if self._batches is not None:
+                # success path: every window flushed (the drain loop waits
+                # for the element controllers); on abort, cancel the
+                # backstop timers so nothing fires into a closing loop
+                self._batches.close()
             if self._executor is not None:
                 # all offloaded calls have completed on the success path (the
                 # drain loop above); on abort, queued-but-unstarted work is
@@ -468,7 +485,7 @@ class Runtime:
 
         self.spawn(later())
 
-    # -- fold (for loops) ----------------------------------------------------------------
+    # -- fold (for loops) ---------------------------------------------------------
 
     def _run_fold(self, op: LFor, frame: Frame, spine) -> list:
         carries = [frame.regs[r] for r in op.init]
@@ -498,7 +515,7 @@ class Runtime:
 
         self.spawn(later())
 
-    # -- while loops ------------------------------------------------------------------------
+    # -- while loops --------------------------------------------------------------
 
     def _step_while(self, op: LWhile, frame: Frame):
         carries = [frame.regs[r] for r in op.init]
@@ -550,7 +567,7 @@ class Runtime:
 
         self.spawn(later(cond, carries_after))
 
-    # -- calls ----------------------------------------------------------------------------------
+    # -- calls --------------------------------------------------------------------
 
     def _split_args(self, op: LCallOp, frame: Frame):
         vals = [frame.regs[a] for a in op.args]
@@ -602,7 +619,9 @@ class Runtime:
                     and all(deep_ready(a) for a in pos)
                     and all(deep_ready(v) for v in kw.values())
                     and not registry.is_async_callable(unwrap_external(fn))
-                    and self.offload_mode_for(fn) == "inline"):
+                    and self.offload_mode_for(fn) == "inline"
+                    and not (self.batching
+                             and registry.batch_spec(fn) is not None)):
                 cls = registry.get_callable_class(fn, pos, kw, fresh)
                 if cls == registry.UNORDERED:
                     regs[op.dst] = self._dispatch_inline(fn, pos, kw,

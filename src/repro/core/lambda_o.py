@@ -13,7 +13,7 @@ ready ops produces the same values.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any
 
 # Tags for block input sources (resolved by the engine when instantiating):
 #   int >= 0          — register of the *parent* block instance

@@ -66,6 +66,86 @@ OFFLOAD_INLINE = "inline"
 _OFFLOADS = (OFFLOAD_THREAD, OFFLOAD_INLINE)
 
 
+class BatchSpec:
+    """Batching declaration for an ``@unordered`` external (DESIGN.md §2.3).
+
+    * ``max_batch`` — flush a window once it holds this many calls.
+    * ``max_wait_ms`` — backstop deadline for a partial window.  The engine
+      normally flushes much earlier, as soon as the event loop quiesces (no
+      more dispatch-ready work can join the window without new external
+      results arriving), so this bound matters only while the interpreter
+      is still actively producing calls.
+    * ``key_fn`` — ``(pos, kw) -> hashable | None``: calls batch together
+      only when their keys are equal (e.g. shared decode options and the
+      same backend).  ``None`` from the callable opts this one call out of
+      batching.  The default (no ``key_fn``) batches every call to the
+      component.
+    * ``handler`` — the batched implementation, attached with
+      :func:`repro.core.annotations.batch_handler`: an async callable
+      ``handler(calls) -> list`` taking ``[(pos_tuple, kw_dict), ...]``
+      and returning one result per call *in order*; an entry may be an
+      ``Exception`` instance to fail just that element.  A component
+      without a handler never batches.
+    """
+
+    __slots__ = ("max_batch", "max_wait_ms", "key_fn", "handler")
+
+    def __init__(self, max_batch=32, max_wait_ms=25.0, key_fn=None,
+                 handler=None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if max_wait_ms is not None and max_wait_ms < 0:
+            raise ValueError("max_wait_ms must be >= 0")
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = max_wait_ms
+        self.key_fn = key_fn
+        self.handler = handler
+
+
+def normalize_batchable(b):
+    """Accept the ``batchable=`` annotation argument in any declared form."""
+    if b is None or b is False:
+        return None
+    if isinstance(b, BatchSpec):
+        return b
+    if b is True:
+        return BatchSpec()
+    if isinstance(b, (tuple, list)):
+        return BatchSpec(*b)
+    if isinstance(b, dict):
+        return BatchSpec(**b)
+    raise TypeError(f"batchable must be a BatchSpec, tuple, dict, or True; "
+                    f"got {b!r}")
+
+
+def batch_spec(fn):
+    """The :class:`BatchSpec` under which calls to ``fn`` may coalesce, or
+    ``None`` when ``fn`` is not batchable (unannotated, no ``batchable=``
+    declaration, or no batch handler attached)."""
+    info = getattr(fn, "__poppy_external__", None)
+    if info is None:
+        return None
+    spec = info.batchable
+    if spec is None or spec.handler is None:
+        return None
+    return spec
+
+
+def batch_element_key(spec: BatchSpec, pos, kw):
+    """Evaluate one call's batch key.  Returns a hashable key (``()`` when
+    no ``key_fn`` is declared — every call to the component batches
+    together), or ``None`` to dispatch this call singly (the ``key_fn``
+    opted out, raised, or produced an unhashable value)."""
+    if spec.key_fn is None:
+        return ()
+    try:
+        key = spec.key_fn(list(pos), dict(kw))
+        hash(key)
+    except Exception:
+        return None
+    return key
+
+
 class ExternalInfo:
     """Attached to external callables as ``__poppy_external__``.
 
@@ -94,13 +174,20 @@ class ExternalInfo:
     at queue time instead of conservatively routing every effect domain
     through themselves.  True for the entire AI component library — LLM
     answers and embeddings are strings/tuples.
+
+    ``batchable`` declares that concurrently pending *unordered* calls to
+    this external may be coalesced into one batched backend request (a
+    :class:`BatchSpec`; DESIGN.md §2.3).  Accepts a ``BatchSpec``, a
+    ``(max_batch, max_wait_ms, key_fn)`` tuple (trailing entries
+    optional), ``True`` for defaults, or a kwargs dict.
     """
 
     __slots__ = ("cls", "classify", "name", "offload", "effects", "params",
-                 "imm_result")
+                 "imm_result", "batchable")
 
     def __init__(self, cls=None, classify=None, name="", offload=None,
-                 effects=None, params=None, imm_result=False):
+                 effects=None, params=None, imm_result=False,
+                 batchable=None):
         assert (cls is None) != (classify is None)
         if cls is not None:
             assert cls in _CLASSES, cls
@@ -116,6 +203,7 @@ class ExternalInfo:
         self.effects = effects
         self.params = tuple(params) if params is not None else None
         self.imm_result = bool(imm_result)
+        self.batchable = normalize_batchable(batchable)
 
 
 def annotated_offload(fn):

@@ -26,7 +26,7 @@ from .lambda_o import (
     LPrim,
     LWhile,
 )
-from .values import UNBOUND, check_bound
+from .values import check_bound
 
 _SEQ_TOKEN = object()  # stands in for $S; never inspected sequentially
 

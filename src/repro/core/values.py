@@ -182,7 +182,8 @@ class SeqState:
             await self.f_w
 
     def __repr__(self):
-        s = lambda f: "✓" if f is None or f.done() else "…"
+        def s(f):
+            return "✓" if f is None or f.done() else "…"
         return f"<S r={s(self.f_r)} w={s(self.f_w)}>"
 
 

@@ -3,14 +3,16 @@
 Sits between the PopPy concurrency controllers and the backends: routing
 across backend replicas, per-backend admission control (token-bucket rate
 limits + concurrency caps with asyncio backpressure), a deterministic
-result cache with in-flight coalescing, retries with deterministic-jitter
-backoff, hedged duplicate requests for straggler mitigation, and a stats
-surface.
+result cache with in-flight coalescing, a micro-batcher coalescing
+concurrent requests into batched backend calls (DESIGN.md §2.3), retries
+with deterministic-jitter backoff, hedged duplicate requests for
+straggler mitigation, and a stats surface.
 
 Quickstart::
 
     from repro.core.ai import SimulatedBackend, llm, use_dispatcher
-    from repro.dispatch import AdmissionPolicy, Dispatcher, HedgePolicy
+    from repro.dispatch import (AdmissionPolicy, BatchPolicy, Dispatcher,
+                                HedgePolicy)
 
     d = Dispatcher(
         [SimulatedBackend(), SimulatedBackend()],   # two replicas
@@ -18,6 +20,7 @@ Quickstart::
         cache=True,                                  # LRU + coalescing
         admission=AdmissionPolicy(max_concurrency=8, rate=200.0, burst=16),
         hedge=HedgePolicy(delay_s=0.25),
+        batch=BatchPolicy(max_batch=32, max_wait_s=0.004),  # micro-batching
     )
     with use_dispatcher(d):
         my_poppy_app()
@@ -29,6 +32,12 @@ from .admission import (  # noqa: F401
     AdmissionPolicy,
     AdmissionRejected,
     TokenBucket,
+)
+from .batcher import (  # noqa: F401
+    BatchPolicy,
+    BatchStats,
+    MicroBatcher,
+    make_batch_policy,
 )
 from .cache import DiskCache, LRUCache, ResultCache, request_key  # noqa: F401
 from .dispatcher import Dispatcher  # noqa: F401
@@ -53,6 +62,7 @@ __all__ = [
     "make_router",
     "AdmissionPolicy", "AdmissionController", "AdmissionRejected",
     "TokenBucket",
+    "BatchPolicy", "BatchStats", "MicroBatcher", "make_batch_policy",
     "ResultCache", "LRUCache", "DiskCache", "request_key",
     "RetryPolicy", "HedgePolicy", "with_retry", "with_hedge",
     "DispatchStats", "BackendStats", "LatencyDigest",

@@ -39,6 +39,9 @@ def request_key(kind: str, payload) -> str:
 
 
 _MISS = object()
+#: Public sentinel for cache lookups that found nothing (the batched
+#: dispatch pipeline probes the tiers directly for per-element lookups).
+MISS = _MISS
 
 
 class LRUCache:
@@ -110,12 +113,65 @@ class DiskCache:
 
 
 class ResultCache:
-    """LRU + optional disk tier + in-flight request coalescing."""
+    """LRU + optional disk tier + in-flight request coalescing.
+
+    The in-flight protocol is exposed as ``claim`` / ``settle`` / ``join``
+    so the batched dispatch pipeline (``dispatcher._batch_pipeline``) can
+    run it per element without duplicating the cancellation-sensitive
+    parts; ``get_or_dispatch`` is the single-request composition of the
+    same primitives.
+    """
 
     def __init__(self, capacity: int = 4096, disk_dir=None):
         self.mem = LRUCache(capacity)
         self.disk = DiskCache(disk_dir) if disk_dir is not None else None
         self.inflight: dict[str, asyncio.Future] = {}
+
+    # -- in-flight coalescing primitives -----------------------------------
+
+    def claim(self, key: str):
+        """Claim the primary dispatch slot for ``key``.  Returns
+        ``(fut, is_primary)``: the primary must eventually :meth:`settle`
+        the future; a non-primary caller :meth:`join`\\ s it instead."""
+        fut = self.inflight.get(key)
+        if fut is not None:
+            return fut, False
+        fut = asyncio.get_running_loop().create_future()
+        self.inflight[key] = fut
+        return fut, True
+
+    def settle(self, key: str, fut: asyncio.Future, result=None, exc=None):
+        """Resolve a claimed primary: release the in-flight slot, fill the
+        memory tier on success, and deliver to coalesced waiters.  (The
+        disk tier is written by the caller, off the event loop.)"""
+        self.inflight.pop(key, None)
+        if exc is not None:
+            if not fut.done():
+                if isinstance(exc, asyncio.CancelledError):
+                    fut.cancel()
+                else:
+                    fut.set_exception(exc)
+                    # waiters may or may not exist; don't warn about
+                    # unretrieved exceptions for the no-waiter case
+                    fut.exception()
+            return
+        self.mem.put(key, result)
+        if not fut.done():
+            fut.set_result(result)
+
+    async def join(self, fut: asyncio.Future, redispatch):
+        """Await another caller's in-flight dispatch.  Shielded: this
+        waiter being cancelled must not cancel the shared dispatch; if the
+        *primary* was cancelled instead, the request is still live, so
+        ``redispatch`` (an async 0-arg callable) runs it afresh."""
+        try:
+            return await asyncio.shield(fut)
+        except asyncio.CancelledError:
+            if fut.cancelled():
+                return await redispatch()
+            raise
+
+    # -- single-request pipeline -------------------------------------------
 
     async def get_or_dispatch(self, key: str, thunk, stats=None):
         """Return the cached value for ``key``, or run ``thunk`` (an async
@@ -135,41 +191,20 @@ class ResultCache:
                     stats.cache_hits += 1
                     stats.disk_hits += 1
                 return v
-        fut = self.inflight.get(key)
-        if fut is not None:
+        fut, primary = self.claim(key)
+        if not primary:
             if stats is not None:
                 stats.coalesced += 1
-            try:
-                # shield: a coalesced waiter being cancelled must not cancel
-                # the shared dispatch
-                return await asyncio.shield(fut)
-            except asyncio.CancelledError:
-                if fut.cancelled():
-                    # the *primary* was cancelled, not this waiter: its
-                    # request is still live, so dispatch afresh
-                    return await self.get_or_dispatch(key, thunk, stats)
-                raise
+            return await self.join(
+                fut, lambda: self.get_or_dispatch(key, thunk, stats))
         if stats is not None:
             stats.cache_misses += 1
-        fut = asyncio.get_running_loop().create_future()
-        self.inflight[key] = fut
         try:
             value = await thunk()
         except BaseException as e:
-            self.inflight.pop(key, None)
-            if not fut.cancelled():
-                if isinstance(e, asyncio.CancelledError):
-                    fut.cancel()
-                else:
-                    fut.set_exception(e)
-                    # waiters may or may not exist; don't warn about
-                    # unretrieved exceptions for the no-waiter case
-                    fut.exception()
+            self.settle(key, fut, exc=e)
             raise
-        self.mem.put(key, value)
-        self.inflight.pop(key, None)
-        if not fut.cancelled():
-            fut.set_result(value)
+        self.settle(key, fut, result=value)
         if self.disk is not None:
             await asyncio.to_thread(self.disk.put, key, value)
         return value

@@ -3,7 +3,14 @@
 Sits between the PopPy concurrency controllers (``repro.core.controllers``
 → ``repro.core.ai``) and the backends.  Layering, outermost first::
 
-    cache / coalesce  →  hedge  →  route  →  admit  →  retry  →  backend
+    cache / coalesce → batch → hedge → route → admit → retry → backend
+
+* **batch** — concurrent requests coalesce into batched backend calls
+  (``batcher.MicroBatcher``); the engine's queue-time batch windows also
+  land here whole, via ``generate_batch``/``embed_batch``.  Cache lookups
+  happen *per element* before batching (a hit never occupies batch
+  capacity); a batch then traverses hedge/route/admit/retry as **one**
+  request, and per-element failures fail only their element.
 
 * **cache** — identical requests are answered once (LRU + optional disk),
   identical *concurrent* requests coalesce onto one dispatch.
@@ -29,15 +36,27 @@ trace-equivalent to misses — tracing happens above this layer).
 
 from __future__ import annotations
 
+import asyncio
 import time
 
 from repro.core.ai import Backend
 
 from .admission import AdmissionController, AdmissionRejected, make_admission
-from .cache import make_cache, request_key
+from .batcher import BatchStats, MicroBatcher, make_batch_policy
+from .cache import MISS, make_cache, request_key
 from .reliability import HedgePolicy, RetryPolicy, with_hedge, with_retry
 from .router import Replica, make_router
 from .stats import DispatchStats
+
+
+def _hashable(v) -> bool:
+    """Whether ``v`` can key a micro-batch window (a list-valued ``stop``
+    sequence, say, cannot — such requests dispatch without windowing)."""
+    try:
+        hash(v)
+    except TypeError:
+        return False
+    return True
 
 
 class _AmbientReplica(Replica):
@@ -58,8 +77,16 @@ class Dispatcher(Backend):
                  weights=None, names=None, cache=None, admission=None,
                  retry: RetryPolicy | None = None,
                  hedge: HedgePolicy | None = None,
+                 batch=None,
                  stats: DispatchStats | None = None):
         self.stats = stats if stats is not None else DispatchStats()
+        self.batch_policy = make_batch_policy(batch)
+        self.batch_stats = BatchStats(
+            self.batch_policy.max_batch if self.batch_policy else None)
+        self.stats.batch = self.batch_stats
+        self.batcher = MicroBatcher(self.batch_policy, self._execute_batch,
+                                    self.batch_stats) \
+            if self.batch_policy is not None else None
         if backends is not None:
             self.router = make_router(backends, policy=policy,
                                       weights=weights, names=names)
@@ -90,30 +117,202 @@ class Dispatcher(Backend):
             "generate", (prompt, max_tokens, temperature, stop),
             lambda b: b.generate(prompt, max_tokens=max_tokens,
                                  temperature=temperature, stop=stop),
-            cacheable=temperature <= 0.0, domains=domains)
+            cacheable=temperature <= 0.0, domains=domains,
+            batch=(("generate", (max_tokens, temperature, stop)), prompt))
 
     async def embed(self, text, domains=()):
         return await self.dispatch("embed", (text,),
-                                   lambda b: b.embed(text), domains=domains)
+                                   lambda b: b.embed(text), domains=domains,
+                                   batch=(("embed", ()), text))
+
+    async def generate_batch(self, prompts, *, max_tokens, temperature,
+                             stop, domains=()):
+        """Batched twin of :meth:`generate` (this is where an engine batch
+        window lands).  Per-element cache lookups and in-flight coalescing
+        happen first; the remaining misses traverse hedge → route → admit →
+        retry as **one** batched backend request.  Returns one result per
+        prompt in order; a failed element is returned as its ``Exception``
+        instance (per-element error isolation)."""
+        return await self._batch_pipeline(
+            "generate", (max_tokens, temperature, stop), list(prompts),
+            cacheable=temperature <= 0.0, domains=domains)
+
+    async def embed_batch(self, texts, domains=()):
+        """Batched twin of :meth:`embed` (see :meth:`generate_batch`)."""
+        return await self._batch_pipeline("embed", (), list(texts),
+                                          domains=domains)
 
     # -- dispatch pipeline ---------------------------------------------------
 
     async def dispatch(self, kind: str, payload, call, *, cacheable=True,
-                       domains=()):
+                       domains=(), batch=None):
         """Dispatch ``call(backend) -> awaitable`` for a request identified
-        by ``(kind, payload)`` through cache → hedge → route → admit →
-        retry.  ``domains`` tags the request with its effect-domain keys
-        for the per-domain stats view (purely observational)."""
+        by ``(kind, payload)`` through cache → batch → hedge → route →
+        admit → retry.  ``domains`` tags the request with its effect-domain
+        keys for the per-domain stats view (purely observational).
+        ``batch`` is ``(group, element)`` — when a micro-batcher is
+        configured, the request windows with identical-``group`` traffic
+        instead of dispatching alone."""
         self.stats.requests += 1
         if domains:
             self.stats.note_domains(domains)
         use_cache = self.cache is not None and cacheable
         needs_key = use_cache or self.retry is not None
         key = request_key(kind, payload) if needs_key else ""
+        if self.batcher is not None and batch is not None \
+                and _hashable(batch[0]):
+            group, element = batch
+
+            def runner():
+                return self._one_via_batcher(group, element)
+        else:
+            def runner():
+                return self._hedged(key, call)
         if not use_cache:
-            return await self._hedged(key, call)
-        return await self.cache.get_or_dispatch(
-            key, lambda: self._hedged(key, call), self.stats)
+            return await runner()
+        return await self.cache.get_or_dispatch(key, runner, self.stats)
+
+    async def _one_via_batcher(self, group, element):
+        (r,) = await self.batcher.submit_many(group, [element])
+        if isinstance(r, BaseException):
+            raise r
+        return r
+
+    # -- batched pipeline ----------------------------------------------------
+
+    @staticmethod
+    def _element_payload(kind: str, payload, opts):
+        """The single-call request payload for one batch element — element
+        cache keys must equal the keys ``generate``/``embed`` would use, so
+        the tiers interoperate across batched and unbatched traffic."""
+        return (payload, *opts) if kind == "generate" else (payload,)
+
+    async def _batch_pipeline(self, kind: str, opts, payloads, *,
+                              cacheable=True, domains=()):
+        st = self.stats
+        n = len(payloads)
+        st.requests += n
+        if domains:
+            for _ in range(n):
+                st.note_domains(domains)
+        group = (kind, opts)
+        # an unhashable group (e.g. a list-valued stop sequence) cannot key
+        # a micro-batch window; the burst still dispatches as one batch
+        use_batcher = self.batcher is not None and _hashable(group)
+        use_cache = self.cache is not None and cacheable
+        if not use_cache:
+            if use_batcher:
+                return await self.batcher.submit_many(group, payloads)
+            return await self._execute_batch(group, payloads)
+        cache = self.cache
+        keys = [request_key(kind, self._element_payload(kind, p, opts))
+                for p in payloads]
+        results: list = [None] * n
+        # per-element cache tiers: memory, then disk (disk probes gathered —
+        # n sequential thread hops would stall the whole batch)
+        misses = []
+        for i in range(n):
+            v = cache.mem.get(keys[i])
+            if v is not MISS:
+                st.cache_hits += 1
+                results[i] = v
+            else:
+                misses.append(i)
+        if cache.disk is not None and misses:
+            probed = await asyncio.gather(
+                *(asyncio.to_thread(cache.disk.get, keys[i])
+                  for i in misses))
+            still = []
+            for i, v in zip(misses, probed):
+                if v is not MISS:
+                    cache.mem.put(keys[i], v)
+                    st.cache_hits += 1
+                    st.disk_hits += 1
+                    results[i] = v
+                else:
+                    still.append(i)
+            misses = still
+        # in-flight coalescing: join an identical outstanding element
+        # (possibly an earlier element of this very batch)
+        waiters, primaries = [], []
+        for i in misses:
+            fut, primary = cache.claim(keys[i])
+            if primary:
+                st.cache_misses += 1
+                primaries.append((i, fut))
+            else:
+                st.coalesced += 1
+                waiters.append((i, fut))
+        if primaries:
+            batch_payloads = [payloads[i] for i, _ in primaries]
+            try:
+                if use_batcher:
+                    rs = await self.batcher.submit_many(group, batch_payloads)
+                else:
+                    rs = await self._execute_batch(group, batch_payloads)
+            except BaseException as e:
+                for i, fut in primaries:
+                    cache.settle(keys[i], fut, exc=e)
+                raise
+            for (i, fut), r in zip(primaries, rs):
+                results[i] = r
+                if isinstance(r, BaseException):
+                    cache.settle(keys[i], fut, exc=r)
+                else:
+                    cache.settle(keys[i], fut, result=r)
+            if cache.disk is not None:
+                # after delivery: a slow disk must not delay waiters
+                await asyncio.gather(
+                    *(asyncio.to_thread(cache.disk.put, keys[i], r)
+                      for (i, _), r in zip(primaries, rs)
+                      if not isinstance(r, BaseException)))
+        for i, fut in waiters:
+            try:
+                async def _redispatch(i=i):
+                    (r,) = await self._execute_batch(group, [payloads[i]])
+                    return r
+
+                results[i] = await cache.join(fut, _redispatch)
+            except BaseException as e:
+                if isinstance(e, asyncio.CancelledError):
+                    raise
+                results[i] = e
+        return results
+
+    async def _execute_batch(self, group, payloads) -> list:
+        """One batched backend request: hedge → route → admit → retry, a
+        single admission unit regardless of batch size."""
+        n = len(payloads)
+        key = request_key(f"{group[0]}.batch", (tuple(payloads), group[1]))
+        results = await self._hedged(
+            key, lambda b: self._backend_batch(b, group, payloads))
+        if not isinstance(results, (list, tuple)) or len(results) != n:
+            raise RuntimeError(
+                f"batched backend returned {type(results).__name__} of "
+                f"length "
+                f"{len(results) if isinstance(results, (list, tuple)) else 'n/a'}"
+                f", expected {n} results")
+        self.batch_stats.record_batch(n)
+        return list(results)
+
+    async def _backend_batch(self, backend, group, payloads) -> list:
+        kind, opts = group
+        if kind == "generate":
+            mt, tp, stp = opts
+            meth = getattr(backend, "generate_batch", None)
+            if meth is not None:
+                return await meth(list(payloads), max_tokens=mt,
+                                  temperature=tp, stop=stp)
+            coros = [backend.generate(p, max_tokens=mt, temperature=tp,
+                                      stop=stp) for p in payloads]
+        else:
+            meth = getattr(backend, "embed_batch", None)
+            if meth is not None:
+                return await meth(list(payloads))
+            coros = [backend.embed(p) for p in payloads]
+        # list-payload-unaware backend: per-element fallback (still one
+        # admission; failures isolate per element via return_exceptions)
+        return list(await asyncio.gather(*coros, return_exceptions=True))
 
     async def _hedged(self, key, call):
         if self.hedge is None:

@@ -13,6 +13,10 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # avoid a runtime cycle (batcher imports LatencyDigest)
+    from .batcher import BatchStats
 
 
 class LatencyDigest:
@@ -86,6 +90,8 @@ class DispatchStats:
         # requests per effect domain (DESIGN.md §2.2) — which sessions /
         # hosts / resources drive the traffic
         self.per_domain: dict[str, int] = {}
+        # per-batch stats, attached by the Dispatcher
+        self.batch: BatchStats | None = None
         self._lock = threading.Lock()
 
     # -- event hooks ---------------------------------------------------------
@@ -127,7 +133,10 @@ class DispatchStats:
         return self.cache_hits / looked if looked else 0.0
 
     def snapshot(self) -> dict:
+        batch = self.batch.snapshot() \
+            if self.batch is not None and self.batch.batches else None
         return {
+            "batch": batch,
             "requests": self.requests,
             "dispatched": self.dispatched,
             "cache_hits": self.cache_hits,
@@ -166,6 +175,14 @@ class DispatchStats:
             f"{snap['hedges']} hedges ({snap['hedge_wins']} wins), "
             f"queue peak {snap['queue_peak']}"
         ]
+        if snap["batch"]:
+            b = snap["batch"]
+            lines.append(
+                f"  batches: {b['batches']} carrying {b['elements']} "
+                f"elements (mean {b['mean_size']:.1f}"
+                + (f", fill {b['fill_ratio']:.0%}" if b["fill_ratio"]
+                   else "")
+                + f"), window wait p50 {b['wait_p50_s'] * 1e3:.1f}ms")
         if snap["per_domain"]:
             top = sorted(snap["per_domain"].items(),
                          key=lambda kv: -kv[1])[:8]

@@ -11,7 +11,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import flash_attention_fwd
 from .ref import attention_ref

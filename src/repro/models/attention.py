@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import PSpec, apply_rope, norm_schema, rmsnorm, rope_cos_sin, shard_hint
+from .common import PSpec, apply_rope, rmsnorm, rope_cos_sin, shard_hint
 
 NEG_INF = -2.0e38
 

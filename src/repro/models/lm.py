@@ -18,9 +18,7 @@ from . import rglru as rgmod
 from . import ssd as ssdmod
 from .common import (
     PSpec,
-    abstract_tree,
     apply_norm,
-    init_tree,
     norm_schema,
     shard_hint,
     stack_schema,

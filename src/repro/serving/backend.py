@@ -47,3 +47,22 @@ class LocalEngineBackend(Backend):
     async def embed(self, text):
         toks = self.tok.encode(text)[:8]
         return tuple(float(t) / self.tok.vocab_size for t in toks)
+
+    # -- list payloads (PopPy auto-batching, DESIGN.md §2.3) ----------------
+    # An app-level batch becomes one admission burst into the
+    # continuous-batching engine: every element is submitted in the same
+    # loop pass, so the scheduler admits them into shared decode steps
+    # (free slots permitting) instead of trickling them in one at a time.
+    # Hedging is per element — a straggling slot re-races alone.
+
+    async def generate_batch(self, prompts, *, max_tokens, temperature,
+                             stop):
+        return list(await asyncio.gather(
+            *(self.generate(p, max_tokens=max_tokens,
+                            temperature=temperature, stop=stop)
+              for p in prompts),
+            return_exceptions=True))
+
+    async def embed_batch(self, texts):
+        return list(await asyncio.gather(
+            *(self.embed(t) for t in texts), return_exceptions=True))

@@ -38,7 +38,6 @@ class AdamW:
     master_weights: bool = False
 
     def init(self, params):
-        zeros = lambda p: jnp.zeros_like(p)
         st = {
             "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                                params),

@@ -17,11 +17,9 @@ at a chosen step, once per process lifetime.
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
-import numpy as np
 
 from . import checkpoint as ckpt
 from .data import LMDataset

@@ -3,11 +3,9 @@
 from __future__ import annotations
 
 import asyncio
-import time
 
 from repro.core import (
     equivalent,
-    poppy,
     recording,
     sequential,
     sequential_mode,

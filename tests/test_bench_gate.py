@@ -1,0 +1,86 @@
+"""The CI bench-gate (benchmarks/perf_gate.py) must demonstrably fail on a
+seeded equivalence failure or a >tolerance speedup regression, pass within
+tolerance, and catch silently-lost coverage."""
+
+from __future__ import annotations
+
+import json
+
+from benchmarks.perf_gate import compare, main
+
+
+def _current(equivalent=True, speedup=3.0):
+    return {"figures": {
+        "fig12": {"equivalent": equivalent,
+                  "speedups": {"batched_vs_unbatched": speedup}},
+        "fig5": {"equivalent": True, "speedups": {"geomean": 1.7}},
+    }}
+
+
+def _baseline(speedup=3.0):
+    return {"tolerance": 0.2, "figures": {
+        "fig12": {"speedups": {"batched_vs_unbatched": speedup}},
+        "fig5": {"speedups": {"geomean": 1.5}},
+    }}
+
+
+def test_gate_passes_on_good_run():
+    assert compare(_current(), _baseline()) == []
+
+
+def test_gate_fails_on_seeded_equivalence_failure():
+    cur = _current(equivalent=False)
+    cur["figures"]["fig12"]["error"] = "results diverge"
+    failures = compare(cur, _baseline())
+    assert any("fig12" in f and "equivalence FAILED" in f for f in failures)
+
+
+def test_gate_fails_on_regression_beyond_tolerance():
+    failures = compare(_current(speedup=3.0 * 0.79), _baseline(3.0))
+    assert any("fig12.batched_vs_unbatched" in f for f in failures)
+
+
+def test_gate_passes_within_tolerance():
+    assert compare(_current(speedup=3.0 * 0.81), _baseline(3.0)) == []
+
+
+def test_gate_fails_on_missing_figure_or_metric():
+    cur = _current()
+    del cur["figures"]["fig5"]
+    failures = compare(cur, _baseline())
+    assert any("fig5" in f and "missing" in f for f in failures)
+
+    cur = _current()
+    cur["figures"]["fig12"]["speedups"] = {}
+    failures = compare(cur, _baseline())
+    assert any("fig12.batched_vs_unbatched" in f and "missing" in f
+               for f in failures)
+
+
+def test_main_exit_codes_and_refresh(tmp_path, capsys):
+    cur_p = tmp_path / "BENCH_smoke.json"
+    base_p = tmp_path / "baseline.json"
+    cur_p.write_text(json.dumps(_current(speedup=2.0)))
+
+    # refresh writes a baseline from the current run
+    assert main(["--current", str(cur_p), "--baseline", str(base_p),
+                 "--refresh"]) == 0
+    base = json.loads(base_p.read_text())
+    assert base["figures"]["fig12"]["speedups"][
+        "batched_vs_unbatched"] == 2.0
+
+    # gate passes against its own refresh
+    assert main(["--current", str(cur_p), "--baseline", str(base_p)]) == 0
+
+    # a regressed run fails the gate
+    cur_p.write_text(json.dumps(_current(speedup=2.0 * 0.7)))
+    assert main(["--current", str(cur_p), "--baseline", str(base_p)]) == 1
+    assert "perf-gate FAILED" in capsys.readouterr().out
+
+    # a seeded equivalence failure fails the gate even with fine speedups
+    cur_p.write_text(json.dumps(_current(equivalent=False, speedup=9.9)))
+    assert main(["--current", str(cur_p), "--baseline", str(base_p)]) == 1
+
+    # missing inputs are a failure, not a silent pass
+    assert main(["--current", str(tmp_path / "nope.json"),
+                 "--baseline", str(base_p)]) == 1

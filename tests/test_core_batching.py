@@ -1,0 +1,304 @@
+"""Auto-batching of pending unordered externals (DESIGN.md §2.3).
+
+Differential tests for the engine's queue-time batch windows: coalescing,
+max_batch splitting, per-key windows, quiesce flush (a partial window
+flushes when no more work can arrive, not at ``max_wait_ms``), per-element
+error isolation, cache-hit elements skipping the batch, batching disabled
+under ``sequential_mode`` / forced-sequential classification, and a
+hypothesis property test that batched execution is result- and
+≡_A-equivalent to unbatched execution.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+
+import pytest
+
+from repro.core import (
+    ExternalCallError,
+    batch_handler,
+    batching,
+    equivalent,
+    poppy,
+    recording,
+    sequential_mode,
+    unordered,
+)
+from repro.core.registry import force_sequential_annotations
+
+
+class BatchWorld:
+    """A batchable external with an observable backend: records every
+    backend request (singles and batches) and answers deterministically."""
+
+    def __init__(self, max_batch=8, max_wait_ms=60_000.0, key_fn=None,
+                 delay=0.0, fail_on=()):
+        self.requests = []          # list of element lists, per backend call
+        self.fail_on = set(fail_on)
+        world = self
+
+        @unordered(returns_immutable=True,
+                   batchable=(max_batch, max_wait_ms, key_fn))
+        async def step(x, tag=0):
+            world.requests.append([x])
+            if x in world.fail_on:
+                raise ValueError(f"bad element {x!r}")
+            await asyncio.sleep(delay)
+            return f"r({x})"
+
+        @batch_handler(step)
+        async def _step_batch(calls):
+            xs = [pos[0] if pos else kw.get("x") for pos, kw in calls]
+            world.requests.append(list(xs))
+            await asyncio.sleep(delay)
+            return [ValueError(f"bad element {x!r}") if x in world.fail_on
+                    else f"r({x})" for x in xs]
+
+        self.step = step
+
+    @property
+    def batch_sizes(self):
+        return [len(r) for r in self.requests]
+
+
+def _fanout(step, n):
+    @poppy
+    def app(n):
+        out = ()
+        for i in range(n):
+            out += (step(f"x{i}"),)
+        return out
+
+    return app
+
+
+def test_fanout_coalesces_one_batch():
+    w = BatchWorld(max_batch=16)
+    app = _fanout(w.step, 6)
+    with recording() as tr_plain, sequential_mode():
+        r_plain = app(6)
+    plain_sizes = w.batch_sizes
+    w.requests = []
+    with recording() as tr, batching():
+        r = app(6)
+    assert r == r_plain
+    assert plain_sizes == [1] * 6
+    assert w.batch_sizes == [6], w.requests
+    ok, why = equivalent(tr_plain, tr)
+    assert ok, why
+
+
+def test_batching_off_by_default():
+    w = BatchWorld(max_batch=16)
+    app = _fanout(w.step, 5)
+    r = app(5)
+    assert r == tuple(f"r(x{i})" for i in range(5))
+    assert w.batch_sizes == [1] * 5
+
+
+def test_quiesce_flush_beats_max_wait():
+    """Regression: a window smaller than max_batch must flush when no more
+    work can arrive (end of program), not hang until max_wait_ms."""
+    w = BatchWorld(max_batch=64, max_wait_ms=60_000.0)
+    app = _fanout(w.step, 3)
+    t0 = time.perf_counter()
+    with batching():
+        r = app(3)
+    dt = time.perf_counter() - t0
+    assert r == tuple(f"r(x{i})" for i in range(3))
+    assert w.batch_sizes == [3]
+    assert dt < 5.0, f"partial window hung {dt:.1f}s (waited for deadline?)"
+
+
+def test_max_batch_splits_windows():
+    w = BatchWorld(max_batch=4)
+    app = _fanout(w.step, 10)
+    with batching():
+        r = app(10)
+    assert r == tuple(f"r(x{i})" for i in range(10))
+    assert sorted(w.batch_sizes) == [2, 4, 4], w.batch_sizes
+
+
+def test_distinct_keys_distinct_windows():
+    w = BatchWorld(max_batch=16, key_fn=lambda pos, kw: kw.get("tag", 0))
+    step = w.step
+
+    @poppy
+    def app(n):
+        out = ()
+        for i in range(n):
+            out += (step(f"x{i}", tag=i % 2),)
+        return out
+
+    with batching():
+        r = app(6)
+    assert r == tuple(f"r(x{i})" for i in range(6))
+    assert sorted(w.batch_sizes) == [3, 3]
+    contents = sorted(w.requests, key=len)
+    assert {frozenset(c) for c in contents} == {
+        frozenset({"x0", "x2", "x4"}), frozenset({"x1", "x3", "x5"})}
+
+
+def test_key_fn_opt_out_dispatches_singly():
+    w = BatchWorld(max_batch=16, key_fn=lambda pos, kw: None)
+    app = _fanout(w.step, 4)
+    with batching():
+        r = app(4)
+    assert r == tuple(f"r(x{i})" for i in range(4))
+    assert w.batch_sizes == [1] * 4
+
+
+def test_dependent_waves_form_separate_batches():
+    w = BatchWorld(max_batch=16)
+    step = w.step
+
+    @poppy
+    def app():
+        seed = step("seed")
+        out = ()
+        for i in range(3):
+            out += (step(f"{seed}|{i}"),)
+        return out
+
+    with batching():
+        r = app()
+    assert r == tuple(f"r(r(seed)|{i})" for i in range(3))
+    assert w.batch_sizes == [1, 3], w.requests
+
+
+def test_per_element_error_isolation():
+    """One failing element fails only its placeholder: the program raises
+    that element's error (as sequential Python would), the batch still
+    dispatched as one request, and the sibling elements resolved."""
+    w = BatchWorld(max_batch=8, fail_on={"x1"})
+    app = _fanout(w.step, 3)
+    with recording() as tr, batching():
+        with pytest.raises(ExternalCallError) as ei:
+            app(3)
+    assert isinstance(ei.value.__cause__, ValueError)
+    assert "bad element 'x1'" in str(ei.value.__cause__)
+    assert w.batch_sizes == [3], w.requests   # one batched request
+    resolved = {e.args_repr for e in tr.events if e.t_resolve > 0}
+    assert any("x0" in a for a in resolved)
+    assert any("x2" in a for a in resolved)
+    assert not any("x1" in a for a in resolved)
+
+
+def test_batch_level_failure_fails_all_elements():
+    w = BatchWorld(max_batch=8)
+
+    @batch_handler(w.step)
+    async def _broken(calls):
+        raise RuntimeError("backend down")
+
+    app = _fanout(w.step, 3)
+    with batching():
+        with pytest.raises(ExternalCallError) as ei:
+            app(3)
+    assert isinstance(ei.value.__cause__, RuntimeError)
+
+
+def test_sequential_mode_disables_batching():
+    w = BatchWorld(max_batch=16)
+    app = _fanout(w.step, 4)
+    with batching(), sequential_mode():
+        r = app(4)
+    assert r == tuple(f"r(x{i})" for i in range(4))
+    assert w.batch_sizes == [1] * 4
+
+
+def test_force_sequential_disables_batching():
+    w = BatchWorld(max_batch=16)
+    app = _fanout(w.step, 4)
+    with batching(), force_sequential_annotations():
+        r = app(4)
+    assert r == tuple(f"r(x{i})" for i in range(4))
+    assert w.batch_sizes == [1] * 4
+
+
+def test_batching_false_reenables_singles():
+    w = BatchWorld(max_batch=16)
+    app = _fanout(w.step, 4)
+    with batching():
+        with batching(False):
+            app(4)
+    assert w.batch_sizes == [1] * 4
+
+
+def test_cache_hit_elements_skip_the_batch():
+    """Per-element cache lookups happen before batching: a warm element is
+    answered from cache and never occupies batch capacity."""
+    from repro.core.ai import SimulatedBackend, embed, use_backend, \
+        use_dispatcher
+    from repro.dispatch import Dispatcher
+
+    be = SimulatedBackend(time_scale=0.01)
+    d = Dispatcher(cache=True)
+
+    @poppy
+    def app(texts):
+        out = ()
+        for t in texts:
+            out += (embed(t),)
+        return out
+
+    with use_backend(be), use_dispatcher(d):
+        with batching():
+            warm = app(("a",))          # warms the cache for "a"
+            assert be.batches == [1]
+            r = app(("a", "b", "c", "d"))
+    assert r[0] == warm[0]
+    assert be.batches == [1, 3], be.batches   # "a" served from cache
+    assert d.stats.cache_hits == 1
+    assert sorted(be.calls) == ["a", "b", "c", "d"]
+
+
+def test_in_batch_duplicates_coalesce():
+    """Identical elements inside one window dispatch once (in-flight
+    coalescing below the batcher) and both placeholders resolve."""
+    from repro.core.ai import SimulatedBackend, embed, use_backend, \
+        use_dispatcher
+    from repro.dispatch import Dispatcher
+
+    be = SimulatedBackend(time_scale=0.01)
+    d = Dispatcher(cache=True)
+
+    @poppy
+    def app():
+        a = embed("same")
+        b = embed("same")
+        c = embed("other")
+        return (a, b, c)
+
+    with use_backend(be), use_dispatcher(d), batching():
+        a, b, c = app()
+    assert a == b
+    assert be.batches == [2], be.batches       # "same" dispatched once
+    assert d.stats.coalesced == 1
+
+
+def test_llm_options_split_windows():
+    from repro.core.ai import SimulatedBackend, llm, use_backend
+
+    be = SimulatedBackend(time_scale=0.01)
+
+    @poppy
+    def app():
+        out = ()
+        for i in range(4):
+            out += (llm(f"p{i}", max_tokens=4),)
+        for i in range(4):
+            out += (llm(f"q{i}", max_tokens=8),)
+        return out
+
+    with use_backend(be), recording() as tr, batching():
+        r = app()
+    with use_backend(SimulatedBackend(time_scale=0.01)), recording() as tp:
+        with sequential_mode():
+            rp = app()
+    assert r == rp
+    ok, why = equivalent(tp, tr)
+    assert ok, why
+    assert sorted(be.batches) == [4, 4], be.batches

@@ -9,7 +9,6 @@ parallelism actually reduces wall-clock time.
 import asyncio
 import time
 
-import pytest
 
 from repro.core import poppy, readonly, sequential, unordered, sequential_mode
 

@@ -10,9 +10,8 @@ classification of mutating intrinsics, and the session-keyed MemoryStore.
 
 import asyncio
 
-import pytest
 
-from helpers_core import ExternalWorld, assert_same, run_both
+from helpers_core import ExternalWorld, assert_same
 from repro.core import (
     equivalent,
     poppy,

@@ -3,13 +3,10 @@ tables, freshness semantics, dynamic classifiers, deeper fragment corners."""
 
 import asyncio
 
-import pytest
 
 from repro.core import (
     external,
     poppy,
-    readonly,
-    sequential,
     unordered,
 )
 from repro.core.registry import (

@@ -10,11 +10,10 @@ from repro.core.bezoar import (
     BGlobal,
     BIf,
     BLoad,
-    BReturn,
     BStore,
     format_func,
 )
-from repro.core.lambda_o import LCallOp, LFor, LIte, LPrim, format_lfunc
+from repro.core.lambda_o import LCallOp, LFor, format_lfunc
 
 
 def bez(fn):

@@ -8,7 +8,6 @@ from repro.core import (
     ExternalCallError,
     PoppyUnboundLocalError,
     poppy,
-    sequential_mode,
     unordered,
 )
 

@@ -1,0 +1,215 @@
+"""Dispatch-layer micro-batcher tests (DESIGN.md §5, §2.3): windowing of
+concurrent singles, batched pipeline composition with the per-element cache
+(hits skip the batch, identical misses coalesce), one admission unit per
+batch, per-element error isolation, the gather fallback for backends
+without list payloads, and the per-batch stats surface."""
+
+from __future__ import annotations
+
+import asyncio
+
+from repro.core.ai import SimulatedBackend, use_backend
+from repro.dispatch import (
+    AdmissionPolicy,
+    BatchPolicy,
+    Dispatcher,
+    make_batch_policy,
+)
+
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+def test_make_batch_policy_forms():
+    assert make_batch_policy(None) is None
+    assert make_batch_policy(True).max_batch == 32
+    p = make_batch_policy({"max_batch": 4, "max_wait_s": 0.1})
+    assert (p.max_batch, p.max_wait_s) == (4, 0.1)
+    q = BatchPolicy(max_batch=2)
+    assert make_batch_policy(q) is q
+
+
+def test_concurrent_singles_window_into_one_batch():
+    be = SimulatedBackend(time_scale=0.01)
+    d = Dispatcher([be], batch=BatchPolicy(max_batch=8, max_wait_s=0.05))
+
+    async def go():
+        return await asyncio.gather(*(
+            d.generate(f"p{i}", max_tokens=4, temperature=0.0, stop=None)
+            for i in range(5)))
+
+    outs = run(go())
+    assert outs == [be.response(f"p{i}", 4) for i in range(5)]
+    # the partial window flushed by timer as one batched request
+    assert be.batches == [5], be.batches
+    snap = d.batch_stats.snapshot()
+    assert snap["batches"] == 1 and snap["elements"] == 5
+    assert snap["size_hist"] == {5: 1}
+    assert 0 < snap["fill_ratio"] == 5 / 8
+    assert "batches: 1 carrying 5 elements" in d.stats.report()
+
+
+def test_full_window_flushes_without_timer():
+    be = SimulatedBackend(time_scale=0.01)
+    d = Dispatcher([be], batch=BatchPolicy(max_batch=3, max_wait_s=10.0))
+
+    async def go():
+        return await asyncio.gather(*(
+            d.embed(f"t{i}") for i in range(6)))
+
+    outs = run(asyncio.wait_for(go(), timeout=5.0))
+    assert len(outs) == 6
+    assert be.batches == [3, 3], be.batches
+
+
+def test_generate_batch_one_admission_unit():
+    """A batch traverses admission as one request: max_concurrency=1 admits
+    the whole batch at once instead of trickling elements."""
+    be = SimulatedBackend(time_scale=0.01)
+    d = Dispatcher([be], admission=AdmissionPolicy(max_concurrency=1))
+
+    async def go():
+        return await d.generate_batch(
+            [f"p{i}" for i in range(8)], max_tokens=4, temperature=0.0,
+            stop=None)
+
+    outs = run(go())
+    assert outs == [be.response(f"p{i}", 4) for i in range(8)]
+    assert be.batches == [8]
+    assert d.stats.dispatched == 1
+    assert be.max_in_flight == 8   # all elements processed concurrently
+
+
+def test_batch_pipeline_cache_hits_and_coalescing():
+    be = SimulatedBackend(time_scale=0.01)
+    d = Dispatcher([be], cache=True)
+
+    async def go():
+        first = await d.embed_batch(["a", "b"])
+        second = await d.embed_batch(["a", "c", "c", "d"])
+        return first, second
+
+    first, second = run(go())
+    assert second[0] == first[0]            # "a" from cache
+    assert second[1] == second[2]           # duplicate "c" coalesced
+    assert be.batches == [2, 2]             # second batch carried c, d only
+    assert d.stats.cache_hits == 1
+    assert d.stats.coalesced == 1
+    assert d.stats.cache_misses == 4        # a, b, c, d
+
+
+def test_per_element_error_isolation_and_no_error_caching():
+    class FlakyBackend(SimulatedBackend):
+        async def generate_batch(self, prompts, *, max_tokens, temperature,
+                                 stop):
+            return [RuntimeError(f"boom {p}") if p.startswith("bad")
+                    else self.response(p, max_tokens) for p in prompts]
+
+    be = FlakyBackend(time_scale=0.01)
+    d = Dispatcher([be], cache=True)
+
+    async def go():
+        r1 = await d.generate_batch(["ok1", "bad1", "ok2"], max_tokens=4,
+                                    temperature=0.0, stop=None)
+        # failed elements are not cached or left stuck in-flight
+        r2 = await d.generate_batch(["bad1", "ok1"], max_tokens=4,
+                                    temperature=0.0, stop=None)
+        return r1, r2
+
+    r1, r2 = run(go())
+    assert r1[0] == be.response("ok1", 4)
+    assert isinstance(r1[1], RuntimeError)
+    assert r1[2] == be.response("ok2", 4)
+    assert isinstance(r2[0], RuntimeError)   # re-dispatched, failed again
+    assert r2[1] == be.response("ok1", 4)    # served from cache
+    assert d.stats.cache_hits == 1
+    assert not d.cache.inflight
+
+
+def test_duck_typed_backend_gather_fallback():
+    """A backend without list-payload methods still works: the batch fans
+    out per element inside one routed/admitted request, with per-element
+    isolation via return_exceptions."""
+
+    class Bare:   # deliberately not a Backend subclass
+        def __init__(self):
+            self.calls = []
+
+        async def generate(self, prompt, *, max_tokens, temperature, stop):
+            self.calls.append(prompt)
+            if prompt == "bad":
+                raise ValueError("nope")
+            return f"g:{prompt}"
+
+        async def embed(self, text):
+            self.calls.append(text)
+            return (1.0,)
+
+    be = Bare()
+    d = Dispatcher([be])
+
+    async def go():
+        return await d.generate_batch(["x", "bad", "y"], max_tokens=4,
+                                      temperature=0.0, stop=None)
+
+    outs = run(go())
+    assert outs[0] == "g:x" and outs[2] == "g:y"
+    assert isinstance(outs[1], ValueError)
+    assert sorted(be.calls) == ["bad", "x", "y"]
+    assert d.stats.dispatched == 1
+
+
+def test_singles_and_batches_share_cache_keys():
+    """An element cached by a batched request answers a later single call
+    (and vice versa) — the per-element keys are identical."""
+    be = SimulatedBackend(time_scale=0.01)
+    d = Dispatcher([be], cache=True)
+
+    async def go():
+        await d.generate_batch(["p"], max_tokens=4, temperature=0.0,
+                               stop=None)
+        return await d.generate("p", max_tokens=4, temperature=0.0,
+                                stop=None)
+
+    out = run(go())
+    assert out == be.response("p", 4)
+    assert d.stats.cache_hits == 1
+    assert len(be.calls) == 1
+
+
+def test_ambient_trivial_dispatcher_batches():
+    """The trivial (no-argument) dispatcher resolves the ambient backend
+    per call and still carries batched requests — the engine's windows
+    work with zero dispatcher configuration."""
+    be = SimulatedBackend(time_scale=0.01)
+    d = Dispatcher()
+
+    async def go():
+        with use_backend(be):
+            return await d.embed_batch(["u", "v"])
+
+    outs = run(go())
+    assert outs == [be._embedding("u"), be._embedding("v")]
+    assert be.batches == [2]
+
+
+def test_list_valued_stop_bypasses_windowing():
+    """Regression: an unhashable request option (a list-valued ``stop``)
+    cannot key a micro-batch window — such calls must dispatch unbatched
+    instead of crashing on the window-dict lookup."""
+    be = SimulatedBackend(time_scale=0.01)
+    d = Dispatcher([be], batch=BatchPolicy(max_batch=8, max_wait_s=0.01))
+
+    async def go():
+        single = await d.generate("p", max_tokens=4, temperature=0.0,
+                                  stop=["END"])
+        burst = await d.generate_batch(["q", "r"], max_tokens=4,
+                                       temperature=0.0, stop=["END"])
+        return single, burst
+
+    single, burst = run(go())
+    assert single == be.response("p", 4)
+    assert burst == [be.response("q", 4), be.response("r", 4)]
+    # the burst still went out as one batched backend request
+    assert be.batches == [2], be.batches

@@ -2,7 +2,6 @@
 mesh in a subprocess (so the main test process keeps 1 device), plus
 sharding-rule unit tests."""
 
-import json
 import subprocess
 import sys
 import textwrap

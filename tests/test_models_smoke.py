@@ -101,4 +101,5 @@ def test_param_counts_reasonable():
     }
     for arch, (lo, hi) in expect.items():
         n = build_model(get_config(arch)).num_params()
-        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params outside [{lo/1e9}, {hi/1e9}]B"
+        assert lo <= n <= hi, \
+            f"{arch}: {n/1e9:.2f}B params outside [{lo/1e9}, {hi/1e9}]B"

@@ -6,7 +6,6 @@ import asyncio
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config
@@ -107,3 +106,38 @@ def test_engine_backed_llm_through_poppy(served):
     assert engine.decode_tokens > 0
     assert max(engine.batch_occupancy) >= 2, \
         "parallel PopPy calls did not share decode batches"
+
+
+def test_engine_backed_llm_autobatched(served):
+    """A PopPy batch window lands on the serving engine as one admission
+    burst (DESIGN.md §2.3): results match the unbatched run and the burst
+    shares decode steps."""
+    cfg, model, params = served
+    from repro.core import batching, poppy
+    from repro.core.ai import llm, use_backend
+    from repro.serving.backend import LocalEngineBackend
+
+    def run(batched):
+        engine = ServingEngine(model, params, max_slots=4, max_len=64)
+        backend = LocalEngineBackend(engine)
+
+        @poppy
+        def fanout(n):
+            outs = tuple()
+            for i in range(n):
+                outs += (llm(f"prompt {i}", max_tokens=4),)
+            return outs
+
+        with use_backend(backend):
+            if batched:
+                with batching():
+                    outs = fanout(4)
+            else:
+                outs = fanout(4)
+        return outs, engine
+
+    ref, _ = run(False)
+    outs, engine = run(True)
+    assert outs == ref
+    assert max(engine.batch_occupancy) >= 2, \
+        "batched PopPy calls did not share decode batches"

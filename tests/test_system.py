@@ -5,7 +5,6 @@ calls must (1) produce results identical to sequential Python execution,
 (2) keep ordered externals in order, and (3) actually share decode
 batches on the engine."""
 
-import asyncio
 
 import jax
 
