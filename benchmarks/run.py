@@ -5,6 +5,7 @@
     Fig. 10  blocking-external offload     fig10_sync_offload
     Fig. 11  effect-domain keying          fig11_effect_domains
     Fig. 12  auto-batching                 fig12_autobatch
+    Fig. 13  prefix-aware prefill          fig13_prefix_prefill
     Fig. 6   ToT execution trace           fig6_trace
     Fig. 7   interpreter overhead          fig7_overhead
     Fig. 8   parallelism scaling           fig8_scaling
@@ -32,18 +33,20 @@ SMOKE_JSON = "experiments/ci/BENCH_smoke.json"
 
 
 def smoke(out_path=SMOKE_JSON):
-    """Benchmark smoke job (CI): run fig5/fig9/fig10/fig11/fig12 with tiny
-    parameters.  Every one of these figures asserts result equality (and,
-    for fig5/fig11/fig12, ≡_A trace equivalence) against sequential-mode
-    Python on every trial — so an equivalence regression fails this job in
-    minutes instead of surfacing in a full benchmark run.  Speedup
+    """Benchmark smoke job (CI): run fig5/fig9/fig10/fig11/fig12/fig13
+    with tiny parameters.  Every one of these figures asserts result
+    equality (and, for fig5/fig11/fig12/fig13, ≡_A trace equivalence)
+    against sequential-mode Python on every trial — so an equivalence
+    regression fails this job in minutes instead of surfacing in a full
+    benchmark run.  Speedup
     acceptance bars are *not* enforced here (tiny N is timing noise);
     correctness is — but every figure's speedups are recorded in
     ``BENCH_smoke.json`` (per-figure ``equivalent`` boolean + ``speedups``
     map) so the ``bench-gate`` CI job can track the trajectory against
     ``benchmarks/baseline.json``."""
     from benchmarks import (fig5_speedup, fig9_dispatch, fig10_sync_offload,
-                            fig11_effect_domains, fig12_autobatch)
+                            fig11_effect_domains, fig12_autobatch,
+                            fig13_prefix_prefill)
 
     t0 = time.time()
     figures = {}
@@ -84,6 +87,16 @@ def smoke(out_path=SMOKE_JSON):
             lambda r: {"batched_vs_unbatched":
                        r["speedup_batched_vs_unbatched"],
                        "batched_vs_plain": r["speedup_batched_vs_plain"]})
+    # fig13 additionally asserts the prefill jit-compilation bound every
+    # run; jit_headroom (= bound / compilations) is tracked by the gate so
+    # a bucketing regression (recompile-per-length) fails CI even when
+    # the hard bound still holds at smoke scale
+    attempt("fig13", "token equality + ≡_A + prefill-compilation bound",
+            lambda: fig13_prefix_prefill.run(trials=1, n=8,
+                                             prefix_chars=400, smoke=True),
+            lambda r: {"prefix_vs_nocache":
+                       r["speedup_prefix_vs_nocache"],
+                       "jit_headroom": r["jit_headroom"]})
 
     out = Path(out_path)
     out.parent.mkdir(parents=True, exist_ok=True)
@@ -120,7 +133,7 @@ def main():
     from benchmarks import (fig5_speedup, fig6_trace, fig7_overhead,
                             fig8_scaling, fig10_sync_offload,
                             fig11_effect_domains, fig12_autobatch,
-                            table1_characteristics)
+                            fig13_prefix_prefill, table1_characteristics)
 
     print("=" * 72)
     print("Table 1 — benchmark program characteristics")
@@ -157,6 +170,12 @@ def main():
     print("=" * 72)
     fig12_autobatch.run(trials=trials,
                         n_docs=8 if args.quick else 32)
+
+    print("\n" + "=" * 72)
+    print("Fig. 13 — prefix-aware KV reuse + bucketed chunked prefill")
+    print("=" * 72)
+    fig13_prefix_prefill.run(trials=trials,
+                             n=8 if args.quick else 16)
 
     print("\n" + "=" * 72)
     print("Fig. 6 — ToT execution trace (queue → dispatch → resolve)")

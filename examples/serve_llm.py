@@ -50,7 +50,10 @@ def main():
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, max_slots=4, max_len=96)
+    # max_len must cover the longest prompt (the combine call grows with
+    # --docs) plus decode room — the engine rejects prompts that don't fit
+    engine = ServingEngine(model, params, max_slots=4, max_len=256,
+                           prefix_cache_budget=16 << 20, prefill_chunk=64)
     backend = LocalEngineBackend(engine)
     # production dispatch in front of the engine: admit at most max_slots
     # concurrent requests (backpressure instead of queue stampede), cache
@@ -76,6 +79,11 @@ def main():
           f"mean batch occupancy {sum(occ)/max(len(occ),1):.2f} "
           f"(max {max(occ, default=0)}): PopPy's parallel calls shared "
           "decode batches")
+    es = engine.stats()
+    print(f"prefill: {es['prefill_tokens_computed']} tokens computed, "
+          f"{es['prefill_tokens_reused']} reused from the radix cache, "
+          f"{es['prefill_compilations']} compiled shapes "
+          f"(bound {es['prefill_shape_bound']})")
     print(dispatcher.stats.report())
 
 

@@ -253,6 +253,16 @@ def get_dispatcher():
     return _default_dispatcher
 
 
+def ambient_dispatch_stats():
+    """The ``DispatchStats`` of the dispatcher ambient at the call site.
+    Backends use this to flow backend-side observations (e.g. the serving
+    engine's shared-prefix admission counters) into the same stats
+    surface the dispatcher reports — the backend is *called by* the
+    dispatcher inside the client task's context, so the contextvar
+    resolves to the dispatcher that routed the call."""
+    return get_dispatcher().stats
+
+
 class use_dispatcher:
     """Route component calls in this context through ``d`` (a
     ``repro.dispatch.Dispatcher``)."""

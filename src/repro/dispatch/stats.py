@@ -61,6 +61,37 @@ class LatencyDigest:
 
 
 @dataclass
+class PrefixStats:
+    """Shared-prefix admission counters (serving radix KV cache,
+    DESIGN.md §3.2): how much prompt ingestion the engine skipped because
+    app-level batches share a prefix.  ``note_batch`` is called once per
+    batched admission by ``LocalEngineBackend.generate_batch``."""
+
+    batches: int = 0            # batches that warmed a shared prefix
+    elements: int = 0           # requests riding those batches
+    shared_tokens: int = 0      # common-prefix tokens, summed over batches
+    computed_tokens: int = 0    # prefix tokens actually prefilled by warms
+    warm_cached: int = 0        # warms fully served by the radix cache
+
+    def note_batch(self, *, elements, shared_tokens, computed_tokens):
+        self.batches += 1
+        self.elements += elements
+        self.shared_tokens += shared_tokens
+        self.computed_tokens += computed_tokens
+        if computed_tokens == 0:
+            self.warm_cached += 1
+
+    def snapshot(self) -> dict:
+        return {
+            "batches": self.batches,
+            "elements": self.elements,
+            "shared_tokens": self.shared_tokens,
+            "computed_tokens": self.computed_tokens,
+            "warm_cached": self.warm_cached,
+        }
+
+
+@dataclass
 class BackendStats:
     """Per-replica counters."""
 
@@ -92,6 +123,8 @@ class DispatchStats:
         self.per_domain: dict[str, int] = {}
         # per-batch stats, attached by the Dispatcher
         self.batch: BatchStats | None = None
+        # shared-prefix admission stats, fed by LocalEngineBackend
+        self.prefix: PrefixStats | None = None
         self._lock = threading.Lock()
 
     # -- event hooks ---------------------------------------------------------
@@ -106,6 +139,15 @@ class DispatchStats:
         with self._lock:
             for d in domains:
                 self.per_domain[d] = self.per_domain.get(d, 0) + 1
+
+    def note_prefix_batch(self, *, elements, shared_tokens,
+                          computed_tokens):
+        with self._lock:
+            if self.prefix is None:
+                self.prefix = PrefixStats()
+            self.prefix.note_batch(elements=elements,
+                                   shared_tokens=shared_tokens,
+                                   computed_tokens=computed_tokens)
 
     def enqueue(self):
         with self._lock:
@@ -137,6 +179,8 @@ class DispatchStats:
             if self.batch is not None and self.batch.batches else None
         return {
             "batch": batch,
+            "prefix": self.prefix.snapshot()
+            if self.prefix is not None else None,
             "requests": self.requests,
             "dispatched": self.dispatched,
             "cache_hits": self.cache_hits,
@@ -183,6 +227,13 @@ class DispatchStats:
                 + (f", fill {b['fill_ratio']:.0%}" if b["fill_ratio"]
                    else "")
                 + f"), window wait p50 {b['wait_p50_s'] * 1e3:.1f}ms")
+        if snap["prefix"]:
+            p = snap["prefix"]
+            lines.append(
+                f"  prefix: {p['batches']} shared-prefix batches "
+                f"({p['elements']} requests), {p['shared_tokens']} shared "
+                f"tokens, {p['computed_tokens']} prefilled once "
+                f"({p['warm_cached']} warm hits)")
         if snap["per_domain"]:
             top = sorted(snap["per_domain"].items(),
                          key=lambda kv: -kv[1])[:8]

@@ -138,12 +138,31 @@ def causal_mask(S, T, *, offset=0, window=0):
     return keep[None, None]
 
 
+def prefix_causal_mask(S, Tpad, prefix_len):
+    """[1, 1, S, Tpad+S] keep-mask for suffix queries over a padded KV
+    prefix followed by the suffix's own keys: prefix key j is valid iff
+    j < prefix_len (``prefix_len`` may be a traced scalar — padding beyond
+    it is masked out), suffix keys are causal."""
+    keep_prefix = jnp.broadcast_to(
+        jnp.arange(Tpad)[None, :] < prefix_len, (S, Tpad))
+    qpos = jnp.arange(S)[:, None]
+    keep_self = jnp.arange(S)[None, :] <= qpos
+    return jnp.concatenate([keep_prefix, keep_self], axis=1)[None, None]
+
+
 def full_attention(cfg, p, x, *, positions, kv_x=None, causal=True,
-                   window=0, return_kv=False):
+                   window=0, return_kv=False, prefix_kv=None,
+                   prefix_len=None):
     """Full-sequence attention (training / prefill / encoder / cross).
 
     kv_x: source of keys/values (cross-attention) — defaults to x.
     return_kv: also return the (post-RoPE) K/V for cache filling.
+    prefix_kv: optional ``(k, v)`` of an already-prefilled prompt prefix
+        ([B, Tpad, KVH, hd], post-RoPE, zero-padded beyond ``prefix_len``)
+        — x is then the prompt *suffix* whose queries attend the prefix
+        keys plus their own causal keys.  ``return_kv`` returns only the
+        suffix K/V (the caller already owns the prefix).  Requires
+        ``causal`` and global attention (window == 0).
     """
     B, S, D = x.shape
     q = _project_q(cfg, p, x)
@@ -160,6 +179,21 @@ def full_attention(cfg, p, x, *, positions, kv_x=None, causal=True,
     # tensors (e.g. 1024) instead of the d_model-wide hidden (e.g. 7168)
     k = shard_hint(shard_hint(k, "act_qkv"), "act_kv")
     v = shard_hint(shard_hint(v, "act_qkv"), "act_kv")
+
+    if prefix_kv is not None:
+        assert causal and window == 0 and kv_x is None, \
+            "prefix attention is causal global self-attention only"
+        pk, pv = prefix_kv
+        Tpad = pk.shape[1]
+        mask = prefix_causal_mask(S, Tpad, prefix_len)
+        out = mha_reference(q, jnp.concatenate([pk.astype(k.dtype), k], 1),
+                            jnp.concatenate([pv.astype(v.dtype), v], 1),
+                            mask=mask)
+        out = shard_hint(out, "act_qkv")
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+        if return_kv:
+            return out, (k, v)
+        return out
 
     impl = cfg.attention_impl
     if impl.startswith("pallas") and kv_x is None and causal:

@@ -319,23 +319,38 @@ def decode_step(cfg, params, cache, tokens, positions):
 # prefill (full-sequence forward that also fills the cache)
 
 
-def prefill(cfg, params, batch, capacity):
+def prefill(cfg, params, batch, capacity, *, prefix=None, prefix_len=None,
+            last_index=None):
     """Run the prompt through the model, returning (last_logits [B,V],
     cache filled up to S).  For recurrent blocks the cache holds the final
-    state; for attention blocks the K/V of every position."""
+    state; for attention blocks the K/V of every position.
+
+    Prefix-aware mode (serving radix cache, attention-only families):
+    ``prefix`` is a cache pytree of already-prefilled K/V for the first
+    ``prefix_len`` prompt positions (zero-padded along the sequence axis to
+    a bucketed static length); the batch then holds only the prompt
+    *suffix*, whose positions start at ``prefix_len`` (traced), and the
+    returned cache covers the suffix alone.  ``last_index`` (traced)
+    selects which suffix position's logits to return (for pad-to-bucket
+    prompts); default is the last.
+    """
     tokens = batch["tokens"]
     B, S = tokens.shape
     h, positions = embed_inputs(cfg, params, batch)
+    if prefix_len is not None:
+        positions = positions + jnp.asarray(prefix_len, jnp.int32)
     group_kinds, n_groups, tail_kinds = _layer_groups(cfg)
     dtype = cfg.activation_dtype
 
-    def fill_block(cfg, kind, p, h, positions):
+    def fill_block(cfg, kind, p, h, positions, pfx=None):
         if kind in ("attn_mlp", "attn_mlp_local", "attn_moe"):
             window = cfg.attn_window if kind == "attn_mlp_local" else 0
             xn = apply_norm(cfg, p["ln1"], h)
             a, (k, v) = att.full_attention(
                 cfg, p["attn"], xn, positions=positions, causal=True,
-                window=window, return_kv=True)
+                window=window, return_kv=True,
+                prefix_kv=(pfx["k"], pfx["v"]) if pfx is not None else None,
+                prefix_len=prefix_len)
             h = h + a
             x = apply_norm(cfg, p["ln2"], h)
             if kind == "attn_moe":
@@ -364,27 +379,40 @@ def prefill(cfg, params, batch, capacity):
             return h + s, st
         raise ValueError(kind)
 
-    def group_fn(h, gp):
+    def group_fn(h, inp):
+        gp, gpfx = inp if prefix is not None else (inp, None)
         caches = {}
         for i, kind in enumerate(group_kinds):
-            h, c = fill_block(cfg, kind, gp[f"b{i}"], h, positions)
+            h, c = fill_block(cfg, kind, gp[f"b{i}"], h, positions,
+                              pfx=gpfx[f"b{i}"] if gpfx is not None else None)
             caches[f"b{i}"] = c
         return h, caches
 
     if cfg.scan_layers:
-        h, stacked = jax.lax.scan(group_fn, h, params["layers"])
+        xs = params["layers"] if prefix is None \
+            else (params["layers"], prefix["layers"])
+        h, stacked = jax.lax.scan(group_fn, h, xs)
     else:
         outs = []
         for i in range(n_groups):
-            h, c = group_fn(h, params["layers"][f"g{i}"])
+            gp = params["layers"][f"g{i}"]
+            inp = gp if prefix is None else \
+                (gp, jax.tree.map(lambda t: t[i], prefix["layers"]))
+            h, c = group_fn(h, inp)
             outs.append(c)
         stacked = _stack_cache(outs)
     cache = {"layers": stacked}
     for i, kind in enumerate(tail_kinds):
-        h, c = fill_block(cfg, kind, params[f"tail{i}"], h, positions)
+        h, c = fill_block(cfg, kind, params[f"tail{i}"], h, positions,
+                          pfx=prefix.get(f"tail{i}")
+                          if prefix is not None else None)
         cache[f"tail{i}"] = c
     h = apply_norm(cfg, params["final_norm"], h)
-    logits = logits_from_hidden(cfg, params, h[:, -1:])
+    if last_index is None:
+        h_last = h[:, -1:]
+    else:
+        h_last = jax.lax.dynamic_slice_in_dim(h, last_index, 1, axis=1)
+    logits = logits_from_hidden(cfg, params, h_last)
     return logits[:, 0], cache
 
 

@@ -67,11 +67,56 @@ class Model:
                                      abstract=abstract)
         return lm.init_cache(self.cfg, batch, capacity, abstract=abstract)
 
-    def prefill(self, params, batch, capacity):
-        """→ (last_logits [B,V], cache)."""
+    def prefill(self, params, batch, capacity, *, prefix=None,
+                prefix_len=None, last_index=None):
+        """→ (last_logits [B,V], cache).
+
+        ``prefix``/``prefix_len``/``last_index`` enable prefix-aware
+        suffix-only prefill for the serving radix cache (see
+        :func:`repro.models.lm.prefill`); only models for which
+        :meth:`prefix_seq_axes` returns a tree support them."""
         if self.cfg.family == "enc_dec":
+            if prefix is not None or last_index is not None:
+                raise ValueError(
+                    "prefix-aware prefill is not supported for enc_dec")
             return encdec.prefill(self.cfg, params, batch, capacity)
-        return lm.prefill(self.cfg, params, batch, capacity)
+        if prefix is not None and self.prefix_seq_axes() is None:
+            # recurrent/hybrid blocks would silently ignore the prefix and
+            # int8 K/V would be consumed without dequantization — refuse
+            # rather than return wrong logits (trace-time check only)
+            raise ValueError(
+                f"{self.cfg.name}: KV is not positionally sliceable "
+                f"(prefix_seq_axes() is None) — prefix-aware prefill "
+                f"unsupported")
+        return lm.prefill(self.cfg, params, batch, capacity, prefix=prefix,
+                          prefix_len=prefix_len, last_index=last_index)
+
+    def prefix_seq_axes(self):
+        """Per-leaf sequence-axis pytree of the serving cache, or ``None``
+        when per-position KV reuse is unsound for this model: recurrent /
+        hybrid state is not positionally sliceable, windowed attention
+        uses ring buffers, enc_dec has cross-attention memory, and int8
+        KV would break token-exactness between cached and cold prefills
+        (the cold path attends unquantized K/V)."""
+        cfg = self.cfg
+        if cfg.family == "enc_dec" or cfg.kv_cache_dtype == "int8" \
+                or cfg.attn_window:
+            return None
+        if any(k not in ("attn_mlp", "attn_moe")
+               for k in lm.block_kinds(cfg)):
+            return None
+        a = self.init_cache(1, 8, abstract=True)
+        b = self.init_cache(1, 16, abstract=True)
+
+        def axis(x, y):
+            diff = [i for i, (p, q) in enumerate(zip(x.shape, y.shape))
+                    if p != q]
+            return diff[0] if len(diff) == 1 else -1
+
+        axes = jax.tree.map(axis, a, b)
+        if any(v < 0 for v in jax.tree.leaves(axes)):
+            return None
+        return axes
 
     def decode_step(self, params, cache, tokens, positions):
         """tokens [B,1], positions [B] → (logits [B,V], new_cache)."""

@@ -2,14 +2,36 @@
 
 Slot-based scheduler in the vLLM/Orca style, adapted to JAX static shapes:
 a fixed decode batch of ``max_slots`` sequences steps together through a
-jitted ``decode_step``; free slots admit queued requests via per-request
-``prefill`` whose KV is written into the slot.  Everything is asyncio —
-PopPy's burst of parallel `@unordered` LLM calls lands here and shares
-decode batches (the batching co-design of DESIGN.md §3).
+jitted ``decode_step``; free slots admit queued requests via ``prefill``
+whose KV is written into the slot.  Everything is asyncio — PopPy's burst
+of parallel `@unordered` LLM calls lands here and shares decode batches
+(the batching co-design of DESIGN.md §3.2).
+
+Prompt ingestion is cheap and non-blocking (DESIGN.md §3.2):
+
+* **Radix prefix cache** (`prefix_cache.py`) — prefilled KV is stored
+  along a token trie; a request reuses its longest cached prefix and only
+  prefills the suffix from the cached boundary.  A burst of N fan-out
+  requests sharing a long context prefills it once
+  (``LocalEngineBackend.generate_batch`` warms it explicitly).
+* **Bucketed prefill** — prompts pad to a small set of length buckets
+  (powers of two up to ``max_len``), so steady-state traffic hits a
+  handful of compiled shapes instead of one compilation per prompt
+  length; ``prefill_compilations`` counts distinct compiled shapes and
+  ``prefill_shape_bound`` is the bucketing-guaranteed ceiling (the CI
+  perf gate watches the ratio).
+* **Chunked prefill** — long prompts prefill in ``prefill_chunk``-token
+  chunks scheduled between decode steps (iteration-level scheduling), so
+  one long admit never freezes the live decode batch.
+
+These all ride on the prefix-aware ``Model.prefill`` and require
+positionally sliceable KV (``Model.prefix_seq_axes``); recurrent/hybrid/
+enc_dec/int8-KV models fall back to the exact-length one-shot prefill.
 
 Straggler mitigation: per-request deadline + hedged retry at the client
-(repro.core.ai.hedged); engine-side admission keeps the batch full so one
-slow request never blocks admission (iteration-level scheduling).
+(`LocalEngineBackend`); a cancelled request (hedge loser, abandoned
+client) is dropped from the queue or has its slot freed at the next
+step, so duplicates never decode to ``max_new_tokens`` in the dark.
 """
 
 from __future__ import annotations
@@ -22,7 +44,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.sampler import sample_tokens
+from repro.serving.prefix_cache import (
+    PrefixCache,
+    tree_concat,
+    tree_pad_to,
+    tree_slice,
+)
+from repro.serving.sampler import sample_tokens, sample_tokens_batched
 
 
 @dataclass
@@ -37,14 +65,59 @@ class Request:
     started_at: float = 0.0
     finished_at: float = 0.0
 
+    @property
+    def abandoned(self) -> bool:
+        """The client is gone (cancelled hedge duplicate, dropped call):
+        nobody will consume the result, so the engine must not spend
+        decode steps on it."""
+        return self.done is not None and self.done.done()
+
+
+@dataclass
+class _PrefillTask:
+    """A prompt being prefilled, possibly across several chunks.  ``req``
+    is None for cache-warm tasks (shared-prefix admission), which compute
+    and insert KV without occupying a decode slot."""
+
+    tokens: tuple
+    req: Request | None = None
+    slot: int = -1
+    done: asyncio.Future | None = None     # warm-task completion
+    started: bool = False
+    matched: int = 0                       # tokens served by the radix cache
+    handle: object = None                  # prefix-cache pin
+    pinned_in: object = None               # the PrefixCache instance pinned
+    acc: object = None                     # KV pytree covering tokens[:covered]
+    covered: int = 0
+    last_logits: object = None
+
+
+def default_buckets(max_len: int, lo: int = 16) -> tuple:
+    """Powers of two from ``lo`` up to (and always including) max_len."""
+    out, b = [], lo
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
 
 class ServingEngine:
     """Continuous batching over a repro.models Model on a (usually 1-device)
     mesh.  Designed so the same scheduler drives the 256-chip production
-    mesh — the jitted steps are the ones the dry-run lowers."""
+    mesh — the jitted steps are the ones the dry-run lowers.
+
+    Knobs (see README §serving): ``prefix_cache_budget`` (bytes of radix
+    KV to retain; 0/None disables), ``prefill_chunk`` (tokens per prefill
+    chunk interleaved with decode; None = whole prompt in one chunk), and
+    ``prefill_buckets`` (pad-to lengths for the jitted prefill; default
+    powers of two up to ``max_len``)."""
 
     def __init__(self, model, params, *, max_slots=8, max_len=256,
-                 eos_token=None, step_sleep=0.0):
+                 eos_token=None, step_sleep=0.0,
+                 prefix_cache_budget=64 * 1024 * 1024,
+                 prefill_chunk=None, prefill_buckets=None,
+                 idle_quiesce_s=1.0):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -52,14 +125,30 @@ class ServingEngine:
         self.max_len = max_len
         self.eos_token = eos_token
         self.step_sleep = step_sleep
+        self.idle_quiesce_s = idle_quiesce_s
         self.queue: asyncio.Queue[Request] = asyncio.Queue()
         self.active: dict[int, Request] = {}
         self.free_slots = list(range(max_slots))
+        self._pending: list[_PrefillTask] = []
+        self._warm_waiting: list[_PrefillTask] = []
+        self._wake: asyncio.Event | None = None
+        self._wake_loop = None
         self._task = None
         self._stop = False
         self.steps = 0
         self.decode_tokens = 0
         self.batch_occupancy: list[int] = []
+        self.prefill_shapes: set = set()
+        # (prefix tokens, padded length) -> padded prefix KV.  A burst of
+        # fan-out requests shares one matched prefix; without this every
+        # request re-pads the same multi-MB pytree.  KV is a deterministic
+        # function of the tokens, so entries are never stale — the cap
+        # only bounds memory.
+        self._pad_memo: dict = {}
+        self._pad_memo_cap = 4
+        self.prefill_chunks = 0
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_reused = 0
 
         self.cache = model.init_cache(max_slots, max_len)
         self.positions = jnp.zeros((max_slots,), jnp.int32)
@@ -68,19 +157,97 @@ class ServingEngine:
         self._rng = jax.random.PRNGKey(0)
 
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
-        self._prefill = jax.jit(
+        self._sample_all = jax.jit(sample_tokens_batched)
+
+        # prefix-aware (paged) prefill: only for models whose cache is
+        # positionally sliceable; others keep the exact-length path
+        self._seq_axes = model.prefix_seq_axes()
+        self._paged = self._seq_axes is not None
+        if self._paged:
+            self._buckets = tuple(sorted(prefill_buckets)) \
+                if prefill_buckets else default_buckets(max_len)
+            self._empty_prefix = tree_slice(
+                model.init_cache(1, 1), self._seq_axes, 0, 0)
+            self.prefix_cache = (
+                PrefixCache(self._seq_axes, prefix_cache_budget)
+                if prefix_cache_budget else None)
+            self._prefill_px = jax.jit(
+                lambda p, toks, pfx, plen, lidx: model.prefill(
+                    p, {"tokens": toks}, capacity=toks.shape[1],
+                    prefix=pfx, prefix_len=plen, last_index=lidx))
+
+            def _splice_fn(cache, new, slot):
+                # donated in-place slot write: without it every admission
+                # copies the whole decode cache (max_slots · max_len KV)
+                def write(ax, cur, seg):
+                    start = [0] * cur.ndim
+                    start[ax - 1] = slot  # batch axis precedes seq axis
+                    return jax.lax.dynamic_update_slice(
+                        cur, seg.astype(cur.dtype), tuple(start))
+                return jax.tree.map(write, self._seq_axes, cache, new)
+
+            self._splice = jax.jit(_splice_fn, donate_argnums=(0,))
+        else:
+            self._buckets = ()
+            self.prefix_cache = None
+        self.prefill_chunk = prefill_chunk if self._paged else None
+        self._prefill_exact = jax.jit(
             lambda p, b: model.prefill(p, b, capacity=max_len))
 
     # -- client API -----------------------------------------------------------
 
     async def generate(self, prompt_tokens, *, max_new_tokens=32,
                        temperature=0.0) -> list:
-        req = Request(list(prompt_tokens), max_new_tokens, temperature,
+        prompt_tokens = list(prompt_tokens)
+        if len(prompt_tokens) >= self.max_len:
+            # reject at submission: admitting it would overflow the slot
+            # cache (and mint unbounded prefill shapes) — fail the one
+            # request, never the scheduler
+            raise ValueError(
+                f"prompt of {len(prompt_tokens)} tokens needs at least "
+                f"one decode position; engine max_len is {self.max_len}")
+        req = Request(prompt_tokens, max_new_tokens, temperature,
                       done=asyncio.get_running_loop().create_future(),
                       submitted_at=time.monotonic())
         await self.queue.put(req)
+        self._wake_event().set()
         self.ensure_running()
         return await req.done
+
+    def _wake_event(self) -> asyncio.Event:
+        # py3.10 asyncio primitives bind to their first loop; the engine
+        # outlives benchmark/test loops, so the event is per-loop
+        loop = asyncio.get_running_loop()
+        if self._wake is None or self._wake_loop is not loop:
+            self._wake = asyncio.Event()
+            self._wake_loop = loop
+        return self._wake
+
+    async def warm_prefix(self, tokens) -> dict | None:
+        """Ensure ``tokens`` (a shared prompt prefix) is in the radix
+        cache, prefilling whatever tail is missing without occupying a
+        decode slot.  Returns ``{"tokens", "computed"}`` (``computed`` = 0
+        when fully cached already) or None when prefix caching is off."""
+        if self.prefix_cache is None:
+            return None
+        tokens = tuple(tokens)[: self.max_len - 1]
+        if len(tokens) < 2:
+            return None
+        fut = asyncio.get_running_loop().create_future()
+        self._warm_waiting.append(_PrefillTask(tokens=tokens, done=fut))
+        self._wake_event().set()
+        self.ensure_running()
+        computed = await fut
+        return {"tokens": len(tokens), "computed": computed}
+
+    def reset_prefix_cache(self):
+        """Drop all cached prefixes and memoized assemblies (keeps the
+        budget and the compiled prefill shapes) — benchmarking /
+        tenant-isolation hook."""
+        if self.prefix_cache is not None:
+            self.prefix_cache = PrefixCache(self._seq_axes,
+                                            self.prefix_cache.budget)
+        self._pad_memo.clear()
 
     def ensure_running(self):
         if self._task is None or self._task.done():
@@ -93,33 +260,185 @@ class ServingEngine:
         if task.cancelled():
             return
         exc = task.exception()
-        if exc is not None:
-            # surface scheduler failures to every waiting client
-            for req in list(self.active.values()):
-                if req.done and not req.done.done():
-                    req.done.set_exception(exc)
-            while not self.queue.empty():
-                req = self.queue.get_nowait()
-                if req.done and not req.done.done():
-                    req.done.set_exception(exc)
+        if exc is None:
+            # quiesce raced a submission: restart so nothing strands
+            if not self._stop and (not self.queue.empty()
+                                   or self._warm_waiting or self._pending):
+                self.ensure_running()
+            return
+        # surface scheduler failures to every waiting client; release
+        # prefix-cache pins and reclaim slots so a crash can't leak them
+        for t in self._pending + self._warm_waiting:
+            fut = t.done if t.req is None else t.req.done
+            if fut is not None and not fut.done():
+                fut.set_exception(exc)
+            self._release(t)
+            if t.req is not None and t.slot >= 0:
+                self.free_slots.append(t.slot)
+        self._pending.clear()
+        self._warm_waiting.clear()
+        for req in list(self.active.values()):
+            if req.done and not req.done.done():
+                req.done.set_exception(exc)
+        while not self.queue.empty():
+            req = self.queue.get_nowait()
+            if req.done and not req.done.done():
+                req.done.set_exception(exc)
 
     async def stop(self):
         self._stop = True
+        self._wake_event().set()
         if self._task is not None:
             await self._task
 
-    # -- scheduler -------------------------------------------------------------
+    # -- stats ----------------------------------------------------------------
 
-    def _admit(self, req: Request):
-        slot = self.free_slots.pop()
-        req.slot = slot
-        req.started_at = time.monotonic()
-        prompt = jnp.asarray([req.prompt_tokens], jnp.int32)
-        logits, pcache = self._prefill(self.params, {"tokens": prompt})
-        # splice the prefilled cache into the slot
-        self.cache = jax.tree.map(
-            lambda full, new: _write_slot_cache(full, new, slot),
-            self.cache, pcache)
+    @property
+    def prefill_compilations(self) -> int:
+        """Distinct prefill shapes traced (== XLA compilations)."""
+        return len(self.prefill_shapes)
+
+    @property
+    def prefill_shape_bound(self) -> int | None:
+        """Bucketing-guaranteed ceiling on prefill compilations: every
+        call pads to a (prefix-bucket, suffix-bucket) pair, so at most
+        (|buckets|+1) · |buckets| shapes exist no matter how many distinct
+        prompt lengths traffic brings.  None on the exact-length path."""
+        if not self._paged:
+            return None
+        return (len(self._buckets) + 1) * len(self._buckets)
+
+    def stats(self) -> dict:
+        return {
+            "steps": self.steps,
+            "decode_tokens": self.decode_tokens,
+            "max_occupancy": max(self.batch_occupancy, default=0),
+            "prefill_compilations": self.prefill_compilations,
+            "prefill_shape_bound": self.prefill_shape_bound,
+            "prefill_buckets": list(self._buckets),
+            "prefill_chunk": self.prefill_chunk,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_tokens_computed": self.prefill_tokens_computed,
+            "prefill_tokens_reused": self.prefill_tokens_reused,
+            "prefix_cache": self.prefix_cache.stats()
+            if self.prefix_cache is not None else None,
+        }
+
+    # -- prefill --------------------------------------------------------------
+
+    def _bucket(self, n: int, *, allow_zero=False) -> int:
+        if allow_zero and n == 0:
+            return 0
+        for b in self._buckets:
+            if n <= b:
+                return b
+        return n  # beyond max_len: caller's problem, keep it exact
+
+    def _run_prefill(self, seg, prefix_kv, prefix_len, prefix_key=()):
+        """Prefill `seg` (a prompt suffix) given `prefix_len` tokens of
+        already-computed KV.  Pads both sides to buckets so compilations
+        stay bounded; returns (boundary logits [1,V], suffix KV of
+        exactly len(seg) positions)."""
+        L = len(seg)
+        Sb = self._bucket(L)
+        toks = np.zeros((1, Sb), np.int32)
+        toks[0, :L] = seg
+        if prefix_kv is None:
+            prefix_kv = self._empty_prefix
+        Tb = self._bucket(prefix_len, allow_zero=True)
+        memo_key = (prefix_key, Tb) if prefix_key else None
+        pfx = self._pad_memo.get(memo_key) if memo_key else None
+        if pfx is None:
+            pfx = tree_pad_to(prefix_kv, self._seq_axes, Tb)
+            if memo_key:
+                if len(self._pad_memo) >= self._pad_memo_cap:
+                    self._pad_memo.pop(next(iter(self._pad_memo)))
+                self._pad_memo[memo_key] = pfx
+        self.prefill_shapes.add((Tb, Sb))
+        logits, cache = self._prefill_px(
+            self.params, jnp.asarray(toks), pfx,
+            jnp.asarray(prefix_len, jnp.int32),
+            jnp.asarray(L - 1, jnp.int32))
+        self.prefill_chunks += 1
+        self.prefill_tokens_computed += L
+        if Sb != L:
+            cache = tree_slice(cache, self._seq_axes, 0, L)
+        return logits, cache
+
+    def _prefill_start(self, task: _PrefillTask):
+        task.started = True
+        if self.prefix_cache is None:
+            return
+        # a request must prefill ≥1 suffix token for its first-step logits
+        limit = len(task.tokens) - (0 if task.req is None else 1)
+        if limit <= 0:
+            return
+        matched, kv, handle = self.prefix_cache.match_and_pin(
+            task.tokens[:limit])
+        task.matched = task.covered = matched
+        task.acc = kv
+        task.handle = handle
+        task.pinned_in = self.prefix_cache
+        self.prefill_tokens_reused += matched
+
+    def _release(self, task: _PrefillTask):
+        # release into the instance that was pinned — reset_prefix_cache
+        # may have swapped self.prefix_cache while this task was in flight
+        if task.handle is not None:
+            task.pinned_in.release(task.handle)
+            task.handle = None
+
+    def _prefill_step(self):
+        """Run one prefill chunk for the oldest pending prompt (called
+        between decode steps: iteration-level scheduling)."""
+        task = self._pending[0]
+        if task.req is not None and task.req.abandoned:
+            self._pending.pop(0)
+            self._release(task)
+            self.free_slots.append(task.slot)
+            return
+        if not task.started:
+            self._prefill_start(task)
+        n = len(task.tokens)
+        if task.covered >= n:  # warm task fully served by the cache
+            self._pending.pop(0)
+            self._finalize(task)
+            return
+        chunk = n - task.covered
+        if self.prefill_chunk:
+            chunk = min(chunk, self.prefill_chunk)
+        seg = task.tokens[task.covered:task.covered + chunk]
+        logits, kvseg = self._run_prefill(
+            seg, task.acc, task.covered,
+            prefix_key=task.tokens[:task.covered])
+        task.acc = kvseg if task.acc is None \
+            else tree_concat([task.acc, kvseg], self._seq_axes)
+        task.covered += chunk
+        task.last_logits = logits
+        if task.covered >= n:
+            self._pending.pop(0)
+            self._finalize(task)
+
+    def _finalize(self, task: _PrefillTask):
+        if self.prefix_cache is not None and task.covered > task.matched:
+            self.prefix_cache.insert(task.tokens[:task.covered], task.acc)
+        self._release(task)
+        if task.req is None:  # warm task
+            if task.done is not None and not task.done.done():
+                task.done.set_result(task.covered - task.matched)
+            return
+        req = task.req
+        if req.abandoned:  # cancelled while its chunks ran
+            self.free_slots.append(task.slot)
+            return
+        slot = task.slot
+        seg = tree_pad_to(task.acc, self._seq_axes,
+                          self._bucket(task.covered))
+        self.cache = self._splice(self.cache, seg,
+                                  jnp.asarray(slot, jnp.int32))
+        self._begin_decode(req, slot, task.last_logits)
+
+    def _begin_decode(self, req: Request, slot: int, logits):
         tok = self._sample(logits, req)
         req.out_tokens.append(int(tok[0]))
         self.cur_tokens = self.cur_tokens.at[slot, 0].set(tok[0])
@@ -127,11 +446,43 @@ class ServingEngine:
         self.live[slot] = True
         self.active[slot] = req
 
+    def _admit_exact(self, req: Request, slot: int):
+        """Exact-length one-shot prefill (recurrent/hybrid/enc_dec/int8-KV
+        models, whose state is not positionally sliceable)."""
+        prompt = jnp.asarray([req.prompt_tokens], jnp.int32)
+        self.prefill_shapes.add((0, len(req.prompt_tokens)))
+        self.prefill_tokens_computed += len(req.prompt_tokens)
+        self.prefill_chunks += 1
+        logits, pcache = self._prefill_exact(self.params, {"tokens": prompt})
+        self.cache = jax.tree.map(
+            lambda cur, new: _write_slot_cache(cur, new, slot),
+            self.cache, pcache)
+        self._begin_decode(req, slot, logits)
+
     def _sample(self, logits, req):
         if req.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self._rng, k = jax.random.split(self._rng)
         return sample_tokens(k, logits, temperature=req.temperature)
+
+    # -- scheduler -------------------------------------------------------------
+
+    def _drain_queue(self):
+        if self._warm_waiting:
+            self._pending.extend(self._warm_waiting)
+            self._warm_waiting.clear()
+        while self.free_slots and not self.queue.empty():
+            req = self.queue.get_nowait()
+            if req.abandoned:  # cancelled while queued
+                continue
+            req.started_at = time.monotonic()
+            slot = self.free_slots.pop()
+            req.slot = slot
+            if self._paged:
+                self._pending.append(_PrefillTask(
+                    tokens=tuple(req.prompt_tokens), req=req, slot=slot))
+            else:
+                self._admit_exact(req, slot)
 
     def _finish(self, slot):
         req = self.active.pop(slot)
@@ -145,54 +496,69 @@ class ServingEngine:
         for slot in list(self.active):
             req = self.active[slot]
             last = req.out_tokens[-1] if req.out_tokens else None
-            if (len(req.out_tokens) >= req.max_new_tokens
+            if (req.abandoned  # hedge loser / dropped client: free the slot
+                    or len(req.out_tokens) >= req.max_new_tokens
                     or (self.eos_token is not None
                         and last == self.eos_token)
                     or int(self.positions[slot]) >= self.max_len - 1):
                 self._finish(slot)
 
-    async def _loop(self):
-        idle_rounds = 0
-        while not self._stop:
-            # admit as many queued requests as there are free slots
-            while self.free_slots and not self.queue.empty():
-                self._admit(self.queue.get_nowait())
-            if not self.active:
-                idle_rounds += 1
-                if idle_rounds > 200:
-                    return  # quiesce; restarted on next request
-                await asyncio.sleep(0.005)
-                continue
-            idle_rounds = 0
+    def _decode_once(self):
+        logits, self.cache = self._decode(
+            self.params, self.cache, self.cur_tokens, self.positions)
+        self.steps += 1
+        self.batch_occupancy.append(len(self.active))
+        stochastic = any(r.temperature > 0.0 for r in self.active.values())
+        if stochastic:
+            # one RNG split + one device call + one host transfer for the
+            # whole batch, however many slots sample
+            self._rng, k = jax.random.split(self._rng)
+            temps = np.zeros((self.max_slots,), np.float32)
+            for slot, req in self.active.items():
+                temps[slot] = req.temperature
+            toks = self._sample_all(k, logits, jnp.asarray(temps))
+        else:
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = np.asarray(toks)
+        new_cur = np.array(self.cur_tokens)   # writable copies
+        new_pos = np.array(self.positions)
+        for slot, req in self.active.items():
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            self.decode_tokens += 1
+            new_cur[slot, 0] = tok
+            new_pos[slot] += 1
+        self.cur_tokens = jnp.asarray(new_cur)
+        self.positions = jnp.asarray(new_pos)
 
-            logits, self.cache = self._decode(
-                self.params, self.cache, self.cur_tokens, self.positions)
-            self.steps += 1
-            self.batch_occupancy.append(len(self.active))
-            next_all = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            sampled = {}
-            for slot, req in self.active.items():
-                if req.temperature > 0.0:
-                    self._rng, k = jax.random.split(self._rng)
-                    sampled[slot] = int(sample_tokens(
-                        k, logits[slot:slot + 1],
-                        temperature=req.temperature)[0])
-            nxt = np.asarray(next_all)
-            new_cur = np.array(self.cur_tokens)   # writable copies
-            new_pos = np.array(self.positions)
-            for slot, req in self.active.items():
-                tok = sampled.get(slot, int(nxt[slot]))
-                req.out_tokens.append(tok)
-                self.decode_tokens += 1
-                new_cur[slot, 0] = tok
-                new_pos[slot] += 1
-            self.cur_tokens = jnp.asarray(new_cur)
-            self.positions = jnp.asarray(new_pos)
-            self._retire_finished()
-            if self.step_sleep:
-                await asyncio.sleep(self.step_sleep)
-            else:
-                await asyncio.sleep(0)  # yield to admit new requests
+    async def _loop(self):
+        while not self._stop:
+            self._drain_queue()
+            progressed = False
+            if self._pending:
+                # one prefill chunk between decode steps: a long admit
+                # yields to the live batch instead of freezing it
+                self._prefill_step()
+                progressed = True
+            if self.active:
+                self._decode_once()
+                self._retire_finished()
+                progressed = True
+            if progressed:
+                await asyncio.sleep(self.step_sleep or 0)
+                continue
+            # idle: sleep until a submission wakes us (no busy-polling);
+            # quiesce after idle_quiesce_s — restarted on next request
+            wake = self._wake_event()
+            wake.clear()
+            if not self.queue.empty() or self._warm_waiting:
+                continue
+            try:
+                await asyncio.wait_for(wake.wait(), self.idle_quiesce_s)
+            except asyncio.TimeoutError:
+                if self.queue.empty() and not self._warm_waiting \
+                        and not self._pending:
+                    return
 
 
 def _write_slot_cache(full, new, slot):

@@ -1,0 +1,306 @@
+"""Radix (prefix-trie) KV cache for the serving engine.
+
+PopPy's signature workload is a burst of parallel ``@unordered`` llm()
+calls sharing a long system/context prefix.  This module stores prefilled
+KV along a token trie so the shared prefix is computed **once**: a request
+matches its longest cached prefix and only prefills the suffix from the
+cached boundary (SGLang-style RadixAttention, adapted to this repo's
+pytree caches).
+
+Layout.  A trie node owns the per-position KV *segment* for the tokens on
+its edge — a pytree with the same structure as the model cache, sliced
+along each leaf's sequence axis (``Model.prefix_seq_axes``).  Assembling a
+prefix is a concat of the segments on the root path; splitting an edge is
+a pair of slices, so refinement never recomputes anything.
+
+Concurrency & safety (single event loop, no locks needed):
+
+* **Pinning** — ``match_and_pin`` increments a ref-count on every node it
+  returns; pinned nodes are never evicted.  Release walks the trie *by
+  tokens* (not by node identity), so a pin stays exact even if a
+  concurrent insert split one of the pinned nodes: a split copies the
+  ref-count to both halves and both halves lie on the released path.
+* **LRU eviction under a byte budget** — leaves with no refs are evicted
+  oldest-first until the budget holds; an insert that cannot fit even
+  after eviction is skipped (the engine just recomputes that prefix).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# pytree segment operations (parameterized by a per-leaf sequence-axis tree)
+
+
+def tree_slice(tree, axes, start, stop):
+    """Slice every leaf along its sequence axis: positions [start, stop)."""
+    def f(ax, leaf):
+        idx = [slice(None)] * leaf.ndim
+        idx[ax] = slice(start, stop)
+        return leaf[tuple(idx)]
+    return jax.tree.map(f, axes, tree)
+
+
+def tree_concat(trees, axes):
+    """Concatenate segments along each leaf's sequence axis."""
+    trees = [t for t in trees if t is not None]
+    if len(trees) == 1:
+        return trees[0]
+    return jax.tree.map(
+        lambda ax, *leaves: jnp.concatenate(leaves, axis=ax), axes, *trees)
+
+
+def tree_pad_to(tree, axes, target):
+    """Zero-pad every leaf along its sequence axis up to ``target``
+    positions (padding is masked out by ``prefix_len`` in attention)."""
+    def f(ax, leaf):
+        n = leaf.shape[ax]
+        if n == target:
+            return leaf
+        pads = [(0, 0)] * leaf.ndim
+        pads[ax] = (0, target - n)
+        return jnp.pad(leaf, pads)
+    return jax.tree.map(f, axes, tree)
+
+
+def tree_nbytes(tree) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# radix trie
+
+
+class _Node:
+    __slots__ = ("tokens", "kv", "nbytes", "children", "parent", "refs",
+                 "last_used")
+
+    def __init__(self, tokens, kv, nbytes, parent):
+        self.tokens = tokens          # edge label from parent
+        self.kv = kv                  # segment covering exactly these tokens
+        self.nbytes = nbytes
+        self.children = {}            # first token -> _Node
+        self.parent = parent
+        self.refs = 0                 # pinned readers
+        self.last_used = 0
+
+
+class PrefixCache:
+    """Token-trie keyed store of prefilled KV segments with ref-count
+    pinning and LRU eviction under ``budget_bytes``."""
+
+    def __init__(self, seq_axes, budget_bytes: int):
+        assert budget_bytes > 0, "use prefix_cache=None to disable"
+        self.axes = seq_axes
+        self.budget = int(budget_bytes)
+        self.root = _Node((), None, 0, None)
+        # assembled-prefix memo: a fan-out burst matches the same path N
+        # times; KV is a deterministic function of the tokens, so entries
+        # never go stale — the cap only bounds memory
+        self._asm_memo: dict = {}
+        self._asm_memo_cap = 4
+        self.bytes = 0
+        self.peak_bytes = 0
+        self._clock = 0
+        # counters
+        self.lookups = 0
+        self.hits = 0
+        self.tokens_queried = 0
+        self.tokens_matched = 0
+        self.inserts = 0
+        self.insert_tokens = 0
+        self.skipped_inserts = 0
+        self.splits = 0
+        self.evictions = 0
+        self.evicted_bytes = 0
+
+    # -- internals -----------------------------------------------------------
+
+    def _touch(self, node: _Node):
+        self._clock += 1
+        node.last_used = self._clock
+
+    def _split(self, node: _Node, m: int):
+        """Refine ``node`` at edge offset ``m``: node keeps tokens[:m], a
+        new child takes tokens[m:] (and node's children).  Ref-counts are
+        copied to both halves — both still lie on every pinned path."""
+        assert 0 < m < len(node.tokens)
+        lo_kv = tree_slice(node.kv, self.axes, m, len(node.tokens))
+        lo = _Node(node.tokens[m:], lo_kv, tree_nbytes(lo_kv), node)
+        lo.children = node.children
+        for c in lo.children.values():
+            c.parent = lo
+        lo.refs = node.refs
+        lo.last_used = node.last_used
+        hi_kv = tree_slice(node.kv, self.axes, 0, m)
+        old_bytes = node.nbytes
+        node.kv = hi_kv
+        node.nbytes = tree_nbytes(hi_kv)
+        node.tokens = node.tokens[:m]
+        node.children = {lo.tokens[0]: lo}
+        self.bytes += node.nbytes + lo.nbytes - old_bytes
+        self.splits += 1
+
+    def _walk(self, tokens, *, split=True):
+        """Walk the trie over ``tokens``, splitting partially-matched edges
+        so the matched path is whole nodes.  Returns (path, matched_len)."""
+        path, node, pos = [], self.root, 0
+        while pos < len(tokens):
+            child = node.children.get(tokens[pos])
+            if child is None:
+                break
+            et = child.tokens
+            m, n = 1, len(et)
+            while m < n and pos + m < len(tokens) \
+                    and et[m] == tokens[pos + m]:
+                m += 1
+            if m < n:
+                if not split:
+                    break
+                self._split(child, m)
+            path.append(child)
+            pos += m
+            node = child
+        return path, pos
+
+    # -- client API ----------------------------------------------------------
+
+    def match_and_pin(self, tokens):
+        """Longest cached prefix of ``tokens``.  Returns ``(matched_len,
+        kv, handle)`` — ``kv`` is the assembled segment pytree covering
+        ``tokens[:matched_len]`` (None when nothing matched), and
+        ``handle`` must be passed to :meth:`release` once the caller has
+        consumed (copied out) the KV."""
+        tokens = tuple(tokens)
+        self.lookups += 1
+        self.tokens_queried += len(tokens)
+        path, matched = self._walk(tokens)
+        for nd in path:
+            nd.refs += 1
+            self._touch(nd)
+        if matched:
+            self.hits += 1
+            self.tokens_matched += matched
+        kv = None
+        if path:
+            key = tokens[:matched]
+            kv = self._asm_memo.get(key)
+            if kv is None:
+                kv = tree_concat([nd.kv for nd in path], self.axes)
+                if len(self._asm_memo) >= self._asm_memo_cap:
+                    self._asm_memo.pop(next(iter(self._asm_memo)))
+                self._asm_memo[key] = kv
+        return matched, kv, (tokens, matched)
+
+    def release(self, handle):
+        """Unpin a ``match_and_pin`` result.  Walks by tokens so the pin
+        stays balanced across any splits that happened while pinned."""
+        tokens, length = handle
+        node, pos = self.root, 0
+        while pos < length:
+            child = node.children.get(tokens[pos])
+            assert child is not None, "pinned path evicted?!"
+            child.refs -= 1
+            pos += len(child.tokens)
+            node = child
+        assert pos == length, "pinned path boundary moved outside a split"
+
+    def insert(self, tokens, kv) -> bool:
+        """Store the KV for ``tokens`` (``kv`` covers the whole sequence;
+        only the uncached tail is copied into the trie).  Returns False
+        when the tail did not fit under the budget even after eviction."""
+        tokens = tuple(tokens)
+        path, pos = self._walk(tokens)
+        for nd in path:
+            self._touch(nd)
+        if pos >= len(tokens):
+            return True  # fully present
+        seg = tree_slice(kv, self.axes, pos, len(tokens))
+        nbytes = tree_nbytes(seg)
+        self._evict(need=nbytes)
+        if self.bytes + nbytes > self.budget:
+            self.skipped_inserts += 1
+            return False
+        parent = path[-1] if path else self.root
+        node = _Node(tokens[pos:], seg, nbytes, parent)
+        parent.children[tokens[pos]] = node
+        self._touch(node)
+        self.bytes += nbytes
+        self.peak_bytes = max(self.peak_bytes, self.bytes)
+        self.inserts += 1
+        self.insert_tokens += len(tokens) - pos
+        return True
+
+    def _evictable(self):
+        """Unpinned leaves, the only safely removable nodes (an internal
+        node's segment is part of every descendant's assembled prefix)."""
+        out, stack = [], [self.root]
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            if nd is not self.root and not nd.children and nd.refs == 0:
+                out.append(nd)
+        return out
+
+    def _evict(self, need: int = 0):
+        evicted = False
+        while self.bytes + need > self.budget:
+            leaves = self._evictable()
+            if not leaves:
+                break  # everything left is pinned (or interior): stop
+            victim = min(leaves, key=lambda nd: nd.last_used)
+            victim.parent.children.pop(victim.tokens[0])
+            self.bytes -= victim.nbytes
+            self.evictions += 1
+            self.evicted_bytes += victim.nbytes
+            evicted = True
+        if evicted:
+            # the memo holds assembled copies outside the byte accounting;
+            # drop it whenever the budget forces eviction so memory
+            # pressure isn't prolonged by stale assemblies
+            self._asm_memo.clear()
+
+    # -- introspection -------------------------------------------------------
+
+    def node_count(self) -> int:
+        n, stack = 0, list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            n += 1
+            stack.extend(nd.children.values())
+        return n
+
+    def cached_tokens(self) -> int:
+        n, stack = 0, list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            n += len(nd.tokens)
+            stack.extend(nd.children.values())
+        return n
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "bytes": self.bytes,
+            "peak_bytes": self.peak_bytes,
+            "budget_bytes": self.budget,
+            "nodes": self.node_count(),
+            "cached_tokens": self.cached_tokens(),
+            "lookups": self.lookups,
+            "hits": self.hits,
+            "hit_rate": self.hit_rate,
+            "tokens_queried": self.tokens_queried,
+            "tokens_matched": self.tokens_matched,
+            "inserts": self.inserts,
+            "insert_tokens": self.insert_tokens,
+            "skipped_inserts": self.skipped_inserts,
+            "splits": self.splits,
+            "evictions": self.evictions,
+            "evicted_bytes": self.evicted_bytes,
+        }

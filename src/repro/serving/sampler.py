@@ -23,3 +23,15 @@ def sample_tokens(rng, logits, *, temperature=0.0, top_k=0, top_p=0.0):
                                      axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_tokens_batched(rng, logits, temperatures):
+    """Mixed greedy/stochastic sampling for a whole decode batch in one
+    device call: logits [B, V], temperatures [B] (0 = greedy).  One key
+    draws all stochastic rows (``categorical`` uses independent Gumbel
+    noise per row), so the serving engine makes a single RNG split and a
+    single host transfer per step regardless of how many slots sample."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temperatures, 1e-6)[:, None]
+    drawn = jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperatures > 0.0, drawn, greedy)

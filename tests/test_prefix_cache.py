@@ -1,0 +1,192 @@
+"""Radix prefix-cache unit tests: trie insert/match/split mechanics,
+ref-count pinning vs. LRU eviction under a byte budget, and the invariant
+that eviction never drops a pinned block."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.prefix_cache import (
+    PrefixCache,
+    tree_concat,
+    tree_nbytes,
+    tree_pad_to,
+    tree_slice,
+)
+
+# a toy "cache" pytree: one leaf [1, S, 2] f32, sequence axis 1 → each
+# token costs 8 bytes
+AXES = {"k": 1}
+
+
+def kv_for(tokens):
+    """Deterministic per-position KV so assembled prefixes are checkable:
+    position value == token id."""
+    arr = np.asarray(tokens, np.float32)[None, :, None].repeat(2, axis=2)
+    return {"k": jnp.asarray(arr)}
+
+
+def kv_tokens(kv):
+    return [int(x) for x in np.asarray(kv["k"])[0, :, 0]]
+
+
+def make(budget=1 << 20):
+    return PrefixCache(AXES, budget)
+
+
+# -- pytree segment ops -------------------------------------------------------
+
+
+def test_tree_ops_roundtrip():
+    kv = kv_for([1, 2, 3, 4, 5])
+    a = tree_slice(kv, AXES, 0, 2)
+    b = tree_slice(kv, AXES, 2, 5)
+    assert kv_tokens(a) == [1, 2] and kv_tokens(b) == [3, 4, 5]
+    back = tree_concat([a, b], AXES)
+    assert kv_tokens(back) == [1, 2, 3, 4, 5]
+    padded = tree_pad_to(kv, AXES, 8)
+    assert padded["k"].shape == (1, 8, 2)
+    assert kv_tokens(padded)[:5] == [1, 2, 3, 4, 5]
+    assert tree_nbytes(kv) == 5 * 8
+
+
+# -- trie insert / match / split ---------------------------------------------
+
+
+def test_insert_then_match_exact_and_partial():
+    pc = make()
+    toks = (10, 11, 12, 13)
+    assert pc.insert(toks, kv_for(toks))
+    m, kv, h = pc.match_and_pin(toks)
+    assert m == 4 and kv_tokens(kv) == [10, 11, 12, 13]
+    pc.release(h)
+    # a shorter query splits the edge and matches the upper half
+    m, kv, h = pc.match_and_pin((10, 11))
+    assert m == 2 and kv_tokens(kv) == [10, 11]
+    assert pc.splits == 1 and pc.node_count() == 2
+    pc.release(h)
+    # a diverging query matches only the shared part
+    m, kv, h = pc.match_and_pin((10, 11, 99, 100))
+    assert m == 2 and kv_tokens(kv) == [10, 11]
+    pc.release(h)
+    m, kv, h = pc.match_and_pin((77,))
+    assert m == 0 and kv is None
+    pc.release(h)
+
+
+def test_insert_extends_only_the_tail():
+    pc = make()
+    pc.insert((1, 2, 3), kv_for((1, 2, 3)))
+    before = pc.bytes
+    toks = (1, 2, 3, 4, 5)
+    pc.insert(toks, kv_for(toks))
+    assert pc.bytes == before + 2 * 8  # only [4, 5] stored
+    assert pc.insert_tokens == 5
+    m, kv, h = pc.match_and_pin(toks)
+    assert m == 5 and kv_tokens(kv) == [1, 2, 3, 4, 5]
+    pc.release(h)
+
+
+def test_insert_split_on_divergence():
+    pc = make()
+    pc.insert((1, 2, 3, 4), kv_for((1, 2, 3, 4)))
+    pc.insert((1, 2, 9, 9), kv_for((1, 2, 9, 9)))
+    # shared (1,2) node + two divergent tails
+    assert pc.splits == 1 and pc.node_count() == 3
+    for toks, want in (((1, 2, 3, 4), [1, 2, 3, 4]),
+                       ((1, 2, 9, 9), [1, 2, 9, 9])):
+        m, kv, h = pc.match_and_pin(toks)
+        assert m == 4 and kv_tokens(kv) == want
+        pc.release(h)
+
+
+def test_cached_tokens_and_hit_rate():
+    pc = make()
+    pc.insert((1, 2, 3), kv_for((1, 2, 3)))
+    pc.match_and_pin((1, 2, 3))
+    pc.match_and_pin((8, 8))
+    assert pc.cached_tokens() == 3
+    assert pc.hit_rate == pytest.approx(0.5)
+
+
+# -- budget / LRU eviction ----------------------------------------------------
+
+
+def test_lru_eviction_under_budget():
+    pc = make(budget=6 * 8)  # room for 6 tokens
+    pc.insert((1, 2, 3), kv_for((1, 2, 3)))
+    pc.insert((4, 5, 6), kv_for((4, 5, 6)))
+    assert pc.bytes == 6 * 8
+    # touch (1,2,3) so (4,5,6) is the LRU victim
+    _, _, h = pc.match_and_pin((1, 2, 3))
+    pc.release(h)
+    pc.insert((7, 8), kv_for((7, 8)))
+    assert pc.evictions == 1
+    m, _, h = pc.match_and_pin((4, 5, 6))
+    assert m == 0, "LRU entry should have been evicted"
+    pc.release(h)
+    for toks in ((1, 2, 3), (7, 8)):
+        m, _, h = pc.match_and_pin(toks)
+        assert m == len(toks)
+        pc.release(h)
+
+
+def test_oversized_insert_is_skipped():
+    pc = make(budget=2 * 8)
+    assert not pc.insert((1, 2, 3), kv_for((1, 2, 3)))
+    assert pc.skipped_inserts == 1 and pc.bytes == 0
+
+
+def test_eviction_never_drops_pinned_blocks():
+    pc = make(budget=4 * 8)
+    pc.insert((1, 2, 3, 4), kv_for((1, 2, 3, 4)))
+    m, kv, handle = pc.match_and_pin((1, 2, 3, 4))
+    assert m == 4
+    # over budget with everything pinned: insert must be refused, the
+    # pinned block must survive
+    assert not pc.insert((9, 9, 9), kv_for((9, 9, 9)))
+    assert pc.evictions == 0
+    m2, kv2, h2 = pc.match_and_pin((1, 2, 3, 4))
+    assert m2 == 4 and kv_tokens(kv2) == [1, 2, 3, 4]
+    pc.release(h2)
+    pc.release(handle)
+    # unpinned now: the LRU leaf may be evicted to make room
+    assert pc.insert((9, 9, 9), kv_for((9, 9, 9)))
+    assert pc.evictions == 1
+    m, _, h = pc.match_and_pin((9, 9, 9))
+    assert m == 3
+    pc.release(h)
+
+
+def test_interior_nodes_survive_while_children_live():
+    pc = make(budget=6 * 8)
+    pc.insert((1, 2, 3, 4), kv_for((1, 2, 3, 4)))
+    pc.insert((1, 2, 9, 9), kv_for((1, 2, 9, 9)))  # splits → (1,2) interior
+    # 6 tokens cached, at budget; next insert must evict a *leaf* tail,
+    # never the shared (1,2) interior
+    pc.insert((5, 5), kv_for((5, 5)))
+    assert pc.evictions >= 1
+    m, kv, h = pc.match_and_pin((1, 2))
+    assert m == 2 and kv_tokens(kv) == [1, 2]
+    pc.release(h)
+
+
+def test_release_stays_balanced_across_concurrent_split():
+    """A pinned node split by a later insert: refs copy to both halves
+    and release (which walks by tokens) decrements both — the path ends
+    fully unpinned and evictable."""
+    pc = make(budget=1 << 20)
+    pc.insert((1, 2, 3, 4), kv_for((1, 2, 3, 4)))
+    _, _, handle = pc.match_and_pin((1, 2, 3, 4))
+    pc.insert((1, 2, 7), kv_for((1, 2, 7)))  # splits the pinned node
+    assert pc.splits == 1
+    pc.release(handle)
+    node = pc.root.children[1]
+    assert node.refs == 0
+    assert all(c.refs == 0 for c in node.children.values())
+    # everything evictable again: shrink the budget via a big insert
+    pc.budget = 5 * 8
+    pc.insert((6, 6, 6, 6, 6), kv_for((6, 6, 6, 6, 6)))
+    m, _, h = pc.match_and_pin((6, 6, 6, 6, 6))
+    assert m == 5
+    pc.release(h)

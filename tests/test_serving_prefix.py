@@ -1,0 +1,343 @@
+"""Serving-engine tests for prefix-aware KV reuse, bucketed/chunked
+prefill, cancellation propagation, and the event-driven scheduler."""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving.backend import LocalEngineBackend, common_prefix_len
+from repro.serving.engine import ServingEngine, default_buckets
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("stablelm-3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    return cfg, model, params
+
+
+def greedy_reference(model, params, prompt, n_new):
+    toks = list(prompt)
+    for _ in range(n_new):
+        logits, _ = model.forward(
+            params, {"tokens": jnp.asarray([toks], jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]
+
+
+def test_default_buckets():
+    assert default_buckets(256) == (16, 32, 64, 128, 256)
+    assert default_buckets(96) == (16, 32, 64, 96)
+
+
+def test_common_prefix_len():
+    assert common_prefix_len([[1, 2, 3], [1, 2, 9], [1, 2]]) == 2
+    assert common_prefix_len([[1], [2]]) == 0
+    assert common_prefix_len([]) == 0
+
+
+def test_shared_prefix_burst_prefills_prefix_once(served):
+    """A 2-request shared-prefix burst: the radix cache computes the
+    shared prefix exactly once, each request prefills only its suffix,
+    and the output is token-identical to the cold (no-cache) path."""
+    cfg, model, params = served
+    prefix = "context: " * 5
+    prompts = [prefix + "alpha", prefix + "beta"]
+
+    def run(budget):
+        engine = ServingEngine(model, params, max_slots=4, max_len=96,
+                               prefix_cache_budget=budget)
+        backend = LocalEngineBackend(engine)
+
+        async def go():
+            outs = await backend.generate_batch(
+                prompts, max_tokens=6, temperature=0.0, stop=None)
+            await engine.stop()
+            return outs
+        return asyncio.run(go()), engine, backend
+
+    cold, eng_cold, _ = run(0)
+    warm, eng_warm, be = run(8 << 20)
+    assert warm == cold, "prefix-cache path diverges from cold path"
+    toks = [be.tok.encode(p) for p in prompts]
+    shared = common_prefix_len(toks)
+    assert shared > be.min_shared_prefix
+    # cold prefills both full prompts; warm prefills the shared prefix
+    # once plus each request's suffix
+    assert eng_cold.prefill_tokens_computed == sum(map(len, toks))
+    assert eng_warm.prefill_tokens_computed == \
+        shared + sum(len(t) - shared for t in toks)
+    assert eng_warm.prefill_tokens_reused == 2 * shared
+    px = eng_warm.prefix_cache.stats()
+    assert px["hits"] == 2 and px["tokens_matched"] == 2 * shared
+
+
+def test_prefix_batch_stats_flow_to_dispatcher(served):
+    cfg, model, params = served
+    from repro.core.ai import use_dispatcher
+    from repro.dispatch import Dispatcher
+
+    engine = ServingEngine(model, params, max_slots=4, max_len=96)
+    backend = LocalEngineBackend(engine)
+    d = Dispatcher()
+    prompts = ["shared prefix text " + s for s in ("one", "two", "three")]
+
+    async def go():
+        with use_dispatcher(d):
+            outs = await backend.generate_batch(
+                prompts, max_tokens=4, temperature=0.0, stop=None)
+        await engine.stop()
+        return outs
+
+    outs = asyncio.run(go())
+    assert len(outs) == 3
+    snap = d.stats.snapshot()["prefix"]
+    assert snap["batches"] == 1 and snap["elements"] == 3
+    assert snap["shared_tokens"] > 0
+    assert snap["computed_tokens"] == snap["shared_tokens"]
+    assert "shared-prefix batches" in d.stats.report()
+
+
+def test_bucketed_prefill_bounds_compilations(served):
+    """Distinct prompt lengths land on a handful of bucketed shapes, not
+    one compilation per length — and stay token-exact."""
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=2, max_len=64)
+    # 8 distinct lengths, disjoint token heads (no prefix reuse), all in
+    # the 16-bucket
+    prompts = [[100 + 13 * i + j for j in range(3 + i)] for i in range(8)]
+
+    async def go():
+        outs = []
+        for p in prompts:  # sequential: admissions don't share anything
+            outs.append(await engine.generate(p, max_new_tokens=3))
+        await engine.stop()
+        return outs
+
+    outs = asyncio.run(go())
+    for p, o in zip(prompts, outs):
+        assert o == greedy_reference(model, params, p, 3)
+    assert engine.prefill_compilations == 1, \
+        f"expected 1 bucketed shape, saw {sorted(engine.prefill_shapes)}"
+    assert engine.prefill_compilations <= engine.prefill_shape_bound
+
+
+def test_chunked_prefill_interleaves_decode(served):
+    """A long admit prefills in chunks with decode steps in between — the
+    live batch never freezes — and stays token-exact."""
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=2, max_len=128,
+                           prefill_chunk=8)
+    record = []
+    orig = engine._run_prefill
+
+    def spy(seg, pkv, plen, prefix_key=()):
+        record.append((engine.steps, len(seg)))
+        return orig(seg, pkv, plen, prefix_key=prefix_key)
+
+    engine._run_prefill = spy
+    short = [3, 1, 4]
+    long = [200 + (i % 40) for i in range(80)]
+
+    async def go():
+        t1 = asyncio.create_task(engine.generate(short, max_new_tokens=40))
+        while not engine.active:
+            await asyncio.sleep(0.002)
+        out2 = await engine.generate(long, max_new_tokens=4)
+        out1 = await t1
+        await engine.stop()
+        return out1, out2
+
+    out1, out2 = asyncio.run(go())
+    assert out1 == greedy_reference(model, params, short, 40)
+    assert out2 == greedy_reference(model, params, long, 4)
+    chunk_steps = [s for s, n in record if n == 8]
+    assert len(chunk_steps) == 10  # 80-token prompt in 8-token chunks
+    assert chunk_steps[-1] - chunk_steps[0] >= 9, \
+        "decode batch froze while the long prompt prefilled"
+    assert engine.prefill_chunks >= 10
+
+
+def test_cancelled_request_frees_slot(served):
+    """Cancelling a client await must stop the engine-side request: the
+    slot is freed at the next step instead of decoding to
+    max_new_tokens (the hedged-retry slot leak)."""
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=2, max_len=64,
+                           step_sleep=0.002)
+
+    async def go():
+        t = asyncio.create_task(engine.generate([5, 6, 7],
+                                                max_new_tokens=50))
+        while not engine.active:
+            await asyncio.sleep(0.002)
+        t.cancel()
+        with pytest.raises(asyncio.CancelledError):
+            await t
+        for _ in range(300):
+            if not engine.active:
+                break
+            await asyncio.sleep(0.002)
+        assert not engine.active, "cancelled request still decoding"
+        assert sorted(engine.free_slots) == [0, 1]
+        assert engine.decode_tokens < 50, \
+            "engine decoded the cancelled request to max_new_tokens"
+        await engine.stop()
+
+    asyncio.run(go())
+
+
+def test_hedge_loser_slot_is_reclaimed(served):
+    """The losing hedge duplicate is cancelled by the backend; the engine
+    must reclaim its slot instead of decoding it to completion."""
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=4, max_len=64,
+                           step_sleep=0.02)
+    backend = LocalEngineBackend(engine, hedge_timeout=0.05)
+
+    async def go():
+        out = await backend.generate("hedged prompt", max_tokens=10,
+                                     temperature=0.0, stop=None)
+        # give the scheduler a few steps to retire the cancelled loser
+        for _ in range(200):
+            if not engine.active:
+                break
+            await asyncio.sleep(0.01)
+        await engine.stop()
+        return out
+
+    out = asyncio.run(go())
+    assert isinstance(out, str)
+    assert backend.hedges == 1
+    assert not engine.active, "hedge loser still occupies a slot"
+    # winner decoded 10 tokens; the cancelled loser strictly fewer
+    assert engine.decode_tokens < 20, \
+        "hedge loser decoded to max_new_tokens (slot leak)"
+
+
+def test_cancelled_queued_request_is_skipped(served):
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=1, max_len=64,
+                           step_sleep=0.005)
+
+    async def go():
+        t1 = asyncio.create_task(engine.generate([1, 2], max_new_tokens=8))
+        while not engine.active:
+            await asyncio.sleep(0.002)
+        # queued behind t1 on the single slot, then abandoned
+        t2 = asyncio.create_task(engine.generate([3, 4],
+                                                 max_new_tokens=8))
+        await asyncio.sleep(0.01)
+        t2.cancel()
+        out1 = await t1
+        with pytest.raises(asyncio.CancelledError):
+            await t2
+        await engine.stop()
+        return out1
+
+    out1 = asyncio.run(go())
+    assert out1 == greedy_reference(model, params, [1, 2], 8)
+    # the cancelled queued request was never admitted: only t1's tokens
+    # (first token from prefill, the rest from decode steps)
+    assert engine.decode_tokens == 7
+
+
+def test_quiesce_and_event_driven_restart(served):
+    """The idle loop quiesces (no busy-poll) and a new submission
+    restarts it."""
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=2, max_len=64,
+                           idle_quiesce_s=0.05)
+
+    async def go():
+        o1 = await engine.generate([5, 17, 31], max_new_tokens=4)
+        await asyncio.sleep(0.4)
+        assert engine._task.done(), "idle loop failed to quiesce"
+        o2 = await engine.generate([9, 8, 7], max_new_tokens=4)
+        await engine.stop()
+        return o1, o2
+
+    o1, o2 = asyncio.run(go())
+    assert o1 == greedy_reference(model, params, [5, 17, 31], 4)
+    assert o2 == greedy_reference(model, params, [9, 8, 7], 4)
+
+
+def test_temperature_batch_sampling(served):
+    """Stochastic slots sample in one batched device call; outputs are
+    plausible token ids and the greedy slot stays deterministic."""
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=4, max_len=64)
+
+    async def go():
+        outs = await asyncio.gather(
+            engine.generate([1, 2, 3], max_new_tokens=6, temperature=0.8),
+            engine.generate([5, 17, 31], max_new_tokens=6),
+            engine.generate([9, 9, 9], max_new_tokens=6, temperature=1.2),
+        )
+        await engine.stop()
+        return outs
+
+    stoch1, greedy, stoch2 = asyncio.run(go())
+    assert greedy == greedy_reference(model, params, [5, 17, 31], 6)
+    for out in (stoch1, stoch2):
+        assert len(out) == 6
+        assert all(0 <= t < cfg.vocab_padded for t in out)
+
+
+def test_overlong_prompt_rejected_not_admitted(served):
+    """A prompt with no decode room fails its own request at submission —
+    it must never reach the scheduler (where it would overflow the slot
+    cache and mint unbounded prefill shapes)."""
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=2, max_len=32)
+
+    async def go():
+        with pytest.raises(ValueError, match="max_len"):
+            await engine.generate(list(range(40)), max_new_tokens=4)
+        out = await engine.generate([5, 17, 31], max_new_tokens=4)
+        await engine.stop()
+        return out
+
+    out = asyncio.run(go())
+    assert out == greedy_reference(model, params, [5, 17, 31], 4)
+
+
+def test_warm_prefix_disabled_paths(served):
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=2, max_len=64,
+                           prefix_cache_budget=0)
+
+    async def go():
+        r = await engine.warm_prefix([1, 2, 3, 4])
+        out = await engine.generate([1, 2, 3], max_new_tokens=3)
+        await engine.stop()
+        return r, out
+
+    r, out = asyncio.run(go())
+    assert r is None
+    assert out == greedy_reference(model, params, [1, 2, 3], 3)
+
+
+def test_unsupported_family_falls_back_to_exact_prefill():
+    """Hybrid (recurrent-state) models can't slice KV positionally: the
+    engine disables paged prefill and still serves correctly."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    model = build_model(cfg)
+    assert model.prefix_seq_axes() is None
+    params = model.init(jax.random.PRNGKey(3))
+    engine = ServingEngine(model, params, max_slots=2, max_len=48)
+    assert engine.prefix_cache is None and not engine._paged
+
+    async def go():
+        out = await engine.generate([5, 17, 31], max_new_tokens=4)
+        await engine.stop()
+        return out
+
+    out = asyncio.run(go())
+    assert out == greedy_reference(model, params, [5, 17, 31], 4)
+    assert engine.prefill_shape_bound is None
