@@ -25,6 +25,32 @@ def make_backend(scale=1.0):
     return SimulatedBackend(time_scale=scale, **DEFAULT_BACKEND)
 
 
+@contextlib.contextmanager
+def maybe_tracing(trace_out=None):
+    """Optionally span-trace the enclosed benchmark body (DESIGN.md §4).
+
+    Falsy ``trace_out`` → no-op (the benchmark runs exactly as before,
+    tracing disabled).  Otherwise every engine/dispatch/serving span
+    recorded inside the block is written to ``trace_out`` as a
+    Chrome/Perfetto ``trace_event`` JSON, and the critical-path report is
+    printed.  Wired to every figure benchmark's ``--trace-out`` flag.
+    """
+    if not trace_out:
+        yield None
+        return
+    from repro import obs
+
+    with obs.tracing() as trz:
+        yield trz
+    from pathlib import Path
+
+    Path(trace_out).parent.mkdir(parents=True, exist_ok=True)
+    obs.write_chrome_trace(trace_out, trz)
+    print(f"\ntrace: {len(trz)} spans -> {trace_out} "
+          f"(load in https://ui.perfetto.dev)")
+    print(obs.report(trz).render())
+
+
 def run_once(run_fn, arg, *, mode, scale=1.0, sync_externals=False):
     """``sync_externals=True`` swaps the async AI components for their
     blocking twins (real-world sync-SDK case): the plain baseline blocks on

@@ -26,6 +26,8 @@ from pathlib import Path
 
 from repro.core import offload_policy, poppy, sequential_mode, unordered
 
+from benchmarks.common import maybe_tracing
+
 
 @unordered
 def fetch(i: int, delay: float) -> str:
@@ -76,7 +78,12 @@ def bench(n: int, delay: float, trials: int = 3) -> dict:
 
 
 def run(out_dir="experiments/apps", trials=3, delay=0.1,
-        sweep=(2, 4, 8, 16), smoke=False):
+        sweep=(2, 4, 8, 16), smoke=False, trace_out=None):
+    with maybe_tracing(trace_out):
+        return _run(out_dir, trials, delay, sweep, smoke)
+
+
+def _run(out_dir, trials, delay, sweep, smoke):
     rows = []
     for n in sweep:
         r = bench(n, delay, trials=trials)
@@ -103,4 +110,10 @@ def run(out_dir="experiments/apps", trials=3, delay=0.1,
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the run here")
+    args = ap.parse_args()
+    run(trace_out=args.trace_out)

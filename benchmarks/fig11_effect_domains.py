@@ -35,7 +35,7 @@ from repro.core import equivalent, poppy, recording, sequential, \
     sequential_mode
 from repro.core.ai import llm, use_backend
 
-from benchmarks.common import make_backend
+from benchmarks.common import make_backend, maybe_tracing
 
 K_AGENTS = 4
 N_STEPS = 6
@@ -141,7 +141,12 @@ def bench(k_agents=K_AGENTS, n_steps=N_STEPS, *, trials=3, scale=0.2,
 
 
 def run(out_dir="experiments/apps", trials=3, scale=0.2,
-        sweep=(1, 2, 4, 8), n_steps=N_STEPS, smoke=False):
+        sweep=(1, 2, 4, 8), n_steps=N_STEPS, smoke=False, trace_out=None):
+    with maybe_tracing(trace_out):
+        return _run(out_dir, trials, scale, sweep, n_steps, smoke)
+
+
+def _run(out_dir, trials, scale, sweep, n_steps, smoke):
     rows = []
     for k in sweep:
         r = bench(k, n_steps, trials=trials, scale=scale)
@@ -171,5 +176,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--trials", type=int, default=3)
     ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the run here")
     args = ap.parse_args()
-    run(trials=args.trials, scale=args.scale)
+    run(trials=args.trials, scale=args.scale, trace_out=args.trace_out)

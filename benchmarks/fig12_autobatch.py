@@ -37,6 +37,8 @@ from repro.core.ai import SimulatedBackend, embed, llm, use_backend, \
     use_dispatcher
 from repro.dispatch import Dispatcher
 
+from benchmarks.common import maybe_tracing
+
 N_DOCS = 32
 REQUEST_S = 0.05
 PER_ITEM_S = 0.001
@@ -169,7 +171,12 @@ def bench(n_docs=N_DOCS, *, trials=3, scale=1.0):
 
 
 def run(out_dir="experiments/apps", trials=3, n_docs=N_DOCS, scale=1.0,
-        smoke=False):
+        smoke=False, trace_out=None):
+    with maybe_tracing(trace_out):
+        return _run(out_dir, trials, n_docs, scale, smoke)
+
+
+def _run(out_dir, trials, n_docs, scale, smoke):
     r = bench(n_docs, trials=trials, scale=scale)
     print(f"N={r['n_docs']:3d}  plain {r['plain_s']:.3f}s  unbatched "
           f"{r['unbatched_s']:.3f}s  batched {r['batched_s']:.3f}s  "
@@ -197,5 +204,8 @@ if __name__ == "__main__":
     ap.add_argument("--trials", type=int, default=3)
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--n-docs", type=int, default=N_DOCS)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the run here")
     args = ap.parse_args()
-    run(trials=args.trials, scale=args.scale, n_docs=args.n_docs)
+    run(trials=args.trials, scale=args.scale, n_docs=args.n_docs,
+        trace_out=args.trace_out)

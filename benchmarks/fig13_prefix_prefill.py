@@ -48,6 +48,8 @@ from repro.dispatch import Dispatcher
 from repro.models import build_model
 from repro.serving import LocalEngineBackend, ServingEngine
 
+from benchmarks.common import maybe_tracing
+
 N_FANOUT = 16
 PREFIX_CHARS = 900          # ~900 shared prompt tokens (byte tokenizer)
 MAX_NEW_TOKENS = 4
@@ -175,7 +177,12 @@ def bench(n=N_FANOUT, *, trials=3, prefix_chars=PREFIX_CHARS):
 
 
 def run(out_dir="experiments/apps", trials=3, n=N_FANOUT,
-        prefix_chars=PREFIX_CHARS, smoke=False):
+        prefix_chars=PREFIX_CHARS, smoke=False, trace_out=None):
+    with maybe_tracing(trace_out):
+        return _run(out_dir, trials, n, prefix_chars, smoke)
+
+
+def _run(out_dir, trials, n, prefix_chars, smoke):
     r = bench(n, trials=trials, prefix_chars=prefix_chars)
     print(f"N={r['n_fanout']:3d}  plain {r['plain_s']:.3f}s  nocache "
           f"{r['nocache_s']:.3f}s  prefix {r['prefix_s']:.3f}s  "
@@ -208,5 +215,8 @@ if __name__ == "__main__":
     ap.add_argument("--trials", type=int, default=3)
     ap.add_argument("--n", type=int, default=N_FANOUT)
     ap.add_argument("--prefix-chars", type=int, default=PREFIX_CHARS)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the run here")
     args = ap.parse_args()
-    run(trials=args.trials, n=args.n, prefix_chars=args.prefix_chars)
+    run(trials=args.trials, n=args.n, prefix_chars=args.prefix_chars,
+        trace_out=args.trace_out)

@@ -16,11 +16,16 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from benchmarks.common import all_apps, bench_app
+from benchmarks.common import all_apps, bench_app, maybe_tracing
 
 
 def run(out_dir="experiments/apps", trials=3, scale=1.0, camel_count=30,
-        sync_externals=False):
+        sync_externals=False, trace_out=None):
+    with maybe_tracing(trace_out):
+        return _run(out_dir, trials, scale, camel_count, sync_externals)
+
+
+def _run(out_dir, trials, scale, camel_count, sync_externals):
     from benchmarks.apps import camel
 
     label = "sync" if sync_externals else "async"
@@ -71,5 +76,8 @@ if __name__ == "__main__":
     ap.add_argument("--sync", action="store_true",
                     help="run with blocking (sync-SDK) external clients")
     ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the run here")
     args = ap.parse_args()
-    run(trials=args.trials, sync_externals=args.sync)
+    run(trials=args.trials, sync_externals=args.sync,
+        trace_out=args.trace_out)

@@ -6,12 +6,18 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from benchmarks.common import make_backend
+from benchmarks.common import make_backend, maybe_tracing
 from repro.core import recording
 from repro.core.ai import use_backend
 
 
-def run(out_dir="experiments/apps", scale=1.0, steps=2, beam=3):
+def run(out_dir="experiments/apps", scale=1.0, steps=2, beam=3,
+        trace_out=None):
+    with maybe_tracing(trace_out):
+        return _run(out_dir, scale, steps, beam)
+
+
+def _run(out_dir, scale, steps, beam):
     from benchmarks.apps import tot
 
     old_steps, old_beam = tot.NUM_STEPS, tot.BEAM_WIDTH
@@ -53,4 +59,10 @@ def run(out_dir="experiments/apps", scale=1.0, steps=2, beam=3):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the run here")
+    args = ap.parse_args()
+    run(trace_out=args.trace_out)

@@ -7,10 +7,15 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from benchmarks.common import all_apps, overhead_of
+from benchmarks.common import all_apps, maybe_tracing, overhead_of
 
 
-def run(out_dir="experiments/apps", trials=3, scale=1.0):
+def run(out_dir="experiments/apps", trials=3, scale=1.0, trace_out=None):
+    with maybe_tracing(trace_out):
+        return _run(out_dir, trials, scale)
+
+
+def _run(out_dir, trials, scale):
     from benchmarks.apps import camel
 
     results = {}
@@ -35,4 +40,10 @@ def run(out_dir="experiments/apps", trials=3, scale=1.0):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the run here")
+    args = ap.parse_args()
+    run(trace_out=args.trace_out)

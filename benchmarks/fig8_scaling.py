@@ -6,11 +6,17 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from benchmarks.common import bench_app
+from benchmarks.common import bench_app, maybe_tracing
 
 
 def run(out_dir="experiments/apps", trials=2, scale=1.0,
-        beams=(1, 2, 5, 10, 20), assessments=(1, 3, 5, 10, 20)):
+        beams=(1, 2, 5, 10, 20), assessments=(1, 3, 5, 10, 20),
+        trace_out=None):
+    with maybe_tracing(trace_out):
+        return _run(out_dir, trials, scale, beams, assessments)
+
+
+def _run(out_dir, trials, scale, beams, assessments):
     from benchmarks.apps import bird, tot
 
     results = {"ToT": {}, "BIRD": {}}
@@ -45,4 +51,10 @@ def run(out_dir="experiments/apps", trials=2, scale=1.0,
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the run here")
+    args = ap.parse_args()
+    run(trace_out=args.trace_out)

@@ -29,7 +29,7 @@ from repro.core import poppy, sequential_mode
 from repro.core.ai import use_backend, use_dispatcher, llm
 from repro.dispatch import AdmissionPolicy, Dispatcher, HedgePolicy
 
-from benchmarks.common import make_backend
+from benchmarks.common import make_backend, maybe_tracing
 
 N_CALLS = 24
 N_UNIQUE = 8
@@ -73,7 +73,12 @@ def _timed(d, expect):
     return dt
 
 
-def run(out_dir="experiments/apps", trials=3, scale=1.0):
+def run(out_dir="experiments/apps", trials=3, scale=1.0, trace_out=None):
+    with maybe_tracing(trace_out):
+        return _run(out_dir, trials, scale)
+
+
+def _run(out_dir, trials, scale):
     times = {"single": [], "routed": [], "routed_warm": []}
     last_stats = {}
     for _ in range(trials):
@@ -126,4 +131,10 @@ def run(out_dir="experiments/apps", trials=3, scale=1.0):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the run here")
+    args = ap.parse_args()
+    run(trace_out=args.trace_out)

@@ -46,7 +46,7 @@ def smoke(out_path=SMOKE_JSON):
     ``benchmarks/baseline.json``."""
     from benchmarks import (fig5_speedup, fig9_dispatch, fig10_sync_offload,
                             fig11_effect_domains, fig12_autobatch,
-                            fig13_prefix_prefill)
+                            fig13_prefix_prefill, obs_overhead)
 
     t0 = time.time()
     figures = {}
@@ -62,8 +62,13 @@ def smoke(out_path=SMOKE_JSON):
             print(f"EQUIVALENCE FAILURE [{name}]: {e}", flush=True)
         print(flush=True)
 
+    # the smoke fig5 run is span-traced end to end; the resulting
+    # Perfetto trace is uploaded as a CI artifact (debugging a CI-only
+    # perf regression starts from this file)
     attempt("fig5", "equality + ≡_A per trial",
-            lambda: fig5_speedup.run(trials=1, scale=0.1, camel_count=2),
+            lambda: fig5_speedup.run(trials=1, scale=0.1, camel_count=2,
+                                     trace_out="experiments/ci/"
+                                               "smoke_trace.json"),
             lambda r: {"geomean": r[1]["geomean"]})
     attempt("fig9", "dispatch preserves sequential semantics",
             lambda: fig9_dispatch.run(trials=1, scale=0.3),
@@ -97,6 +102,12 @@ def smoke(out_path=SMOKE_JSON):
             lambda r: {"prefix_vs_nocache":
                        r["speedup_prefix_vs_nocache"],
                        "jit_headroom": r["jit_headroom"]})
+    # obs_overhead asserts the tracing-enabled overhead bar (<5% pairwise
+    # delta on fig5 tiny-N) and critical-path attribution soundness; an
+    # assertion failure surfaces through the same equivalence machinery
+    attempt("obs_overhead", "tracing <5% overhead + attribution ≥85%",
+            lambda: obs_overhead.run(),
+            lambda r: {"disabled_vs_enabled": r["disabled_vs_enabled"]})
 
     out = Path(out_path)
     out.parent.mkdir(parents=True, exist_ok=True)

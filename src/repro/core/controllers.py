@@ -31,6 +31,8 @@ from . import registry
 from .errors import ExternalCallError, PoppyRuntimeError
 from .trace import safe_repr
 from .values import check_bound, deep_resolve, shallow
+from ..obs.spans import (PHASE_MIN_S, current_span, current_tracer,
+                         maybe_span)
 
 UNORDERED = registry.UNORDERED
 READONLY = registry.READONLY
@@ -67,11 +69,33 @@ async def _await_locks(futs):
             await f
 
 
+async def _await_locks_traced(futs, locks):
+    """``_await_locks`` plus a retroactive ``lock.wait`` span when the
+    wait actually took time (``locks`` names which lock futures: "r",
+    "w", or "rw")."""
+    trz = current_tracer()
+    if trz is None:
+        await _await_locks(futs)
+        return
+    t0 = trz.now()
+    await _await_locks(futs)
+    if trz.now() - t0 >= PHASE_MIN_S:
+        trz.record("lock.wait", t0, cat="external.lock", locks=locks)
+
+
 def unwrap_external(fn):
     """The engine dispatches the *inner* function of an annotation wrapper so
     plain-mode trace recording in the wrapper doesn't double-fire."""
     inner = getattr(fn, "__poppy_dispatch__", None)
     return inner if inner is not None else fn
+
+
+def _span_note(**attrs):
+    """Annotate the enclosing ``external`` span (no-op when tracing is
+    off or the innermost span is not the controller's external span)."""
+    sp = current_span()
+    if sp is not None and sp.cat == "external":
+        sp.attrs.update(attrs)
 
 
 async def invoke_external(rt, fn, pos, kw, ev, *, allow_batch=False):
@@ -85,8 +109,14 @@ async def invoke_external(rt, fn, pos, kw, ev, *, allow_batch=False):
     unobservable, but the window delays dispatch, and only unordered calls
     are free to wait on unrelated work.
     """
+    trz = current_tracer()
+    t_args = trz.now() if trz is not None else 0.0
     pos = [check_bound(await deep_resolve(a)) for a in pos]
     kw = {k: check_bound(await deep_resolve(v)) for k, v in kw.items()}
+    if trz is not None and trz.now() - t_args >= PHASE_MIN_S:
+        # dependency wait worth attributing (sub-threshold resolves are
+        # elided — most args are already concrete)
+        trz.record("await.args", t_args, cat="external.args")
     if rt.error is not None:
         # a sibling already failed: the run is aborting — parking here (via
         # cancellation) instead of dispatching preserves sequential
@@ -99,21 +129,27 @@ async def invoke_external(rt, fn, pos, kw, ev, *, allow_batch=False):
             if key is not None:
                 # the collector records dispatch/resolve trace events at
                 # flush/scatter time (when the batch actually goes out)
-                return await rt.batches.submit(fn, spec, key, pos, kw, ev)
+                with maybe_span("batch.window", cat="external.batch"):
+                    return await rt.batches.submit(fn, spec, key, pos, kw,
+                                                   ev)
     if rt.trace is not None:
         rt.trace.dispatched(ev, args_repr=safe_repr((tuple(pos), kw)))
+        if ev is not None:
+            _span_note(seq=ev.seq_no)
     target = unwrap_external(fn)
     try:
-        if registry.is_async_callable(target):
-            result = await target(*pos, **kw)
-        elif rt.offload_mode_for(fn) == "thread":
-            # blocking externals dispatch on the offload executor so
-            # independent calls overlap (real-world sync SDK clients)
-            result = await rt.run_sync(target, pos, kw)
-        else:
-            # inline on the loop — the paper's single-interpreter dispatch
-            # (§6.1), right for cheap calls and thread-affine clients
-            result = target(*pos, **kw)
+        with maybe_span("call", cat="external.call"):
+            if registry.is_async_callable(target):
+                result = await target(*pos, **kw)
+            elif rt.offload_mode_for(fn) == "thread":
+                # blocking externals dispatch on the offload executor so
+                # independent calls overlap (real-world sync SDK clients)
+                result = await rt.run_sync(target, pos, kw)
+            else:
+                # inline on the loop — the paper's single-interpreter
+                # dispatch (§6.1), right for cheap calls and thread-affine
+                # clients
+                result = target(*pos, **kw)
     except asyncio.CancelledError:
         raise
     except Exception as e:
@@ -131,6 +167,7 @@ async def invoke_external(rt, fn, pos, kw, ev, *, allow_batch=False):
                 effs = registry.effect_keys(info, pos, kw)
                 if effs is not None:
                     rt.trace.set_effects(ev, effs)
+                    _span_note(effects=list(effs))
     return result
 
 
@@ -153,6 +190,25 @@ async def external_controller(rt, fn, pos, kw, fresh, keys, links,
     them (an LLM fan-out downstream of an unresolved conditional is the
     paper's bread-and-butter parallelism).
     """
+    trz = current_tracer()
+    if trz is None:
+        await _external_controller(rt, fn, pos, kw, fresh, keys, links,
+                                   dfut, callsite, resolve_links)
+        return
+    # one span per queued external, on its effect domains' track; the
+    # lifecycle phases below (classify, lock waits, arg resolution, batch
+    # window, the call itself) nest inside it
+    name = registry.callable_name(fn)
+    track = "domain:" + ",".join(str(k) for k in keys) if keys \
+        else "domain:*"
+    with trz.span(name, cat="external", track=track, callsite=callsite):
+        await _external_controller(rt, fn, pos, kw, fresh, keys, links,
+                                   dfut, callsite, resolve_links)
+
+
+async def _external_controller(rt, fn, pos, kw, fresh, keys, links,
+                               dfut: asyncio.Future, callsite: str,
+                               resolve_links=None):
     ev = rt.trace.queued(registry.callable_name(fn), callsite,
                          wrapped=hasattr(fn, "__poppy_dispatch__")) \
         if rt.trace is not None else None
@@ -165,13 +221,18 @@ async def external_controller(rt, fn, pos, kw, fresh, keys, links,
     else:
         # dynamic dispatch: classification needs argument *types* — await
         # the spine of each argument (not its contents)
+        trz = current_tracer()
+        t_cls = trz.now() if trz is not None else 0.0
         cpos = [check_bound(await shallow(a)) for a in pos]
         ckw = {k: await shallow(v) for k, v in kw.items()}
         cls = registry.get_callable_class(fn, cpos, ckw, fresh)
+        if trz is not None and trz.now() - t_cls >= PHASE_MIN_S:
+            trz.record("classify", t_cls, cat="external.classify")
         pos = cpos
         kw = ckw
     if ev is not None:
         rt.trace.classified(ev, cls, effects=keys)
+    _span_note(cls=cls, effects=[str(k) for k in keys] if keys else ["*"])
 
     if links is None:
         if cls == UNORDERED:
@@ -191,6 +252,7 @@ async def external_controller(rt, fn, pos, kw, fresh, keys, links,
         keys, links = await resolve_links()
         if ev is not None:
             rt.trace.classified(ev, cls, effects=keys)
+        _span_note(effects=[str(k) for k in keys] if keys else ["*"])
 
     outs = list({id(o): o for _, o in links}.values())
     # Lock futures are resolved in a ``finally``: a failing call must not
@@ -211,12 +273,12 @@ async def external_controller(rt, fn, pos, kw, fresh, keys, links,
         dfut.set_result(result)
     elif cls == READONLY:
         try:
-            await _await_locks([s.f_r for s, _ in links])
+            await _await_locks_traced([s.f_r for s, _ in links], "r")
             for o in outs:
                 _resolve_lock(o.f_r)  # forward before dispatching
             result = await invoke_external(rt, fn, pos, kw, ev)
             dfut.set_result(result)
-            await _await_locks([s.f_w for s, _ in links])
+            await _await_locks_traced([s.f_w for s, _ in links], "w")
         except BaseException as e:
             if not isinstance(e, asyncio.CancelledError):
                 rt.fail(e)
@@ -227,8 +289,9 @@ async def external_controller(rt, fn, pos, kw, fresh, keys, links,
                 _resolve_lock(o.f_w)
     elif cls == SEQUENTIAL:
         try:
-            await _await_locks([s.f_r for s, _ in links])
-            await _await_locks([s.f_w for s, _ in links])
+            await _await_locks_traced(
+                [s.f_r for s, _ in links] + [s.f_w for s, _ in links],
+                "rw")
             result = await invoke_external(rt, fn, pos, kw, ev)
             dfut.set_result(result)
         except BaseException as e:

@@ -19,8 +19,12 @@ import asyncio
 import contextvars
 import os
 import sys
+import threading
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
+
+from ..obs.spans import current_tracer as _obs_tracer
+from ..obs.spans import maybe_span
 
 from . import registry
 from .batching import BatchCollector, current_batching_policy
@@ -259,8 +263,22 @@ class Runtime:
         it would inline.
         """
         ctx = contextvars.copy_context()
+        trz = _obs_tracer()
+        if trz is None:
+            return self.loop.run_in_executor(
+                self.executor, lambda: ctx.run(target, *pos, **kw))
+
+        # traced: record the worker-thread occupancy as a span on the
+        # worker's own track; the propagated context parents it under the
+        # caller's external.call span
+        def offloaded():
+            with trz.span(
+                    "offload", cat="offload",
+                    track="offload:" + threading.current_thread().name):
+                return target(*pos, **kw)
+
         return self.loop.run_in_executor(
-            self.executor, lambda: ctx.run(target, *pos, **kw))
+            self.executor, lambda: ctx.run(offloaded))
 
     # -- task management ---------------------------------------------------
 
@@ -297,6 +315,12 @@ class Runtime:
         old_limit = sys.getrecursionlimit()
         sys.setrecursionlimit(max(old_limit, 20000))
         tok = _current_runtime.set(self)
+        # root span for the whole run: entered before any controller task
+        # is spawned so every external span parents under it (create_task
+        # copies the context, current span included)
+        run_cm = maybe_span(
+            "run:" + getattr(poppy_fn.lfunc, "name", "poppy"), cat="engine")
+        run_cm.__enter__()
         try:
             inputs = self._bind(poppy_fn, list(args), dict(kwargs))
             outs = self.instantiate(poppy_fn.lfunc,
@@ -324,6 +348,7 @@ class Runtime:
             finally:
                 err_task.cancel()
         finally:
+            run_cm.__exit__(None, None, None)
             _current_runtime.reset(tok)
             sys.setrecursionlimit(old_limit)
             if self._batches is not None:
@@ -728,7 +753,10 @@ class Runtime:
             self.trace.classified(ev, registry.UNORDERED)
             self.trace.dispatched(ev, args_repr=safe_repr((tuple(pos), kw)))
         try:
-            result = unwrap_external(fn)(*pos, **kw)
+            with maybe_span(registry.callable_name(fn), cat="external",
+                            cls="unordered", inline=True,
+                            seq=ev.seq_no if ev is not None else -1):
+                result = unwrap_external(fn)(*pos, **kw)
         except Exception as e:
             from .errors import ExternalCallError
             raise ExternalCallError(registry.callable_name(fn), e) from e

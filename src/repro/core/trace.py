@@ -45,6 +45,10 @@ class TraceEvent:
     name: str
     callsite: str = ""
     cls: str = ""
+    # Timestamps are seconds since the owning Trace's monotonic origin
+    # (``Trace.t0``), so events from different traces of the same run
+    # shape are directly comparable and exporters need no re-basing;
+    # ``Trace.epoch`` carries the matching wall-clock time.
     t_queue: float = 0.0
     t_dispatch: float = 0.0
     t_resolve: float = 0.0
@@ -69,8 +73,16 @@ class Trace:
     them concurrently with the engine thread."""
 
     events: list[TraceEvent] = field(default_factory=list)
+    # monotonic origin: every event timestamp is relative to this instant
+    t0: float = field(default_factory=time.monotonic)
+    # wall-clock time at ``t0`` — aligns traces across processes
+    epoch: float = field(default_factory=time.time)
     _seq: int = field(default=0, repr=False)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def now(self) -> float:
+        """Seconds since this trace's monotonic origin."""
+        return time.monotonic() - self.t0
 
     def _next_seq(self) -> int:
         with self._lock:
@@ -82,7 +94,7 @@ class Trace:
 
     def queued(self, name, callsite="", wrapped=True) -> TraceEvent:
         ev = TraceEvent(name=name, callsite=callsite,
-                        t_queue=time.monotonic(), wrapped=wrapped)
+                        t_queue=self.now(), wrapped=wrapped)
         with self._lock:
             self.events.append(ev)
         return ev
@@ -98,18 +110,18 @@ class Trace:
         ev.effects = tuple(effects)
 
     def dispatched(self, ev: TraceEvent, args_repr=""):
-        ev.t_dispatch = time.monotonic()
+        ev.t_dispatch = self.now()
         ev.args_repr = args_repr
         ev.seq_no = self._next_seq()
 
     def resolved(self, ev: TraceEvent):
-        ev.t_resolve = time.monotonic()
+        ev.t_resolve = self.now()
 
     # -- plain-Python-side API ---------------------------------------------
 
     def record_direct(self, name, cls, args_repr="", callsite="",
                       effects=("*",)):
-        now = time.monotonic()
+        now = self.now()
         ev = TraceEvent(name=name, callsite=callsite, cls=cls,
                         t_queue=now, t_dispatch=now, t_resolve=now,
                         args_repr=args_repr, seq_no=self._next_seq(),

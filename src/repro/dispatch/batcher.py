@@ -28,7 +28,8 @@ from __future__ import annotations
 import asyncio
 import time
 
-from .stats import LatencyDigest
+from repro.obs.metrics import Histogram, InstrumentAttr, MetricsRegistry
+from repro.obs.spans import current_tracer
 
 
 class BatchPolicy:
@@ -66,19 +67,35 @@ def make_batch_policy(batch) -> BatchPolicy | None:
 
 
 class BatchStats:
-    """Per-batch observability: size histogram, fill ratio, window waits."""
+    """Per-batch observability: size histogram, fill ratio, window waits.
+    A view over a :class:`~repro.obs.metrics.MetricsRegistry` (the owning
+    Dispatcher shares its ``DispatchStats.registry`` so every dispatch
+    number lives in one place)."""
 
-    def __init__(self, max_batch: int | None = None):
+    batches = InstrumentAttr()      # batched backend requests dispatched
+    elements = InstrumentAttr()     # elements carried by those requests
+
+    def __init__(self, max_batch: int | None = None,
+                 registry: MetricsRegistry | None = None):
+        reg = registry if registry is not None else MetricsRegistry()
+        self.registry = reg
         self.max_batch = max_batch
-        self.batches = 0            # batched backend requests dispatched
-        self.elements = 0           # elements carried by those requests
-        self.size_hist: dict[int, int] = {}
-        self.wait = LatencyDigest(maxlen=4096)   # window open → flush
+        self._i_batches = reg.counter("batch_batches")
+        self._i_elements = reg.counter("batch_elements")
+        self.wait: Histogram = reg.histogram(
+            "batch_wait_s", maxlen=4096)    # window open → flush
+
+    @property
+    def size_hist(self) -> dict[int, int]:
+        """Batch-size histogram, a view over the registry's labeled
+        ``batch_size`` counter series."""
+        return {int(dict(labels)["size"]): c.value
+                for labels, c in self.registry.series("batch_size").items()}
 
     def record_batch(self, size: int):
         self.batches += 1
         self.elements += size
-        self.size_hist[size] = self.size_hist.get(size, 0) + 1
+        self.registry.counter("batch_size", size=size).inc()
 
     def record_wait(self, seconds: float):
         self.wait.add(seconds)
@@ -109,7 +126,7 @@ class BatchStats:
 
 
 class _MicroWindow:
-    __slots__ = ("group", "payloads", "futs", "t0", "timer")
+    __slots__ = ("group", "payloads", "futs", "t0", "timer", "trz", "span")
 
     def __init__(self, group, t0):
         self.group = group
@@ -117,6 +134,10 @@ class _MicroWindow:
         self.futs: list[asyncio.Future] = []
         self.t0 = t0
         self.timer = None
+        # observability: the window's open→flush interval as a span on the
+        # tracer active when the first element arrived
+        self.trz = None
+        self.span = None
 
 
 class MicroBatcher:
@@ -148,6 +169,10 @@ class MicroBatcher:
         w = self._windows.get(group)
         if w is None:
             w = self._windows[group] = _MicroWindow(group, time.monotonic())
+            w.trz = current_tracer()
+            if w.trz is not None:
+                w.span = w.trz.begin("batch.window", cat="dispatch.batch",
+                                     group=str(w.group[0]))
             w.timer = loop.call_later(self.policy.max_wait_s,
                                       self._flush, w)
         fut = loop.create_future()
@@ -163,6 +188,8 @@ class MicroBatcher:
         del self._windows[w.group]
         if w.timer is not None:
             w.timer.cancel()
+        if w.span is not None:
+            w.trz.end(w.span, size=len(w.payloads))
         self.stats.record_wait(time.monotonic() - w.t0)
         task = asyncio.get_running_loop().create_task(self._run(w))
         self._tasks.add(task)

@@ -27,6 +27,8 @@ import json
 from collections import OrderedDict
 from pathlib import Path
 
+from repro.obs.spans import current_tracer, maybe_span
+
 
 def request_key(kind: str, payload) -> str:
     """Stable hash of an external request.
@@ -176,27 +178,34 @@ class ResultCache:
     async def get_or_dispatch(self, key: str, thunk, stats=None):
         """Return the cached value for ``key``, or run ``thunk`` (an async
         0-arg callable) exactly once per concurrent burst and share it."""
+        trz = current_tracer()
         v = self.mem.get(key)
         if v is not _MISS:
             if stats is not None:
                 stats.cache_hits += 1
+            if trz is not None:
+                trz.event("cache.hit", cat="dispatch.cache")
             return v
         if self.disk is not None:
             # disk I/O off the event loop: a slow filesystem must not stall
             # every other in-flight request / admission waiter / hedge timer
-            v = await asyncio.to_thread(self.disk.get, key)
+            with maybe_span("cache.disk", cat="dispatch.cache"):
+                v = await asyncio.to_thread(self.disk.get, key)
             if v is not _MISS:
                 self.mem.put(key, v)
                 if stats is not None:
                     stats.cache_hits += 1
                     stats.disk_hits += 1
+                if trz is not None:
+                    trz.event("cache.disk_hit", cat="dispatch.cache")
                 return v
         fut, primary = self.claim(key)
         if not primary:
             if stats is not None:
                 stats.coalesced += 1
-            return await self.join(
-                fut, lambda: self.get_or_dispatch(key, thunk, stats))
+            with maybe_span("cache.join", cat="dispatch.cache"):
+                return await self.join(
+                    fut, lambda: self.get_or_dispatch(key, thunk, stats))
         if stats is not None:
             stats.cache_misses += 1
         try:

@@ -40,6 +40,7 @@ import asyncio
 import time
 
 from repro.core.ai import Backend
+from repro.obs.spans import current_tracer, maybe_span
 
 from .admission import AdmissionController, AdmissionRejected, make_admission
 from .batcher import BatchStats, MicroBatcher, make_batch_policy
@@ -82,7 +83,8 @@ class Dispatcher(Backend):
         self.stats = stats if stats is not None else DispatchStats()
         self.batch_policy = make_batch_policy(batch)
         self.batch_stats = BatchStats(
-            self.batch_policy.max_batch if self.batch_policy else None)
+            self.batch_policy.max_batch if self.batch_policy else None,
+            registry=self.stats.registry)
         self.stats.batch = self.batch_stats
         self.batcher = MicroBatcher(self.batch_policy, self._execute_batch,
                                     self.batch_stats) \
@@ -159,18 +161,21 @@ class Dispatcher(Backend):
         use_cache = self.cache is not None and cacheable
         needs_key = use_cache or self.retry is not None
         key = request_key(kind, payload) if needs_key else ""
-        if self.batcher is not None and batch is not None \
-                and _hashable(batch[0]):
-            group, element = batch
+        with maybe_span(f"dispatch:{kind}", cat="dispatch", kind=kind,
+                        cached=use_cache):
+            if self.batcher is not None and batch is not None \
+                    and _hashable(batch[0]):
+                group, element = batch
 
-            def runner():
-                return self._one_via_batcher(group, element)
-        else:
-            def runner():
-                return self._hedged(key, call)
-        if not use_cache:
-            return await runner()
-        return await self.cache.get_or_dispatch(key, runner, self.stats)
+                def runner():
+                    return self._one_via_batcher(group, element)
+            else:
+                def runner():
+                    return self._hedged(key, call)
+            if not use_cache:
+                return await runner()
+            return await self.cache.get_or_dispatch(key, runner,
+                                                    self.stats)
 
     async def _one_via_batcher(self, group, element):
         (r,) = await self.batcher.submit_many(group, [element])
@@ -200,6 +205,13 @@ class Dispatcher(Backend):
         # a micro-batch window; the burst still dispatches as one batch
         use_batcher = self.batcher is not None and _hashable(group)
         use_cache = self.cache is not None and cacheable
+        with maybe_span(f"dispatch.batch:{kind}", cat="dispatch.batch",
+                        kind=kind, n=n):
+            return await self._batch_pipeline_inner(
+                kind, opts, payloads, group, use_batcher, use_cache, n, st)
+
+    async def _batch_pipeline_inner(self, kind, opts, payloads, group,
+                                    use_batcher, use_cache, n, st):
         if not use_cache:
             if use_batcher:
                 return await self.batcher.submit_many(group, payloads)
@@ -318,10 +330,22 @@ class Dispatcher(Backend):
         if self.hedge is None:
             return await self._routed(key, call)
         st = self.stats
+
+        def on_hedge():
+            st.hedges += 1
+            trz = current_tracer()
+            if trz is not None:
+                trz.event("hedge", cat="dispatch")
+
+        def on_win():
+            st.hedge_wins += 1
+            trz = current_tracer()
+            if trz is not None:
+                trz.event("hedge.win", cat="dispatch")
+
         return await with_hedge(
             lambda: self._routed(key, call), self.hedge,
-            on_hedge=lambda: setattr(st, "hedges", st.hedges + 1),
-            on_win=lambda: setattr(st, "hedge_wins", st.hedge_wins + 1))
+            on_hedge=on_hedge, on_win=on_win)
 
     def _pick(self) -> tuple[Replica, object]:
         replica = self.router.pick() if self.router is not None \
@@ -333,17 +357,29 @@ class Dispatcher(Backend):
         st = self.stats
         if gate is None:
             return await self._attempt(replica, key, call)
+        # the admission wait is begin/end-bracketed (not a ``with``) so the
+        # span closes when the gate admits, not when the attempt finishes;
+        # ``end`` is idempotent, so the finally covers the reject path
+        trz = current_tracer()
+        adm = trz.begin("admission.wait", cat="dispatch.admit",
+                        backend=replica.name) if trz is not None else None
         st.enqueue()
         admitted = False
         try:
             async with gate:
+                if adm is not None:
+                    trz.end(adm)
                 st.dequeue()
                 admitted = True
                 return await self._attempt(replica, key, call)
         except AdmissionRejected:
             st.rejected += 1
+            if adm is not None:
+                adm.attrs["rejected"] = True
             raise
         finally:
+            if adm is not None:
+                trz.end(adm)
             if not admitted:
                 st.dequeue()
 
@@ -354,11 +390,23 @@ class Dispatcher(Backend):
         bs = st.backend(replica.name)
         bs.outstanding_peak = max(bs.outstanding_peak, replica.outstanding)
         st.dispatched += 1
+
+        def on_retry(a):
+            st.retries += 1
+            trz = current_tracer()
+            if trz is not None:
+                trz.event("retry", cat="dispatch", attempt=a,
+                          backend=replica.name)
+
         t0 = time.monotonic()
         try:
-            result = await with_retry(
-                lambda: call(backend), self.retry, key=key,
-                on_retry=lambda a: setattr(st, "retries", st.retries + 1))
+            with maybe_span("attempt", cat="backend",
+                            track=f"backend:{replica.name}",
+                            backend=replica.name,
+                            outstanding=replica.outstanding):
+                result = await with_retry(
+                    lambda: call(backend), self.retry, key=key,
+                    on_retry=on_retry)
         except BaseException:
             st.observe(replica.name, time.monotonic() - t0, error=True)
             raise

@@ -7,71 +7,52 @@ latency percentiles.  Consumed by ``benchmarks/fig9_dispatch.py`` and by
 the serving example's end-of-run report.  Multi-step counter updates are
 lock-protected: with blocking (sync-SDK) components the dispatcher is
 driven from the bridge loop's thread concurrently with the engine loop.
+
+Storage lives in a :class:`repro.obs.metrics.MetricsRegistry`
+(DESIGN.md §4): each stats class here is a *view* whose public counter
+attributes are :class:`~repro.obs.metrics.InstrumentAttr` descriptors over
+registry series, so the same numbers are readable through the legacy
+``snapshot()`` / ``report()`` surfaces (shape-stable — benchmarks and
+tests depend on them) and through ``stats.registry.snapshot()``.
 """
 
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
 from typing import TYPE_CHECKING
+
+from repro.obs.metrics import Histogram, InstrumentAttr, MetricsRegistry
 
 if TYPE_CHECKING:  # avoid a runtime cycle (batcher imports LatencyDigest)
     from .batcher import BatchStats
 
-
-class LatencyDigest:
-    """Bounded reservoir of latency samples with percentile queries.
-
-    Keeps the most recent ``maxlen`` samples (enough for p99 at benchmark
-    scales; a production deployment would swap in t-digest without changing
-    the surface).
-    """
-
-    def __init__(self, maxlen: int = 8192):
-        self.maxlen = maxlen
-        self.samples: list[float] = []
-        self.count = 0
-        self.total_s = 0.0
-
-    def add(self, seconds: float):
-        self.count += 1
-        self.total_s += seconds
-        self.samples.append(seconds)
-        if len(self.samples) > self.maxlen:
-            del self.samples[: len(self.samples) - self.maxlen]
-
-    def percentile(self, q: float) -> float:
-        if not self.samples:
-            return 0.0
-        s = sorted(self.samples)
-        idx = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
-        return s[idx]
-
-    @property
-    def p50(self) -> float:
-        return self.percentile(50.0)
-
-    @property
-    def p99(self) -> float:
-        return self.percentile(99.0)
-
-    @property
-    def mean(self) -> float:
-        return self.total_s / self.count if self.count else 0.0
+#: Historical name for the bounded percentile reservoir, which now lives in
+#: ``repro.obs.metrics`` so the registry can own histogram series.  The
+#: surface (``add`` / ``percentile`` / ``p50`` / ``p99`` / ``mean``) is
+#: unchanged.
+LatencyDigest = Histogram
 
 
-@dataclass
 class PrefixStats:
     """Shared-prefix admission counters (serving radix KV cache,
     DESIGN.md §3.2): how much prompt ingestion the engine skipped because
     app-level batches share a prefix.  ``note_batch`` is called once per
     batched admission by ``LocalEngineBackend.generate_batch``."""
 
-    batches: int = 0            # batches that warmed a shared prefix
-    elements: int = 0           # requests riding those batches
-    shared_tokens: int = 0      # common-prefix tokens, summed over batches
-    computed_tokens: int = 0    # prefix tokens actually prefilled by warms
-    warm_cached: int = 0        # warms fully served by the radix cache
+    batches = InstrumentAttr()          # batches that warmed a shared prefix
+    elements = InstrumentAttr()         # requests riding those batches
+    shared_tokens = InstrumentAttr()    # common-prefix tokens over batches
+    computed_tokens = InstrumentAttr()  # prefix tokens actually prefilled
+    warm_cached = InstrumentAttr()      # warms fully served by radix cache
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        reg = registry if registry is not None else MetricsRegistry()
+        self.registry = reg
+        self._i_batches = reg.counter("prefix_batches")
+        self._i_elements = reg.counter("prefix_elements")
+        self._i_shared_tokens = reg.counter("prefix_shared_tokens")
+        self._i_computed_tokens = reg.counter("prefix_computed_tokens")
+        self._i_warm_cached = reg.counter("prefix_warm_cached")
 
     def note_batch(self, *, elements, shared_tokens, computed_tokens):
         self.batches += 1
@@ -91,72 +72,110 @@ class PrefixStats:
         }
 
 
-@dataclass
 class BackendStats:
-    """Per-replica counters."""
+    """Per-replica counters (a labeled view: every instrument carries a
+    ``backend=<name>`` label in the owning registry)."""
 
-    requests: int = 0
-    errors: int = 0
-    outstanding_peak: int = 0
-    latency: LatencyDigest = field(default_factory=LatencyDigest)
+    requests = InstrumentAttr()
+    errors = InstrumentAttr()
+    outstanding_peak = InstrumentAttr()
+
+    def __init__(self, registry: MetricsRegistry | None = None,
+                 name: str = ""):
+        reg = registry if registry is not None else MetricsRegistry()
+        self._i_requests = reg.counter("backend_requests", backend=name)
+        self._i_errors = reg.counter("backend_errors", backend=name)
+        self._i_outstanding_peak = reg.counter("backend_outstanding_peak",
+                                               backend=name)
+        self.latency: Histogram = reg.histogram("backend_latency_s",
+                                                backend=name)
 
 
 class DispatchStats:
     """Aggregated counters for one Dispatcher."""
 
-    def __init__(self):
-        self.requests = 0           # client-visible calls entering dispatch
-        self.dispatched = 0         # calls actually sent to a backend
-        self.cache_hits = 0
-        self.cache_misses = 0
-        self.disk_hits = 0
-        self.coalesced = 0          # joined an identical in-flight request
-        self.retries = 0
-        self.hedges = 0             # duplicate requests launched
-        self.hedge_wins = 0         # a hedge finished before the primary
-        self.rejected = 0           # admission queue overflow
-        self.queue_depth = 0        # currently waiting on admission
-        self.queue_peak = 0
+    requests = InstrumentAttr()      # client-visible calls entering dispatch
+    dispatched = InstrumentAttr()    # calls actually sent to a backend
+    cache_hits = InstrumentAttr()
+    cache_misses = InstrumentAttr()
+    disk_hits = InstrumentAttr()
+    coalesced = InstrumentAttr()     # joined an identical in-flight request
+    retries = InstrumentAttr()
+    hedges = InstrumentAttr()        # duplicate requests launched
+    hedge_wins = InstrumentAttr()    # a hedge finished before the primary
+    rejected = InstrumentAttr()      # admission queue overflow
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        reg = registry if registry is not None else MetricsRegistry()
+        self.registry = reg
+        self._i_requests = reg.counter("dispatch_requests")
+        self._i_dispatched = reg.counter("dispatch_dispatched")
+        self._i_cache_hits = reg.counter("dispatch_cache_hits")
+        self._i_cache_misses = reg.counter("dispatch_cache_misses")
+        self._i_disk_hits = reg.counter("dispatch_disk_hits")
+        self._i_coalesced = reg.counter("dispatch_coalesced")
+        self._i_retries = reg.counter("dispatch_retries")
+        self._i_hedges = reg.counter("dispatch_hedges")
+        self._i_hedge_wins = reg.counter("dispatch_hedge_wins")
+        self._i_rejected = reg.counter("dispatch_rejected")
+        # admission queue: one gauge carries depth (value) and peak
+        self._queue = reg.gauge("dispatch_queue_depth")
         self.per_backend: dict[str, BackendStats] = {}
-        # requests per effect domain (DESIGN.md §2.2) — which sessions /
-        # hosts / resources drive the traffic
-        self.per_domain: dict[str, int] = {}
         # per-batch stats, attached by the Dispatcher
         self.batch: BatchStats | None = None
         # shared-prefix admission stats, fed by LocalEngineBackend
         self.prefix: PrefixStats | None = None
         self._lock = threading.Lock()
 
+    # -- registry-backed views ----------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        """Currently waiting on admission."""
+        return self._queue.value
+
+    @property
+    def queue_peak(self) -> int:
+        return self._queue.peak
+
+    @property
+    def per_domain(self) -> dict[str, int]:
+        """Requests per effect domain (DESIGN.md §2.2) — which sessions /
+        hosts / resources drive the traffic.  A fresh dict view over the
+        registry's ``domain_requests`` series."""
+        return {dict(labels)["domain"]: c.value
+                for labels, c in
+                self.registry.series("domain_requests").items()}
+
     # -- event hooks ---------------------------------------------------------
 
     def backend(self, name: str) -> BackendStats:
         bs = self.per_backend.get(name)
         if bs is None:
-            bs = self.per_backend[name] = BackendStats()
+            bs = self.per_backend[name] = BackendStats(self.registry, name)
         return bs
 
     def note_domains(self, domains):
         with self._lock:
             for d in domains:
-                self.per_domain[d] = self.per_domain.get(d, 0) + 1
+                self.registry.counter("domain_requests", domain=d).inc()
 
     def note_prefix_batch(self, *, elements, shared_tokens,
                           computed_tokens):
         with self._lock:
             if self.prefix is None:
-                self.prefix = PrefixStats()
+                self.prefix = PrefixStats(self.registry)
             self.prefix.note_batch(elements=elements,
                                    shared_tokens=shared_tokens,
                                    computed_tokens=computed_tokens)
 
     def enqueue(self):
         with self._lock:
-            self.queue_depth += 1
-            self.queue_peak = max(self.queue_peak, self.queue_depth)
+            self._queue.inc()
 
     def dequeue(self):
         with self._lock:
-            self.queue_depth -= 1
+            self._queue.dec()
 
     def observe(self, name: str, seconds: float, *, error: bool = False):
         with self._lock:

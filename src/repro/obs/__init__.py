@@ -1,0 +1,43 @@
+"""``repro.obs`` — unified observability for PopPy (DESIGN.md §4).
+
+Three pieces, one substrate:
+
+* **Span tracing** (:mod:`.spans`): nested, parent-linked spans that
+  propagate across asyncio tasks, offload worker threads, and the sync
+  bridge loop via ``contextvars``.  Off by default; ``maybe_span`` makes
+  the disabled path a single ContextVar read with zero allocation.
+* **Exporters** (:mod:`.export`): Chrome/Perfetto ``trace_event`` JSON
+  (one lane per effect domain / backend replica / decode slot) and an
+  ASCII timeline.
+* **Attribution** (:mod:`.report`): critical path, per-component
+  inclusive/exclusive time, achieved-vs-ideal parallelism against the
+  recorded external DAG, and a top-blockers report.
+* **Metrics** (:mod:`.metrics`): labeled counter/gauge/histogram registry
+  that the dispatch stats classes are views over.
+
+Quickstart::
+
+    from repro import obs
+
+    with obs.tracing() as trz:
+        result = my_poppy_app("...")
+    print(obs.report(trz).render())
+    obs.write_chrome_trace("run.json", trz)   # load in ui.perfetto.dev
+
+Offline: ``python -m repro.obs run.json [--timeline]``.
+"""
+
+from .export import (chrome_trace, load_spans, render_timeline,
+                     write_chrome_trace)
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .report import Component, RunReport, Segment, report
+from .spans import (Span, Tracer, current_span, current_tracer, maybe_span,
+                    tracing)
+
+__all__ = [
+    "Span", "Tracer", "tracing", "current_tracer", "current_span",
+    "maybe_span",
+    "chrome_trace", "write_chrome_trace", "load_spans", "render_timeline",
+    "report", "RunReport", "Segment", "Component",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+]

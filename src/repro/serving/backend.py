@@ -11,6 +11,7 @@ from __future__ import annotations
 import asyncio
 
 from repro.core.ai import Backend, ambient_dispatch_stats
+from repro.obs.spans import maybe_span
 from repro.serving.tokenizer import ByteTokenizer
 
 
@@ -92,7 +93,8 @@ class LocalEngineBackend(Backend):
                 # decoding a result nobody will read
                 task.cancel()
                 raise
-        return self.tok.decode(out)
+        with maybe_span("detokenize", cat="serving.detok", n=len(out)):
+            return self.tok.decode(out)
 
     async def embed(self, text):
         toks = self.tok.encode(text)[:8]

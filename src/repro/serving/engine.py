@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.spans import DETACHED, current_tracer, maybe_span
 from repro.serving.prefix_cache import (
     PrefixCache,
     tree_concat,
@@ -64,6 +65,12 @@ class Request:
     submitted_at: float = 0.0
     started_at: float = 0.0
     finished_at: float = 0.0
+    # observability: the client-side request span (and its tracer) — the
+    # scheduler loop parents its per-request work (admission, prefill
+    # chunks) under it explicitly, since the loop task doesn't run in the
+    # submitting client's context
+    trz: object = None
+    span: object = None
 
     @property
     def abandoned(self) -> bool:
@@ -90,6 +97,8 @@ class _PrefillTask:
     acc: object = None                     # KV pytree covering tokens[:covered]
     covered: int = 0
     last_logits: object = None
+    trz: object = None                     # tracer for warm tasks
+    span: object = None                    # warm-task span (open until done)
 
 
 def default_buckets(max_len: int, lo: int = 16) -> tuple:
@@ -209,10 +218,26 @@ class ServingEngine:
         req = Request(prompt_tokens, max_new_tokens, temperature,
                       done=asyncio.get_running_loop().create_future(),
                       submitted_at=time.monotonic())
-        await self.queue.put(req)
-        self._wake_event().set()
-        self.ensure_running()
-        return await req.done
+        trz = current_tracer()
+        if trz is None:
+            await self.queue.put(req)
+            self._wake_event().set()
+            self.ensure_running()
+            return await req.done
+        # the request span covers the whole lifecycle (queue wait →
+        # admission → prefill chunks → shared decode steps → finish) from
+        # the client's side; scheduler-side spans attach to it by parent
+        req.trz = trz
+        with trz.span("request", cat="serving.request",
+                      n_prompt=len(prompt_tokens),
+                      max_new=max_new_tokens) as sp:
+            req.span = sp
+            await self.queue.put(req)
+            self._wake_event().set()
+            self.ensure_running()
+            out = await req.done
+            sp.attrs["n_out"] = len(out)
+            return out
 
     def _wake_event(self) -> asyncio.Event:
         # py3.10 asyncio primitives bind to their first loop; the engine
@@ -234,10 +259,20 @@ class ServingEngine:
         if len(tokens) < 2:
             return None
         fut = asyncio.get_running_loop().create_future()
-        self._warm_waiting.append(_PrefillTask(tokens=tokens, done=fut))
+        task = _PrefillTask(tokens=tokens, done=fut)
+        trz = current_tracer()
+        if trz is not None:
+            task.trz = trz
+            task.span = trz.begin("warm_prefix", cat="serving.prefix",
+                                  tokens=len(tokens))
+        self._warm_waiting.append(task)
         self._wake_event().set()
         self.ensure_running()
-        computed = await fut
+        try:
+            computed = await fut
+        finally:
+            if task.span is not None:
+                trz.end(task.span)
         return {"tokens": len(tokens), "computed": computed}
 
     def reset_prefix_cache(self):
@@ -380,6 +415,10 @@ class ServingEngine:
         task.handle = handle
         task.pinned_in = self.prefix_cache
         self.prefill_tokens_reused += matched
+        # prefix-cache hit depth, on the request (or warm-task) span
+        sp = task.req.span if task.req is not None else task.span
+        if sp is not None:
+            sp.attrs["prefix_matched"] = matched
 
     def _release(self, task: _PrefillTask):
         # release into the instance that was pinned — reset_prefix_cache
@@ -408,9 +447,21 @@ class ServingEngine:
         if self.prefill_chunk:
             chunk = min(chunk, self.prefill_chunk)
         seg = task.tokens[task.covered:task.covered + chunk]
+        trz = task.req.trz if task.req is not None else task.trz
+        psp = None
+        if trz is not None:
+            psp = trz.begin(
+                "prefill.chunk", cat="serving.prefill",
+                parent=(task.req.span if task.req is not None
+                        else task.span),
+                track=(f"slot:{task.slot}" if task.slot >= 0
+                       else "prefill"),
+                tokens=chunk, covered=task.covered)
         logits, kvseg = self._run_prefill(
             seg, task.acc, task.covered,
             prefix_key=task.tokens[:task.covered])
+        if psp is not None:
+            trz.end(psp)
         task.acc = kvseg if task.acc is None \
             else tree_concat([task.acc, kvseg], self._seq_axes)
         task.covered += chunk
@@ -478,6 +529,12 @@ class ServingEngine:
             req.started_at = time.monotonic()
             slot = self.free_slots.pop()
             req.slot = slot
+            if req.span is not None:
+                req.span.attrs["slot"] = slot
+                req.span.attrs["queue_s"] = req.started_at - req.submitted_at
+                req.trz.event("admit", cat="serving.admit",
+                              parent=req.span, track=f"slot:{slot}",
+                              slot=slot)
             if self._paged:
                 self._pending.append(_PrefillTask(
                     tokens=tuple(req.prompt_tokens), req=req, slot=slot))
@@ -504,6 +561,15 @@ class ServingEngine:
                 self._finish(slot)
 
     def _decode_once(self):
+        # decode steps serve the whole batch: record them detached on the
+        # engine's decode track (not under any one request), on whichever
+        # tracer the active requests carry
+        trz = next((r.trz for r in self.active.values()
+                    if r.trz is not None), None)
+        dsp = trz.begin("decode.step", cat="serving.decode",
+                        parent=DETACHED, track="decode",
+                        occupancy=len(self.active)) \
+            if trz is not None else None
         logits, self.cache = self._decode(
             self.params, self.cache, self.cur_tokens, self.positions)
         self.steps += 1
@@ -530,6 +596,8 @@ class ServingEngine:
             new_pos[slot] += 1
         self.cur_tokens = jnp.asarray(new_cur)
         self.positions = jnp.asarray(new_pos)
+        if dsp is not None:
+            trz.end(dsp)
 
     async def _loop(self):
         while not self._stop:

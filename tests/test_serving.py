@@ -141,3 +141,51 @@ def test_engine_backed_llm_autobatched(served):
     assert outs == ref
     assert max(engine.batch_occupancy) >= 2, \
         "batched PopPy calls did not share decode batches"
+
+
+def test_traced_serving_spans(served):
+    """Span tracing across the serving engine (DESIGN.md §4): each request
+    gets a ``serving.request`` span carrying slot/queue attrs, prefill
+    chunks parent under their request on the slot's lane, decode steps
+    record detached on the shared ``decode`` track with batch occupancy,
+    and admissions land as instant events."""
+    from repro import obs
+
+    cfg, model, params = served
+    engine = ServingEngine(model, params, max_slots=4, max_len=64,
+                           prefill_chunk=2)
+    prompts = [[1, 2, 3, 4, 5], [9, 8, 7], [42, 5, 6, 11]]
+
+    async def go():
+        outs = await asyncio.gather(*[
+            engine.generate(p, max_new_tokens=4) for p in prompts])
+        await engine.stop()
+        return outs
+
+    with obs.tracing() as trz:
+        outs = asyncio.run(go())
+    for p, o in zip(prompts, outs):
+        assert o == greedy_reference(model, params, p, 4)
+
+    spans = trz.closed_spans()
+    reqs = [s for s in spans if s.cat == "serving.request"]
+    assert len(reqs) == len(prompts)
+    for sp in reqs:
+        assert sp.attrs["n_out"] == 4
+        assert "slot" in sp.attrs and "queue_s" in sp.attrs
+    req_ids = {s.span_id for s in reqs}
+    prefills = [s for s in spans if s.cat == "serving.prefill"]
+    assert prefills, "no prefill.chunk spans recorded"
+    for sp in prefills:
+        assert sp.parent_id in req_ids
+        assert sp.track.startswith("slot:")
+        assert sp.attrs["tokens"] <= 2      # chunked at prefill_chunk
+    decodes = [s for s in spans if s.cat == "serving.decode"]
+    assert decodes, "no decode.step spans recorded"
+    for sp in decodes:
+        # decode steps serve the whole batch: detached, on one track
+        assert sp.parent_id == 0 and sp.track == "decode"
+    assert max(sp.attrs["occupancy"] for sp in decodes) >= 2
+    admits = [e for e in trz.instants if e.cat == "serving.admit"]
+    assert len(admits) == len(prompts)
+    assert {e.parent_id for e in admits} <= req_ids
