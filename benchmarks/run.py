@@ -46,7 +46,8 @@ def smoke(out_path=SMOKE_JSON):
     ``benchmarks/baseline.json``."""
     from benchmarks import (fig5_speedup, fig9_dispatch, fig10_sync_offload,
                             fig11_effect_domains, fig12_autobatch,
-                            fig13_prefix_prefill, obs_overhead)
+                            fig13_prefix_prefill, fig14_paged_kv,
+                            obs_overhead)
 
     t0 = time.time()
     figures = {}
@@ -102,6 +103,16 @@ def smoke(out_path=SMOKE_JSON):
             lambda r: {"prefix_vs_nocache":
                        r["speedup_prefix_vs_nocache"],
                        "jit_headroom": r["jit_headroom"]})
+    # fig14 asserts token-exactness + ≡_A + zero-copy admission + both
+    # compile bounds every trial; admitted_users_ratio is a capacity
+    # count (not a timing), so the gate tracks it even at smoke scale,
+    # and jit_headroom guards against recompile-per-length on the paged
+    # prefill path
+    attempt("fig14", "paged-KV token equality + ≡_A + zero-copy + "
+                     "compile bounds",
+            lambda: fig14_paged_kv.run(trials=1, smoke=True),
+            lambda r: {"admitted_users_ratio": r["admitted_users_ratio"],
+                       "jit_headroom": r["jit_headroom"]})
     # obs_overhead asserts the tracing-enabled overhead bar (<5% pairwise
     # delta on fig5 tiny-N) and critical-path attribution soundness; an
     # assertion failure surfaces through the same equivalence machinery
@@ -144,7 +155,8 @@ def main():
     from benchmarks import (fig5_speedup, fig6_trace, fig7_overhead,
                             fig8_scaling, fig10_sync_offload,
                             fig11_effect_domains, fig12_autobatch,
-                            fig13_prefix_prefill, table1_characteristics)
+                            fig13_prefix_prefill, fig14_paged_kv,
+                            table1_characteristics)
 
     print("=" * 72)
     print("Table 1 — benchmark program characteristics")
@@ -187,6 +199,12 @@ def main():
     print("=" * 72)
     fig13_prefix_prefill.run(trials=trials,
                              n=8 if args.quick else 16)
+
+    print("\n" + "=" * 72)
+    print("Fig. 14 — paged KV: admitted users at fixed memory, zero-copy "
+          "prefix sharing")
+    print("=" * 72)
+    fig14_paged_kv.run(trials=trials)
 
     print("\n" + "=" * 72)
     print("Fig. 6 — ToT execution trace (queue → dispatch → resolve)")

@@ -1,0 +1,114 @@
+"""Paged decode-attention kernel (TPU Pallas) — page-table gather at decode.
+
+The serving engine stores KV in fixed-size *pages* (a pool of
+[num_pages, page_size, KVH, d] blocks) with a per-sequence page table
+instead of one contiguous [max_len] slab per slot.  At decode, each grid
+step streams one page of K/V through VMEM: the page table and the
+per-sequence lengths ride in as *scalar-prefetched* operands
+(``pltpu.PrefetchScalarGridSpec``), so the K/V BlockSpec index maps read
+``page_table[b, pi]`` to pick which pool block the DMA fetches — the
+gather happens in the memory system, never materializing a contiguous
+copy of the cache.
+
+Grid (batch, kv_heads, n_pages); per-step math is the same online-softmax
+split-K accumulation as ``decode_attention`` (flash-decoding), with the
+split boundary at page granularity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                  acc_scr, *, page_size, n_pages, scale, window):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # [G, d]
+    k = k_ref[0, :, 0].astype(jnp.float32)          # [page_size, d]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    length = len_ref[b]
+    jpos = pi * page_size + jax.lax.iota(jnp.int32, page_size)
+    ok = jpos < length                              # [page_size] bool
+    if window > 0:
+        ok &= jpos >= length - window
+    # zero invalid v rows: stale/unwritten page slots would poison p@v
+    v = jnp.where(ok[:, None], v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(ok[None, :], s, NEG_INF)          # [G, page_size]
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(ok[None, :], jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(q, k_pages, v_pages, page_table, lengths, *,
+                               window=0, interpret=False):
+    """q: [B,1,H,d]; k_pages,v_pages: [P,ps,KVH,d]; page_table: [B,N] int32;
+    lengths: [B] int32 → [B,1,H,d]."""
+    B, _, H, d = q.shape
+    ps, KVH = k_pages.shape[1], k_pages.shape[2]
+    N = page_table.shape[1]
+    G = H // KVH
+    scale = d ** -0.5
+
+    # [B, KVH, G, d] — the q-group of each kv head (h = kv_head * G + g)
+    qt = q[:, 0].reshape(B, KVH, G, d)
+
+    kernel = functools.partial(_paged_kernel, page_size=ps, n_pages=N,
+                               scale=scale, window=window)
+    # page_table / lengths are scalar-prefetched: available to the K/V
+    # index maps, which select pool block pt[b, pi] for grid step (b,·,pi)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, N),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d),
+                         lambda b, h, pi, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b, h, pi, pt, ln: (pt[b, pi], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, d),
+                         lambda b, h, pi, pt, ln: (pt[b, pi], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d),
+                               lambda b, h, pi, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, d), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qt, k_pages, v_pages)
+    return out.reshape(B, 1, H, d)

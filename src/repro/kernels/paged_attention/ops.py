@@ -1,0 +1,51 @@
+"""Public dispatch for paged decode attention (inference-only: no VJP).
+
+Mirrors ``decode_attention``'s dispatch: the Pallas kernel on TPU (or its
+interpreter on CPU), and an XLA fallback that performs the page gather
+with ``jnp.take`` + dense masked attention where Pallas can't lower
+(non-TPU hosts, dry-runs).  Both paths share the signature so
+``models/attention.py`` can swap them on ``cfg.attention_impl``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_decode_attention_fwd
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           window=0, interpret=False):
+    """Pallas path.  q: [B,1,H,d]; k_pages,v_pages: [P,ps,KVH,d];
+    page_table: [B,N] int32; lengths: [B] int32 → [B,1,H,d]."""
+    return paged_decode_attention_fwd(q, k_pages, v_pages, page_table,
+                                      lengths, window=window,
+                                      interpret=interpret)
+
+
+def paged_decode_attention_xla(q, k_pages, v_pages, page_table, lengths, *,
+                               window=0):
+    """XLA gather fallback: one advanced-index gather of the referenced
+    pages into a dense [B, N·ps] view, then the same masked GQA attention
+    the contiguous decode path computes (``mha_reference`` score/softmax
+    ordering, so paged and contiguous engines stay token-exact)."""
+    B, _, H, d = q.shape
+    ps, KVH = k_pages.shape[1], k_pages.shape[2]
+    N = page_table.shape[1]
+    G = H // KVH
+    k = k_pages[page_table].reshape(B, N * ps, KVH, d)
+    v = v_pages[page_table].reshape(B, N * ps, KVH, d)
+    j = jnp.arange(N * ps)[None, :]
+    valid = j < lengths[:, None]
+    if window > 0:
+        valid &= j >= lengths[:, None] - window
+    # mha_reference-ordered math (models/attention.py): scores in input
+    # dtype upcast to f32, softmax f32, probs cast back for the v matmul
+    qg = q[:, 0].reshape(B, KVH, G, d)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k).astype(jnp.float32) \
+        * (d ** -0.5)
+    scores = jnp.where(valid[:, None, None, :], scores, -2.0e38)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, 1, H, d)

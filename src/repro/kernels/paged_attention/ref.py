@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the paged decode-attention kernel.
+
+Naive formulation on purpose: gather the per-sequence pages into a dense
+[B, N·ps] KV view, mask, and take a full f32 softmax — no online-softmax
+rescaling, no page streaming — so the Pallas kernel and the XLA fallback
+are validated against independently structured math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
+                               window=0):
+    """q: [B,1,H,d]; k_pages,v_pages: [P,ps,KVH,d] page pools;
+    page_table: [B,N] int32 page ids; lengths: [B] int32 valid KV counts
+    → [B,1,H,d].  ``window`` > 0 restricts keys to the last ``window``
+    positions (positions in (lengths-1-window, lengths-1])."""
+    B, _, H, d = q.shape
+    ps, KVH = k_pages.shape[1], k_pages.shape[2]
+    N = page_table.shape[1]
+    G = H // KVH
+    k = k_pages[page_table].reshape(B, N * ps, KVH, d)
+    v = v_pages[page_table].reshape(B, N * ps, KVH, d)
+    j = jnp.arange(N * ps)[None, :]
+    valid = j < lengths[:, None]
+    if window > 0:
+        valid &= j >= lengths[:, None] - window
+    qg = q[:, 0].reshape(B, KVH, G, d)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # zero masked v rows: stale pages may hold arbitrary (finite) values,
+    # but the oracle must not rely on 0-prob × garbage staying finite
+    vz = jnp.where(valid[:, :, None, None], v.astype(jnp.float32), 0.0)
+    o = jnp.einsum("bkgc,bckd->bkgd", p, vz)
+    return o.reshape(B, 1, H, d).astype(q.dtype)

@@ -344,6 +344,74 @@ def decode_attention(cfg, p, x, cache, positions, *, window=0):
     return out, new_cache
 
 
+# ---------------------------------------------------------------------------
+# paged decode (block-paged KV pools, DESIGN.md §3.3)
+
+
+def init_paged_kv_cache(cfg, num_pages, page_size, dtype):
+    """Block-paged KV pool: [num_pages, page_size, KVH, hd] per leaf.  A
+    sequence's cache is the pages its table references, so the pool's
+    "batch" axis is the page axis — per-slot slabs disappear.  Gated to
+    un-quantized global attention (the serving engine checks
+    ``Model.prefix_seq_axes``)."""
+    assert cfg.kv_cache_dtype != "int8", "paged KV requires unquantized KV"
+    KVH, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((num_pages, page_size, KVH, hd), dtype),
+        "v": jnp.zeros((num_pages, page_size, KVH, hd), dtype),
+    }
+
+
+def paged_decode_attention(cfg, p, x, cache, positions, page_table):
+    """One-token decode over paged KV: x [B,1,D]; cache k/v pools
+    [P,ps,KVH,hd]; positions [B] (index of the current token);
+    page_table [B,N] int32 — entry n holds the pool page storing positions
+    [n·ps, (n+1)·ps).  Returns (out [B,1,D], new_cache).
+
+    The current token's K/V is scatter-written into page
+    ``table[b, pos // ps]`` at offset ``pos % ps`` (always a slot-private
+    page: shared prefix pages are full by construction, so decode never
+    writes into them).  Retired slots point every table entry at the
+    reserved scratch page 0, where their dead writes land harmlessly.
+    """
+    B = x.shape[0]
+    ps = cache["k"].shape[1]
+    N = page_table.shape[1]
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, x)
+    if cfg.use_rope:
+        cos, sin = rope_cos_sin(positions[:, None], cfg.head_dim,
+                                cfg.rope_theta, x.dtype)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    page_ids = jnp.take_along_axis(
+        page_table, jnp.minimum(positions // ps, N - 1)[:, None], axis=1
+    )[:, 0]
+    offs = positions % ps
+    new_cache = {
+        "k": cache["k"].at[page_ids, offs].set(k[:, 0].astype(cache["k"].dtype)),
+        "v": cache["v"].at[page_ids, offs].set(v[:, 0].astype(cache["v"].dtype)),
+    }
+    lengths = positions + 1
+    impl = cfg.attention_impl
+    if impl.startswith("pallas"):
+        from repro.kernels.paged_attention import ops as pa_ops
+        out = pa_ops.paged_decode_attention(
+            q, new_cache["k"], new_cache["v"], page_table, lengths,
+            interpret=(impl == "pallas_interpret"))
+    else:
+        # XLA gather fallback: dense [B, N·ps] view of the referenced
+        # pages + the contiguous path's mha_reference — with N·ps equal to
+        # the contiguous capacity and an identical validity mask, the
+        # logits are bitwise those of the contiguous engine
+        ck = new_cache["k"][page_table].reshape(B, N * ps, -1, cfg.head_dim)
+        cv = new_cache["v"][page_table].reshape(B, N * ps, -1, cfg.head_dim)
+        valid = jnp.arange(N * ps)[None, :] < lengths[:, None]
+        out = mha_reference(q, ck, cv, mask=valid[:, None, None, :])
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
 def cross_attention_cache(cfg, p, enc_out):
     """Precompute cross-attention K/V from encoder output (whisper decode)."""
     k, v = _project_kv(cfg, p, enc_out)

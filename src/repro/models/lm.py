@@ -247,6 +247,26 @@ def init_cache(cfg, batch, capacity, *, abstract=False):
     return cache
 
 
+def init_paged_cache(cfg, num_pages, page_size):
+    """Block-paged KV pool pytree: {"layers": [n_groups, P, ps, KVH, hd]}
+    leaves (same structure as :func:`init_cache` with the batch axis
+    reinterpreted as the page axis).  Attention-only families — recurrent /
+    hybrid / windowed state has no positional page decomposition."""
+    group_kinds, n_groups, tail_kinds = _layer_groups(cfg)
+    if tail_kinds or any(k not in ("attn_mlp", "attn_moe")
+                         for k in group_kinds):
+        raise ValueError(
+            f"{cfg.name}: paged KV requires uniform global-attention "
+            f"blocks, got {group_kinds} + tail {tail_kinds}")
+    dtype = cfg.activation_dtype
+    group = {f"b{i}": att.init_paged_kv_cache(cfg, num_pages, page_size,
+                                              dtype)
+             for i, k in enumerate(group_kinds)}
+    stacked = jax.tree.map(
+        lambda s: jnp.broadcast_to(s, (n_groups,) + s.shape).copy(), group)
+    return {"layers": stacked}
+
+
 # ---------------------------------------------------------------------------
 # decode
 
@@ -313,6 +333,50 @@ def decode_step(cfg, params, cache, tokens, positions):
     h = apply_norm(cfg, params["final_norm"], h)
     logits = logits_from_hidden(cfg, params, h)
     return logits[:, 0], new_cache
+
+
+def decode_step_paged(cfg, params, cache, tokens, positions, page_table):
+    """One decode step over block-paged KV pools: tokens [B,1], positions
+    [B], page_table [B,N] int32 (shared by every layer — pages are
+    allocated per sequence, and each layer's pool leaf stores that
+    sequence's pages at the same ids).  Returns (logits [B,V],
+    new_cache)."""
+    h = params["embed"].astype(cfg.activation_dtype)[tokens]
+    h = shard_hint(h, "act_hidden")
+    group_kinds, n_groups, _ = _layer_groups(cfg)
+
+    def group_fn(h, inp):
+        gp, gcache = inp
+        new_caches = {}
+        for i, kind in enumerate(group_kinds):
+            p = gp[f"b{i}"]
+            a, nc = att.paged_decode_attention(
+                cfg, p["attn"], apply_norm(cfg, p["ln1"], h),
+                gcache[f"b{i}"], positions, page_table)
+            h = h + a
+            x = apply_norm(cfg, p["ln2"], h)
+            if kind == "attn_moe":
+                m, _ = moemod.apply_moe(cfg, p["moe"], x)
+            else:
+                m = mlpmod.apply_mlp(cfg, p["mlp"], x)
+            h = h + m
+            new_caches[f"b{i}"] = nc
+        return h, new_caches
+
+    if cfg.scan_layers:
+        h, new_stacked = jax.lax.scan(
+            group_fn, h, (params["layers"], cache["layers"]))
+    else:
+        new_list = []
+        for i in range(n_groups):
+            h, nc = group_fn(h, (params["layers"][f"g{i}"],
+                                 jax.tree.map(lambda c: c[i],
+                                              cache["layers"])))
+            new_list.append(nc)
+        new_stacked = _stack_cache(new_list)
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits = logits_from_hidden(cfg, params, h)
+    return logits[:, 0], {"layers": new_stacked}
 
 
 # ---------------------------------------------------------------------------

@@ -125,6 +125,27 @@ class Model:
                                       positions)
         return lm.decode_step(self.cfg, params, cache, tokens, positions)
 
+    # -- paged KV (block-paged serving layout, DESIGN.md §3.3) -----------------
+
+    def init_paged_cache(self, num_pages, page_size):
+        """Block-paged KV pool: leaves [n_groups, num_pages, page_size,
+        KVH, hd].  Only for models whose cache is positionally sliceable
+        (:meth:`prefix_seq_axes` is not None) — recurrent/hybrid/enc_dec/
+        int8-KV/windowed models have no page decomposition and stay on the
+        contiguous engine."""
+        if self.prefix_seq_axes() is None:
+            raise ValueError(
+                f"{self.cfg.name}: KV is not positionally sliceable — "
+                f"paged layout unsupported")
+        return lm.init_paged_cache(self.cfg, num_pages, page_size)
+
+    def decode_step_paged(self, params, cache, tokens, positions,
+                          page_table):
+        """tokens [B,1], positions [B], page_table [B,N] int32 →
+        (logits [B,V], new_cache)."""
+        return lm.decode_step_paged(self.cfg, params, cache, tokens,
+                                    positions, page_table)
+
 
 def build_model(cfg) -> Model:
     return Model(cfg)

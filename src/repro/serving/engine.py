@@ -44,10 +44,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
 from repro.obs.spans import DETACHED, current_tracer, maybe_span
 from repro.serving.prefix_cache import (
+    PagedPrefixCache,
     PrefixCache,
     tree_concat,
+    tree_nbytes,
     tree_pad_to,
     tree_slice,
 )
@@ -99,6 +102,99 @@ class _PrefillTask:
     last_logits: object = None
     trz: object = None                     # tracer for warm tasks
     span: object = None                    # warm-task span (open until done)
+    # paged-KV ownership (kv_layout == "paged")
+    page_row: list | None = None           # matched + fresh page ids, in order
+    fresh_ids: list | None = None          # pages this task allocated itself
+
+
+class PageAllocator:
+    """Free-list allocator over the KV page pool (DESIGN.md §3.3).
+
+    Page 0 is reserved as *scratch*: retired slots' page tables point at
+    it, so their (masked) per-step decode writes land somewhere harmless
+    instead of corrupting live pages.  Every other page is handed out
+    with refcount 1; the radix trie and admitted slots take additional
+    refs on shared prefix pages, and a page returns to the free list only
+    when its last owner drops it — there is no copying anywhere in the
+    ownership protocol.
+
+    Metrics (PR 6 registry): ``serving_pages_free`` / ``serving_pages_pinned``
+    gauges and ``serving_page_fault`` / ``serving_page_evict`` counters.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, *, metrics=None):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free = list(range(num_pages, 0, -1))  # pop() yields 1, 2, ...
+        self._refs = np.zeros(num_pages + 1, np.int64)
+        self.page_faults = 0
+        self.page_evicts = 0
+        self._c_fault = metrics.counter("serving_page_fault") \
+            if metrics else None
+        self._c_evict = metrics.counter("serving_page_evict") \
+            if metrics else None
+        self._g_free = metrics.gauge("serving_pages_free") \
+            if metrics else None
+        self._g_pinned = metrics.gauge("serving_pages_pinned") \
+            if metrics else None
+        if self._g_free is not None:
+            self._g_free.set(num_pages)
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list | None:
+        """n pages at refcount 1, or None (all-or-nothing: a partial grant
+        would deadlock admission)."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        for i in ids:
+            self._refs[i] = 1
+        self._note_free()
+        return ids
+
+    def incref(self, ids) -> None:
+        for i in ids:
+            assert i != 0 and self._refs[i] > 0, f"incref of dead page {i}"
+            self._refs[i] += 1
+
+    def decref(self, ids) -> int:
+        """Drop one ref per id; pages reaching 0 return to the free list.
+        Returns how many were freed."""
+        freed = 0
+        for i in ids:
+            self._refs[i] -= 1
+            assert self._refs[i] >= 0, f"double free of page {i}"
+            if self._refs[i] == 0:
+                self._free.append(i)
+                freed += 1
+        if freed:
+            self._note_free()
+        return freed
+
+    def refcount(self, i: int) -> int:
+        return int(self._refs[i])
+
+    def note_fault(self) -> None:
+        """Admission found too few free pages and must reclaim/stall."""
+        self.page_faults += 1
+        if self._c_fault is not None:
+            self._c_fault.inc()
+
+    def note_evict(self, n: int) -> None:
+        self.page_evicts += n
+        if self._c_evict is not None:
+            self._c_evict.inc(n)
+
+    def set_pinned(self, n: int) -> None:
+        if self._g_pinned is not None:
+            self._g_pinned.set(n)
+
+    def _note_free(self) -> None:
+        if self._g_free is not None:
+            self._g_free.set(len(self._free))
 
 
 def default_buckets(max_len: int, lo: int = 16) -> tuple:
@@ -126,7 +222,8 @@ class ServingEngine:
                  eos_token=None, step_sleep=0.0,
                  prefix_cache_budget=64 * 1024 * 1024,
                  prefill_chunk=None, prefill_buckets=None,
-                 idle_quiesce_s=1.0):
+                 idle_quiesce_s=1.0, page_size=16, num_pages=None,
+                 kv_layout=None, metrics=None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -135,6 +232,7 @@ class ServingEngine:
         self.eos_token = eos_token
         self.step_sleep = step_sleep
         self.idle_quiesce_s = idle_quiesce_s
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.queue: asyncio.Queue[Request] = asyncio.Queue()
         self.active: dict[int, Request] = {}
         self.free_slots = list(range(max_slots))
@@ -147,6 +245,7 @@ class ServingEngine:
         self.steps = 0
         self.decode_tokens = 0
         self.batch_occupancy: list[int] = []
+        self.decode_step_s: list[float] = []
         self.prefill_shapes: set = set()
         # (prefix tokens, padded length) -> padded prefix KV.  A burst of
         # fan-out requests shares one matched prefix; without this every
@@ -158,50 +257,155 @@ class ServingEngine:
         self.prefill_chunks = 0
         self.prefill_tokens_computed = 0
         self.prefill_tokens_reused = 0
+        # KV copied into the decode cache at admission.  The paged engine
+        # must keep this at 0 for shared prefixes: a cache hit appends
+        # page *references* (fig14 asserts it); the contiguous engine
+        # splices a copy per admit.
+        self.kv_admit_copies = 0
+        self.admit_stalls = 0
 
-        self.cache = model.init_cache(max_slots, max_len)
+        # prefix-aware prefill machinery: only for models whose cache is
+        # positionally sliceable; others keep the exact-length path
+        self._seq_axes = model.prefix_seq_axes()
+        self._paged = self._seq_axes is not None
+        if kv_layout not in (None, "paged", "contiguous"):
+            raise ValueError(f"kv_layout must be 'paged' or 'contiguous', "
+                             f"got {kv_layout!r}")
+        # block-paged KV is the default wherever it is sound; models with
+        # non-sliceable state (recurrent/hybrid/enc_dec/int8/windowed)
+        # silently keep the contiguous slab
+        self.kv_layout = "contiguous" if not self._paged \
+            else (kv_layout or "paged")
+        self.paged_kv = self.kv_layout == "paged"
+
         self.positions = jnp.zeros((max_slots,), jnp.int32)
         self.cur_tokens = jnp.zeros((max_slots, 1), jnp.int32)
         self.live = np.zeros((max_slots,), bool)
         self._rng = jax.random.PRNGKey(0)
-
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self._sample_all = jax.jit(sample_tokens_batched)
 
-        # prefix-aware (paged) prefill: only for models whose cache is
-        # positionally sliceable; others keep the exact-length path
-        self._seq_axes = model.prefix_seq_axes()
-        self._paged = self._seq_axes is not None
         if self._paged:
-            self._buckets = tuple(sorted(prefill_buckets)) \
-                if prefill_buckets else default_buckets(max_len)
+            if self.paged_kv:
+                if page_size < 1 or max_len % page_size:
+                    raise ValueError(
+                        f"max_len {max_len} must be a positive multiple of "
+                        f"page_size {page_size}")
+                self._buckets = tuple(sorted(prefill_buckets)) \
+                    if prefill_buckets \
+                    else default_buckets(max_len, lo=max(16, page_size))
+                bad = [b for b in self._buckets if b % page_size]
+                if bad:
+                    raise ValueError(
+                        f"prefill buckets {bad} are not multiples of "
+                        f"page_size {page_size} (finalize scatters whole "
+                        f"pages)")
+            else:
+                self._buckets = tuple(sorted(prefill_buckets)) \
+                    if prefill_buckets else default_buckets(max_len)
             self._empty_prefix = tree_slice(
                 model.init_cache(1, 1), self._seq_axes, 0, 0)
-            self.prefix_cache = (
-                PrefixCache(self._seq_axes, prefix_cache_budget)
-                if prefix_cache_budget else None)
             self._prefill_px = jax.jit(
                 lambda p, toks, pfx, plen, lidx: model.prefill(
                     p, {"tokens": toks}, capacity=toks.shape[1],
                     prefix=pfx, prefix_len=plen, last_index=lidx))
-
-            def _splice_fn(cache, new, slot):
-                # donated in-place slot write: without it every admission
-                # copies the whole decode cache (max_slots · max_len KV)
-                def write(ax, cur, seg):
-                    start = [0] * cur.ndim
-                    start[ax - 1] = slot  # batch axis precedes seq axis
-                    return jax.lax.dynamic_update_slice(
-                        cur, seg.astype(cur.dtype), tuple(start))
-                return jax.tree.map(write, self._seq_axes, cache, new)
-
-            self._splice = jax.jit(_splice_fn, donate_argnums=(0,))
         else:
             self._buckets = ()
-            self.prefix_cache = None
         self.prefill_chunk = prefill_chunk if self._paged else None
         self._prefill_exact = jax.jit(
             lambda p, b: model.prefill(p, b, capacity=max_len))
+
+        if self.paged_kv:
+            self._init_paged(page_size, num_pages, prefix_cache_budget)
+        else:
+            self.page_size = None
+            self.num_pages = 0
+            self.allocator = None
+            self._wait_pages: list[Request] = []
+            self.page_op_shapes: set = set()
+            self.cache = model.init_cache(max_slots, max_len)
+            self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+            self.prefix_cache = (
+                PrefixCache(self._seq_axes, prefix_cache_budget)
+                if (self._paged and prefix_cache_budget) else None)
+            if self._paged:
+                def _splice_fn(cache, new, slot):
+                    # donated in-place slot write: without it every
+                    # admission copies the whole decode cache
+                    # (max_slots · max_len KV)
+                    def write(ax, cur, seg):
+                        start = [0] * cur.ndim
+                        start[ax - 1] = slot  # batch axis precedes seq
+                        return jax.lax.dynamic_update_slice(
+                            cur, seg.astype(cur.dtype), tuple(start))
+                    return jax.tree.map(write, self._seq_axes, cache, new)
+
+                self._splice = jax.jit(_splice_fn, donate_argnums=(0,))
+
+    def _init_paged(self, page_size, num_pages, prefix_cache_budget):
+        """Block-paged KV state: a page pool shared by all slots + the
+        radix trie, per-slot page tables, and the jitted page ops
+        (gather for prefill reuse, scatter-fill at finalize, paged decode
+        step).  Page 0 is allocator scratch — retired slots and padding
+        point at it."""
+        self.page_size = page_size
+        self.pages_per_slot = self.max_len // page_size
+        self.num_pages = int(num_pages) if num_pages \
+            else self.max_slots * self.pages_per_slot
+        if self.num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {self.num_pages}")
+        # a pool smaller than one full sequence is fine (short-request
+        # traffic): generate() rejects any request whose eager page need
+        # exceeds the pool, so admission can never stall forever
+        self.allocator = PageAllocator(self.num_pages, page_size,
+                                       metrics=self.metrics)
+        # pool leaf shape: [n_groups, num_pages+1, page_size, KVH, hd]
+        self.kv_pages = self.model.init_paged_cache(self.num_pages + 1,
+                                                    page_size)
+        self._page_table = np.zeros((self.max_slots, self.pages_per_slot),
+                                    np.int32)
+        self._table_dev = jnp.asarray(self._page_table)
+        self._table_dirty = False
+        self._slot_pages: dict[int, list] = {}
+        self._wait_pages: list[Request] = []   # admission backpressure
+        self.page_op_shapes: set = set()
+        self.cache = None
+        self._decode_paged = jax.jit(self.model.decode_step_paged,
+                                     donate_argnums=(1,))
+        self._page_gather = jax.jit(self._gather_fn)
+        self._page_fill = jax.jit(self._fill_fn, donate_argnums=(0,))
+        if prefix_cache_budget:
+            page_bytes = tree_nbytes(self.kv_pages) // (self.num_pages + 1)
+            budget_pages = int(prefix_cache_budget // max(1, page_bytes))
+            self.prefix_cache = (
+                PagedPrefixCache(self.allocator, budget_pages)
+                if budget_pages > 0 else None)
+        else:
+            self.prefix_cache = None
+
+    def _gather_fn(self, pools, ids):
+        """Gather pages ``ids`` into a contiguous [*, 1, n·ps, ...] prefix
+        view for prefix-aware prefill.  A transient *read* for attention —
+        the slot's KV stays in the shared pages (no admit copy)."""
+        def g(ax, pool):
+            t = jnp.take(pool, ids, axis=ax - 1)
+            shp = list(t.shape)
+            return t.reshape(shp[:ax - 1] + [1, shp[ax - 1] * shp[ax]]
+                             + shp[ax + 1:])
+        return jax.tree.map(g, self._seq_axes, pools)
+
+    def _fill_fn(self, pools, seg, ids):
+        """Scatter freshly prefilled KV ``seg`` ([*, 1, n·ps, ...]) into
+        pool pages ``ids`` (donated: in-place on the pool).  Padding ids
+        are 0 — the scratch page absorbs them."""
+        n = ids.shape[0]
+
+        def w(ax, pool, s):
+            shp = list(s.shape)
+            pages = s.reshape(shp[:ax - 1] + [n, self.page_size]
+                              + shp[ax + 1:])
+            idx = (slice(None),) * (ax - 1) + (ids,)
+            return pool.at[idx].set(pages.astype(pool.dtype))
+        return jax.tree.map(w, self._seq_axes, pools, seg)
 
     # -- client API -----------------------------------------------------------
 
@@ -215,6 +419,20 @@ class ServingEngine:
             raise ValueError(
                 f"prompt of {len(prompt_tokens)} tokens needs at least "
                 f"one decode position; engine max_len is {self.max_len}")
+        if self.paged_kv:
+            # page-granular admission check: pages are allocated eagerly
+            # for prompt + max_new at admit (no mid-decode OOM), so a
+            # request needing more pages than the whole pool would stall
+            # admission forever — reject it at submission instead
+            total = min(len(prompt_tokens) + max_new_tokens, self.max_len)
+            need = -(-total // self.page_size)
+            if need > self.num_pages:
+                raise ValueError(
+                    f"request needs {need} KV pages ({len(prompt_tokens)} "
+                    f"prompt + {max_new_tokens} new tokens at page_size "
+                    f"{self.page_size}) but the pool holds only "
+                    f"{self.num_pages} pages even with everything "
+                    f"evicted — it could never be admitted")
         req = Request(prompt_tokens, max_new_tokens, temperature,
                       done=asyncio.get_running_loop().create_future(),
                       submitted_at=time.monotonic())
@@ -256,6 +474,10 @@ class ServingEngine:
         if self.prefix_cache is None:
             return None
         tokens = tuple(tokens)[: self.max_len - 1]
+        if self.paged_kv:
+            # only whole pages are shareable: a partial page would be
+            # rewritten by the owner's decode — align the warm target down
+            tokens = tokens[: len(tokens) - len(tokens) % self.page_size]
         if len(tokens) < 2:
             return None
         fut = asyncio.get_running_loop().create_future()
@@ -280,8 +502,14 @@ class ServingEngine:
         budget and the compiled prefill shapes) — benchmarking /
         tenant-isolation hook."""
         if self.prefix_cache is not None:
-            self.prefix_cache = PrefixCache(self._seq_axes,
-                                            self.prefix_cache.budget)
+            if self.paged_kv:
+                # page ownership is ref-counted: drop what nobody pins;
+                # in-flight pinned paths drain normally
+                self.prefix_cache.drop_unpinned()
+                self._update_page_gauges()
+            else:
+                self.prefix_cache = PrefixCache(self._seq_axes,
+                                                self.prefix_cache.budget)
         self._pad_memo.clear()
 
     def ensure_running(self):
@@ -298,23 +526,37 @@ class ServingEngine:
         if exc is None:
             # quiesce raced a submission: restart so nothing strands
             if not self._stop and (not self.queue.empty()
-                                   or self._warm_waiting or self._pending):
+                                   or self._warm_waiting or self._pending
+                                   or self._wait_pages):
                 self.ensure_running()
             return
         # surface scheduler failures to every waiting client; release
-        # prefix-cache pins and reclaim slots so a crash can't leak them
+        # prefix-cache pins, page refs, and slots so a crash leaks nothing
         for t in self._pending + self._warm_waiting:
             fut = t.done if t.req is None else t.req.done
             if fut is not None and not fut.done():
                 fut.set_exception(exc)
             self._release(t)
             if t.req is not None and t.slot >= 0:
-                self.free_slots.append(t.slot)
+                if self.paged_kv:
+                    self._free_slot_paged(t.slot)
+                else:
+                    self.free_slots.append(t.slot)
+            elif self.paged_kv and t.fresh_ids:
+                self.allocator.decref(t.fresh_ids)  # starved warm task
         self._pending.clear()
         self._warm_waiting.clear()
-        for req in list(self.active.values()):
+        for slot, req in list(self.active.items()):
             if req.done and not req.done.done():
                 req.done.set_exception(exc)
+            if self.paged_kv:
+                self.live[slot] = False
+                del self.active[slot]
+                self._free_slot_paged(slot)
+        for req in self._wait_pages:
+            if req.done and not req.done.done():
+                req.done.set_exception(exc)
+        self._wait_pages.clear()
         while not self.queue.empty():
             req = self.queue.get_nowait()
             if req.done and not req.done.done():
@@ -343,8 +585,14 @@ class ServingEngine:
             return None
         return (len(self._buckets) + 1) * len(self._buckets)
 
+    @property
+    def page_op_shape_bound(self) -> int:
+        """Ceiling on paged gather/fill compilations: one shape per
+        (op, bucket) pair."""
+        return 2 * len(self._buckets)
+
     def stats(self) -> dict:
-        return {
+        out = {
             "steps": self.steps,
             "decode_tokens": self.decode_tokens,
             "max_occupancy": max(self.batch_occupancy, default=0),
@@ -355,9 +603,23 @@ class ServingEngine:
             "prefill_chunks": self.prefill_chunks,
             "prefill_tokens_computed": self.prefill_tokens_computed,
             "prefill_tokens_reused": self.prefill_tokens_reused,
+            "kv_layout": self.kv_layout,
+            "kv_admit_copies": self.kv_admit_copies,
             "prefix_cache": self.prefix_cache.stats()
             if self.prefix_cache is not None else None,
         }
+        if self.paged_kv:
+            out["paged"] = {
+                "page_size": self.page_size,
+                "num_pages": self.num_pages,
+                "pages_free": self.allocator.free_count,
+                "page_faults": self.allocator.page_faults,
+                "page_evicts": self.allocator.page_evicts,
+                "admit_stalls": self.admit_stalls,
+                "page_op_shapes": len(self.page_op_shapes),
+                "page_op_shape_bound": self.page_op_shape_bound,
+            }
+        return out
 
     # -- prefill --------------------------------------------------------------
 
@@ -400,25 +662,42 @@ class ServingEngine:
             cache = tree_slice(cache, self._seq_axes, 0, L)
         return logits, cache
 
-    def _prefill_start(self, task: _PrefillTask):
+    def _prefill_start(self, task: _PrefillTask) -> bool:
+        """First-touch setup for a pending task.  On the paged path this
+        only ever sees warm tasks (requests match + allocate inside
+        ``_page_admit``); returns False when a paged warm task can't get
+        pages (best-effort: warming is an optimization, never an error)."""
         task.started = True
         if self.prefix_cache is None:
-            return
+            return True
         # a request must prefill ≥1 suffix token for its first-step logits
         limit = len(task.tokens) - (0 if task.req is None else 1)
         if limit <= 0:
-            return
+            return True
         matched, kv, handle = self.prefix_cache.match_and_pin(
             task.tokens[:limit])
         task.matched = task.covered = matched
-        task.acc = kv
         task.handle = handle
         task.pinned_in = self.prefix_cache
+        if self.paged_kv:
+            mpages = kv  # paged trie returns page ids, not KV
+            n_fresh = (len(task.tokens) - matched) // self.page_size
+            fresh = self._alloc_pages(n_fresh)
+            if fresh is None:
+                return False
+            task.fresh_ids = fresh
+            task.page_row = list(mpages) + fresh
+            task.acc = self._gather_matched(mpages, matched,
+                                            task.tokens[:matched]) \
+                if matched else None
+        else:
+            task.acc = kv
         self.prefill_tokens_reused += matched
         # prefix-cache hit depth, on the request (or warm-task) span
         sp = task.req.span if task.req is not None else task.span
         if sp is not None:
             sp.attrs["prefix_matched"] = matched
+        return True
 
     def _release(self, task: _PrefillTask):
         # release into the instance that was pinned — reset_prefix_cache
@@ -434,10 +713,18 @@ class ServingEngine:
         if task.req is not None and task.req.abandoned:
             self._pending.pop(0)
             self._release(task)
-            self.free_slots.append(task.slot)
+            if self.paged_kv:
+                self._free_slot_paged(task.slot)
+            else:
+                self.free_slots.append(task.slot)
             return
-        if not task.started:
-            self._prefill_start(task)
+        if not task.started and not self._prefill_start(task):
+            # paged warm task starved of pages: complete best-effort
+            self._pending.pop(0)
+            self._release(task)
+            if task.done is not None and not task.done.done():
+                task.done.set_result(0)
+            return
         n = len(task.tokens)
         if task.covered >= n:  # warm task fully served by the cache
             self._pending.pop(0)
@@ -471,6 +758,9 @@ class ServingEngine:
             self._finalize(task)
 
     def _finalize(self, task: _PrefillTask):
+        if self.paged_kv:
+            self._finalize_paged(task)
+            return
         if self.prefix_cache is not None and task.covered > task.matched:
             self.prefix_cache.insert(task.tokens[:task.covered], task.acc)
         self._release(task)
@@ -487,7 +777,52 @@ class ServingEngine:
                           self._bucket(task.covered))
         self.cache = self._splice(self.cache, seg,
                                   jnp.asarray(slot, jnp.int32))
+        self.kv_admit_copies += 1
         self._begin_decode(req, slot, task.last_logits)
+
+    def _finalize_paged(self, task: _PrefillTask):
+        """Scatter freshly computed KV into this task's fresh pages and
+        publish the page-aligned prefix to the trie.  Matched pages are
+        *never* written or copied — the slot's page table already points
+        at them (zero-copy sharing); decode only ever writes the final,
+        unshared partial page."""
+        ps = self.page_size
+        m_pages = task.matched // ps
+        if task.covered > task.matched:
+            n_fill = -(-task.covered // ps) - m_pages
+            nb = self._bucket(task.covered - task.matched) // ps
+            seg = tree_slice(task.acc, self._seq_axes, task.matched,
+                             task.covered)
+            seg = tree_pad_to(seg, self._seq_axes, nb * ps)
+            ids = task.page_row[m_pages:m_pages + n_fill] \
+                + [0] * (nb - n_fill)
+            self.page_op_shapes.add(("fill", nb))
+            with maybe_span("page.fill", cat="serving.paging",
+                            track="paging", pages=n_fill):
+                self.kv_pages = self._page_fill(
+                    self.kv_pages, seg, jnp.asarray(ids, jnp.int32))
+        if self.prefix_cache is not None:
+            aligned = (task.covered // ps) * ps
+            if aligned > 0:
+                self.prefix_cache.insert(task.tokens[:aligned],
+                                         task.page_row[:aligned // ps])
+        self._release(task)
+        if task.req is None:  # warm task: pages live on via the trie refs
+            if task.fresh_ids:
+                self.allocator.decref(task.fresh_ids)
+            self._update_page_gauges()
+            if task.done is not None and not task.done.done():
+                task.done.set_result(task.covered - task.matched)
+            return
+        req = task.req
+        if req.abandoned:  # cancelled while its chunks ran
+            self._free_slot_paged(task.slot)
+            return
+        row = task.page_row
+        self._page_table[task.slot, :] = 0
+        self._page_table[task.slot, :len(row)] = row
+        self._table_dirty = True
+        self._begin_decode(req, task.slot, task.last_logits)
 
     def _begin_decode(self, req: Request, slot: int, logits):
         tok = self._sample(logits, req)
@@ -508,6 +843,7 @@ class ServingEngine:
         self.cache = jax.tree.map(
             lambda cur, new: _write_slot_cache(cur, new, slot),
             self.cache, pcache)
+        self.kv_admit_copies += 1
         self._begin_decode(req, slot, logits)
 
     def _sample(self, logits, req):
@@ -522,6 +858,9 @@ class ServingEngine:
         if self._warm_waiting:
             self._pending.extend(self._warm_waiting)
             self._warm_waiting.clear()
+        if self.paged_kv:
+            self._drain_queue_paged()
+            return
         while self.free_slots and not self.queue.empty():
             req = self.queue.get_nowait()
             if req.abandoned:  # cancelled while queued
@@ -529,23 +868,155 @@ class ServingEngine:
             req.started_at = time.monotonic()
             slot = self.free_slots.pop()
             req.slot = slot
-            if req.span is not None:
-                req.span.attrs["slot"] = slot
-                req.span.attrs["queue_s"] = req.started_at - req.submitted_at
-                req.trz.event("admit", cat="serving.admit",
-                              parent=req.span, track=f"slot:{slot}",
-                              slot=slot)
+            self._note_admit(req, slot)
             if self._paged:
                 self._pending.append(_PrefillTask(
                     tokens=tuple(req.prompt_tokens), req=req, slot=slot))
             else:
                 self._admit_exact(req, slot)
 
+    def _note_admit(self, req: Request, slot: int):
+        if req.span is not None:
+            req.span.attrs["slot"] = slot
+            req.span.attrs["queue_s"] = req.started_at - req.submitted_at
+            req.trz.event("admit", cat="serving.admit",
+                          parent=req.span, track=f"slot:{slot}",
+                          slot=slot)
+
+    # -- paged admission -------------------------------------------------------
+
+    def _drain_queue_paged(self):
+        """Admit in FIFO order under *page* backpressure: a request that
+        can't get its pages parks at the head of ``_wait_pages`` and
+        admission stops (no overtaking — later smaller requests would
+        starve it).  Pages free up as decode retires slots or the trie
+        evicts, and the loop retries every pass."""
+        while self.free_slots and (self._wait_pages
+                                   or not self.queue.empty()):
+            req = self._wait_pages.pop(0) if self._wait_pages \
+                else self.queue.get_nowait()
+            if req.abandoned:  # cancelled while queued/stalled
+                continue
+            task = self._page_admit(req)
+            if task is None:
+                self._wait_pages.insert(0, req)
+                return
+            req.started_at = time.monotonic()
+            self._note_admit(req, task.slot)
+            self._pending.append(task)
+
+    def _page_admit(self, req: Request) -> _PrefillTask | None:
+        """Match the radix trie, then *eagerly* allocate every page the
+        request can ever touch (prompt + max_new, clamped to max_len):
+        admission is the only OOM point, decode never faults.  On a trie
+        hit the matched page ids go straight into the slot's page table —
+        zero KV bytes move."""
+        tokens = tuple(req.prompt_tokens)
+        n = len(tokens)
+        matched, mpages, handle = 0, (), None
+        if self.prefix_cache is not None:
+            # n-1: ≥1 suffix token must prefill for first-step logits
+            matched, mpages, handle = self.prefix_cache.match_and_pin(
+                tokens[:n - 1])
+        total = min(n + req.max_new_tokens, self.max_len)
+        need = -(-total // self.page_size) - matched // self.page_size
+        with maybe_span("page.alloc", cat="serving.paging", track="paging",
+                        need=need, matched_pages=matched // self.page_size):
+            fresh = self._alloc_pages(need)
+        if fresh is None:
+            if handle is not None:
+                self.prefix_cache.release(handle)
+            self.admit_stalls += 1
+            if req.trz is not None:
+                req.trz.event("page.stall", cat="serving.paging",
+                              parent=req.span, track="paging", need=need)
+            return None
+        # the slot takes its own ref on shared pages — the trie may evict
+        # its copy of the path while this request still decodes
+        self.allocator.incref(mpages)
+        row = list(mpages) + fresh
+        slot = self.free_slots.pop()
+        req.slot = slot
+        self._slot_pages[slot] = row
+        # the page-table row is NOT installed yet: until _begin_decode the
+        # batched decode step still issues a stale-position write for this
+        # slot, which must land in the scratch page — installing the row
+        # now would let it corrupt a *shared* matched page
+        task = _PrefillTask(tokens=tokens, req=req, slot=slot,
+                            started=True, matched=matched, handle=handle,
+                            pinned_in=self.prefix_cache, page_row=row,
+                            fresh_ids=fresh)
+        task.covered = matched
+        task.acc = self._gather_matched(mpages, matched,
+                                        tokens[:matched]) \
+            if matched else None
+        self.prefill_tokens_reused += matched
+        self._update_page_gauges()
+        if req.span is not None:
+            req.span.attrs["prefix_matched"] = matched
+        return task
+
+    def _alloc_pages(self, need: int) -> list | None:
+        """Allocate ``need`` pages, reclaiming trie LRU leaves on a fault;
+        None when even eviction can't cover it (caller stalls)."""
+        if need <= 0:
+            return []
+        a = self.allocator
+        if a.free_count < need:
+            a.note_fault()
+            if self.prefix_cache is not None:
+                with maybe_span("page.reclaim", cat="serving.paging",
+                                track="paging", need=need):
+                    self.prefix_cache.reclaim(need)
+        ids = a.alloc(need)
+        self._update_page_gauges()
+        return ids
+
+    def _gather_matched(self, mpages, matched: int, key_tokens):
+        """Materialize matched pages as a contiguous prefix view for the
+        prefill kernel (bucketed + memoized like `_run_prefill`'s pad
+        path, so a fan-out burst gathers its shared prefix once).  The
+        memo stores a *copy*, so entries keyed by tokens can never go
+        stale even if the source pages are later evicted and recycled."""
+        tb = self._bucket(matched)
+        key = (key_tokens, tb)
+        pfx = self._pad_memo.get(key)
+        if pfx is None:
+            nb = tb // self.page_size
+            ids = list(mpages) + [0] * (nb - len(mpages))
+            self.page_op_shapes.add(("gather", nb))
+            with maybe_span("page.gather", cat="serving.paging",
+                            track="paging", pages=len(mpages)):
+                pfx = self._page_gather(self.kv_pages,
+                                        jnp.asarray(ids, jnp.int32))
+            if len(self._pad_memo) >= self._pad_memo_cap:
+                self._pad_memo.pop(next(iter(self._pad_memo)))
+            self._pad_memo[key] = pfx
+        return tree_slice(pfx, self._seq_axes, 0, matched)
+
+    def _free_slot_paged(self, slot: int):
+        row = self._slot_pages.pop(slot, None)
+        if row:
+            self.allocator.decref(row)
+            self._update_page_gauges()
+        self._page_table[slot, :] = 0
+        self._table_dirty = True
+        self.free_slots.append(slot)
+
+    def _update_page_gauges(self):
+        ev = self.prefix_cache.evictable_pages() \
+            if self.prefix_cache is not None else 0
+        free = self.allocator.free_count
+        self.allocator.set_pinned(self.num_pages - free - ev)
+
     def _finish(self, slot):
         req = self.active.pop(slot)
         req.finished_at = time.monotonic()
         self.live[slot] = False
-        self.free_slots.append(slot)
+        if self.paged_kv:
+            self._free_slot_paged(slot)
+        else:
+            self.free_slots.append(slot)
         if not req.done.done():
             req.done.set_result(req.out_tokens)
 
@@ -570,8 +1041,17 @@ class ServingEngine:
                         parent=DETACHED, track="decode",
                         occupancy=len(self.active)) \
             if trz is not None else None
-        logits, self.cache = self._decode(
-            self.params, self.cache, self.cur_tokens, self.positions)
+        t0 = time.perf_counter()
+        if self.paged_kv:
+            if self._table_dirty:
+                self._table_dev = jnp.asarray(self._page_table)
+                self._table_dirty = False
+            logits, self.kv_pages = self._decode_paged(
+                self.params, self.kv_pages, self.cur_tokens,
+                self.positions, self._table_dev)
+        else:
+            logits, self.cache = self._decode(
+                self.params, self.cache, self.cur_tokens, self.positions)
         self.steps += 1
         self.batch_occupancy.append(len(self.active))
         stochastic = any(r.temperature > 0.0 for r in self.active.values())
@@ -585,7 +1065,8 @@ class ServingEngine:
             toks = self._sample_all(k, logits, jnp.asarray(temps))
         else:
             toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        nxt = np.asarray(toks)
+        nxt = np.asarray(toks)                # host sync: step really done
+        self.decode_step_s.append(time.perf_counter() - t0)
         new_cur = np.array(self.cur_tokens)   # writable copies
         new_pos = np.array(self.positions)
         for slot, req in self.active.items():
@@ -624,8 +1105,12 @@ class ServingEngine:
             try:
                 await asyncio.wait_for(wake.wait(), self.idle_quiesce_s)
             except asyncio.TimeoutError:
+                # _wait_pages while otherwise idle can't happen under the
+                # generate() page-granularity reject (anything admitted
+                # retires and frees its pages), but don't quiesce past a
+                # stalled request: keep the loop alive to retry
                 if self.queue.empty() and not self._warm_waiting \
-                        and not self._pending:
+                        and not self._pending and not self._wait_pages:
                     return
 
 

@@ -71,6 +71,255 @@ def tree_nbytes(tree) -> int:
 
 
 # ---------------------------------------------------------------------------
+# paged radix trie (page-reference nodes, DESIGN.md §3.3)
+
+
+class _PagedNode:
+    __slots__ = ("tokens", "pages", "children", "parent", "refs",
+                 "last_used")
+
+    def __init__(self, tokens, pages, parent):
+        self.tokens = tokens          # edge label (length ≡ 0 mod page_size)
+        self.pages = tuple(pages)     # pool page ids covering these tokens
+        self.children = {}            # first token -> _PagedNode
+        self.parent = parent
+        self.refs = 0                 # pinned readers
+        self.last_used = 0
+
+
+class PagedPrefixCache:
+    """Radix trie over *page references* instead of materialized KV: a
+    node owns the pool page ids covering its edge tokens, holding one
+    allocator ref per page.  A cache hit returns page ids — the requester
+    appends them to its page table and increfs, so shared-prefix admission
+    copies **zero** KV bytes.  Matching, splitting, insertion, and
+    eviction all happen at page granularity (full pages are immutable by
+    the engine's write discipline; a partial page is never shared).
+
+    Pinning mirrors :class:`PrefixCache`: ``match_and_pin`` bumps node
+    ref-counts along the matched path (so eviction can't free pages a
+    prefill is about to gather), ``release`` walks by tokens and stays
+    balanced across concurrent splits.  Eviction is LRU over unpinned
+    leaves, both under the optional ``budget_pages`` and on demand via
+    :meth:`reclaim` when the allocator runs dry (the admission
+    page-fault path).
+    """
+
+    def __init__(self, allocator, budget_pages=None):
+        self.alloc = allocator
+        self.page_size = allocator.page_size
+        self.budget_pages = budget_pages
+        self.root = _PagedNode((), (), None)
+        self.pages = 0                # pages owned by the trie
+        self._clock = 0
+        self.lookups = 0
+        self.hits = 0
+        self.tokens_queried = 0
+        self.tokens_matched = 0
+        self.inserts = 0
+        self.insert_tokens = 0
+        self.skipped_inserts = 0
+        self.splits = 0
+        self.evictions = 0
+        self.evicted_pages = 0
+
+    # -- internals -----------------------------------------------------------
+
+    def _touch(self, node):
+        self._clock += 1
+        node.last_used = self._clock
+
+    def _split(self, node, m: int):
+        """Refine at edge offset ``m`` (a page multiple): node keeps
+        tokens[:m] / pages[:m/ps], a new child takes the rest.  Page
+        ownership just partitions — no allocator traffic, no KV ops."""
+        ps = self.page_size
+        assert 0 < m < len(node.tokens) and m % ps == 0
+        lo = _PagedNode(node.tokens[m:], node.pages[m // ps:], node)
+        lo.children = node.children
+        for c in lo.children.values():
+            c.parent = lo
+        lo.refs = node.refs
+        lo.last_used = node.last_used
+        node.tokens = node.tokens[:m]
+        node.pages = node.pages[:m // ps]
+        node.children = {lo.tokens[0]: lo}
+        self.splits += 1
+
+    def _walk(self, tokens, *, split=True):
+        """Walk over ``tokens``; partial edge matches floor to the page
+        boundary (a divergence inside a page means that page is not
+        shared).  Returns (path, matched_len)."""
+        ps = self.page_size
+        path, node, pos = [], self.root, 0
+        while pos < len(tokens):
+            child = node.children.get(tokens[pos])
+            if child is None:
+                break
+            et = child.tokens
+            m, n = 1, len(et)
+            while m < n and pos + m < len(tokens) \
+                    and et[m] == tokens[pos + m]:
+                m += 1
+            if m < n:
+                ma = (m // ps) * ps
+                if ma == 0 or not split:
+                    break
+                self._split(child, ma)
+                path.append(child)
+                pos += ma
+                break
+            path.append(child)
+            pos += m
+            node = child
+        return path, pos
+
+    def _evictable(self):
+        out, stack = [], [self.root]
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            if nd is not self.root and not nd.children and nd.refs == 0:
+                out.append(nd)
+        return out
+
+    def _drop(self, node):
+        node.parent.children.pop(node.tokens[0])
+        self.pages -= len(node.pages)
+        self.evictions += 1
+        self.evicted_pages += len(node.pages)
+        self.alloc.note_evict(len(node.pages))
+        self.alloc.decref(node.pages)
+
+    # -- client API ----------------------------------------------------------
+
+    def match_and_pin(self, tokens):
+        """Longest cached page-aligned prefix.  Returns ``(matched_len,
+        page_ids, handle)``; the caller must :meth:`release` the handle
+        once it holds its own allocator refs (or is done reading)."""
+        tokens = tuple(tokens)
+        self.lookups += 1
+        self.tokens_queried += len(tokens)
+        path, matched = self._walk(tokens)
+        for nd in path:
+            nd.refs += 1
+            self._touch(nd)
+        if matched:
+            self.hits += 1
+            self.tokens_matched += matched
+        pages = tuple(p for nd in path for p in nd.pages)
+        return matched, pages, (tokens, matched)
+
+    def release(self, handle):
+        tokens, length = handle
+        node, pos = self.root, 0
+        while pos < length:
+            child = node.children.get(tokens[pos])
+            assert child is not None, "pinned path evicted?!"
+            child.refs -= 1
+            pos += len(child.tokens)
+            node = child
+        assert pos == length, "pinned path boundary moved outside a split"
+
+    def insert(self, tokens, page_ids) -> bool:
+        """Record that ``page_ids`` (pool pages, in order) hold the KV for
+        ``tokens`` (page-aligned).  Only the uncached tail changes hands:
+        the trie increfs those pages — zero copies.  Returns False when
+        the tail didn't fit under ``budget_pages`` even after LRU
+        eviction."""
+        tokens = tuple(tokens)
+        ps = self.page_size
+        assert len(tokens) % ps == 0 and len(page_ids) == len(tokens) // ps
+        path, pos = self._walk(tokens)
+        for nd in path:
+            self._touch(nd)
+        if pos >= len(tokens):
+            return True  # fully present
+        tail = tuple(page_ids[pos // ps:])
+        if self.budget_pages is not None:
+            while self.pages + len(tail) > self.budget_pages:
+                leaves = self._evictable()
+                if not leaves:
+                    break
+                self._drop(min(leaves, key=lambda nd: nd.last_used))
+            if self.pages + len(tail) > self.budget_pages:
+                self.skipped_inserts += 1
+                return False
+        parent = path[-1] if path else self.root
+        node = _PagedNode(tokens[pos:], tail, parent)
+        parent.children[tokens[pos]] = node
+        self._touch(node)
+        self.alloc.incref(tail)
+        self.pages += len(tail)
+        self.inserts += 1
+        self.insert_tokens += len(tokens) - pos
+        return True
+
+    def reclaim(self, target_free: int) -> int:
+        """Evict LRU unpinned leaves until the allocator has at least
+        ``target_free`` free pages (admission page-fault path).  Pinned
+        paths are never reclaimed.  Returns pages released by the trie."""
+        released = 0
+        while self.alloc.free_count < target_free:
+            leaves = self._evictable()
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda nd: nd.last_used)
+            released += len(victim.pages)
+            self._drop(victim)
+        return released
+
+    def drop_unpinned(self):
+        """Release every unpinned subtree (``reset_prefix_cache``); paths
+        pinned by in-flight prefills survive until released."""
+        while True:
+            leaves = self._evictable()
+            if not leaves:
+                return
+            for nd in leaves:
+                self._drop(nd)
+
+    # -- introspection -------------------------------------------------------
+
+    def evictable_pages(self) -> int:
+        return sum(len(nd.pages) for nd in self._evictable())
+
+    def node_count(self) -> int:
+        n, stack = 0, list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            n += 1
+            stack.extend(nd.children.values())
+        return n
+
+    def cached_tokens(self) -> int:
+        return self.pages * self.page_size
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "pages": self.pages,
+            "budget_pages": self.budget_pages,
+            "nodes": self.node_count(),
+            "cached_tokens": self.cached_tokens(),
+            "lookups": self.lookups,
+            "hits": self.hits,
+            "hit_rate": self.hit_rate,
+            "tokens_queried": self.tokens_queried,
+            "tokens_matched": self.tokens_matched,
+            "inserts": self.inserts,
+            "insert_tokens": self.insert_tokens,
+            "skipped_inserts": self.skipped_inserts,
+            "splits": self.splits,
+            "evictions": self.evictions,
+            "evicted_pages": self.evicted_pages,
+        }
+
+
+# ---------------------------------------------------------------------------
 # radix trie
 
 

@@ -9,6 +9,8 @@ import pytest
 from repro.kernels.decode_attention import ops as da_ops
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.paged_attention import ops as pa_ops
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.rglru import ops as lru_ops
 from repro.kernels.rglru.ref import rglru_scan_ref
@@ -89,6 +91,73 @@ def test_decode_attention_matches_ref(B, C, H, KVH, d, fill, dtype):
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32),
         **tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+
+
+def _paged_case(B, ps, N, H, KVH, d, dtype, seed=4):
+    """A page pool with page 0 reserved and per-sequence *shuffled* page
+    tables (interleaved across sequences, like a real allocator's free
+    list), so a kernel that ignored the table would read wrong pages."""
+    rng = jax.random.PRNGKey(seed)
+    kq, kk, kv, kp = jax.random.split(rng, 4)
+    P = B * N + 3  # page 0 scratch + a couple of unreferenced spares
+    q = jax.random.normal(kq, (B, 1, H, d), dtype)
+    k_pages = jax.random.normal(kk, (P, ps, KVH, d), dtype)
+    v_pages = jax.random.normal(kv, (P, ps, KVH, d), dtype)
+    perm = jax.random.permutation(kp, jnp.arange(1, P))[: B * N]
+    page_table = perm.reshape(B, N).astype(jnp.int32)
+    return q, k_pages, v_pages, page_table
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,ps,N,H,KVH,d,lengths,window", [
+    (2, 16, 4, 4, 4, 32, (64, 37), 0),   # full + ragged last page
+    (2, 8, 6, 8, 2, 64, (48, 41), 0),    # GQA 4:1, small pages
+    (1, 32, 3, 4, 1, 32, (70,), 0),      # MQA, big pages, ragged
+    (2, 16, 4, 4, 4, 32, (64, 50), 24),  # sliding window across pages
+    (1, 16, 2, 2, 2, 16, (1,), 0),       # single valid token
+])
+def test_paged_decode_attention_matches_ref(B, ps, N, H, KVH, d, lengths,
+                                            window, dtype):
+    q, k_pages, v_pages, page_table = _paged_case(B, ps, N, H, KVH, d,
+                                                  dtype)
+    lens = jnp.asarray(lengths, jnp.int32)
+    ref = paged_decode_attention_ref(q, k_pages, v_pages, page_table, lens,
+                                     window=window)
+    out_pl = pa_ops.paged_decode_attention(q, k_pages, v_pages, page_table,
+                                           lens, window=window,
+                                           interpret=True)
+    out_xla = pa_ops.paged_decode_attention_xla(q, k_pages, v_pages,
+                                                page_table, lens,
+                                                window=window)
+    np.testing.assert_allclose(
+        np.asarray(out_pl, np.float32), np.asarray(ref, np.float32),
+        **tol(dtype))
+    np.testing.assert_allclose(
+        np.asarray(out_xla, np.float32), np.asarray(ref, np.float32),
+        **tol(dtype))
+
+
+def test_paged_decode_attention_equals_contiguous():
+    """Gathering the referenced pages into a contiguous cache and running
+    the contiguous decode oracle must agree with the paged oracle — the
+    layouts are different addressings of the same attention."""
+    B, ps, N, H, KVH, d = 2, 16, 4, 4, 2, 32
+    q, k_pages, v_pages, page_table = _paged_case(B, ps, N, H, KVH, d,
+                                                  jnp.float32)
+    lens = jnp.asarray([64, 29], jnp.int32)
+    k = k_pages[page_table].reshape(B, N * ps, KVH, d)
+    v = v_pages[page_table].reshape(B, N * ps, KVH, d)
+    valid = jnp.arange(N * ps)[None, :] < lens[:, None]
+    ref_contig = decode_attention_ref(q, k, v, valid)
+    ref_paged = paged_decode_attention_ref(q, k_pages, v_pages, page_table,
+                                           lens)
+    np.testing.assert_allclose(np.asarray(ref_paged),
+                               np.asarray(ref_contig), rtol=2e-5,
+                               atol=2e-5)
 
 
 # ---------------------------------------------------------------------------
