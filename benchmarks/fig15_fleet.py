@@ -1,0 +1,304 @@
+"""Fig. 15: replica fleet — routed scale-out of the serving engine, with
+prefix-affinity placement (beyond-paper; DESIGN.md §3.4, EXPERIMENTS.md
+§Fig. 15).
+
+One ``ServingEngine`` scales *up* (continuous batching, paged KV, tensor
+parallelism over a mesh); ``EngineFleet`` scales *out*: N replicas behind
+``dispatch``'s router.  Two claims are gated here:
+
+* **Fan-out throughput scales with replicas.**  A 16-request PopPy burst
+  against one 4-slot replica drains in ~4 admission waves; against 4
+  replicas (16 slots fleet-wide) it drains in ~1.  With ``step_sleep``
+  modelling the device step (the asyncio waits overlap across replicas
+  exactly as real device steps would), the 4-replica fleet must finish
+  the identical workload ≥2.5× faster.
+
+* **Prefix-affinity routing keeps sessions warm.**  The workload is 4
+  sessions × 4 queries sharing a per-session 160-token prefix.  The
+  ``prefix_affinity`` policy probes each replica's radix prefix cache
+  (read-only digest) and routes to the replica already holding the
+  longest prefix; ``least_outstanding`` ignores warmth.  Both fleets see
+  an identical untimed priming wave (one query per session — cold-start
+  traffic that spreads via the least-outstanding fallback), then the
+  timed wave's per-replica ``prefix_hits / prefix_probed`` counters
+  (``DispatchStats.note_route``, identical instrumentation under every
+  policy) must show affinity strictly warmer.
+
+Requests dispatch per element — no ``batching()`` — so the router places
+every ``llm()`` call individually.  Every trial asserts token-exact
+equality of all fleet runs against the single-replica fleet AND a
+sequential-mode oracle, ≡_A trace equivalence, and the prefill-
+compilation bucket bound on every replica.  A tensor-parallel leg (run
+when ≥2 JAX devices are visible, e.g. under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) asserts a tp=2
+engine is token-identical to the single-device engine with the same
+bounded compile count.
+
+    PYTHONPATH=src:. python benchmarks/fig15_fleet.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src:. python benchmarks/fig15_fleet.py
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import statistics
+import time
+from pathlib import Path
+
+import jax
+
+from repro.core import equivalent, poppy, recording, sequential_mode
+from repro.core.ai import llm, use_dispatcher
+from repro.models import build_model
+from repro.serving import EngineFleet
+
+from benchmarks.common import maybe_tracing
+
+SESSIONS = 4
+QUERIES = 4                 # timed queries per session (16 requests)
+PREFIX_CHARS = 160          # per-session shared prefix (byte tok, 1:1)
+MAX_NEW_TOKENS = 16
+MAX_LEN = 256
+SLOTS = 4                   # per replica; 1 replica ⇒ 4 admission waves
+REPLICAS = 4
+STEP_SLEEP = 0.012          # simulated device step; overlaps across
+                            # replicas like real device steps would
+
+
+def session_prefix(s: int) -> str:
+    base = (f"Session {s:02d} memory: the user is planning trip {s}, "
+            f"prefers rail over air, budget tier {s % 3}. Context: ")
+    out = base
+    while len(out) < PREFIX_CHARS:
+        out += base
+    return out[:PREFIX_CHARS]
+
+
+def priming_prompts():
+    """One cold query per session — the untimed warm-up wave that spreads
+    sessions across replicas (all probes are 0, so the affinity policy
+    falls back to least-outstanding) and populates each radix cache."""
+    return [session_prefix(s) + "Qwarm: ok" for s in range(SESSIONS)]
+
+
+def timed_prompts():
+    return [session_prefix(s) + f"Q{q:02d}: next"
+            for s in range(SESSIONS) for q in range(QUERIES)]
+
+
+@poppy
+def fanout(prompts):
+    outs = tuple()
+    for p in prompts:
+        outs += (llm(p, max_tokens=MAX_NEW_TOKENS),)
+    return outs
+
+
+def build_params(arch="stablelm-3b"):
+    from repro.configs import get_config
+    cfg = get_config(arch).reduced().replace(
+        num_layers=2, d_model=128, num_heads=8, head_dim=16, d_ff=256)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(13))
+
+
+def make_fleet(model, params, *, replicas, policy):
+    return EngineFleet(
+        model, params, replicas=replicas, policy=policy,
+        max_slots=SLOTS, max_len=MAX_LEN, page_size=16,
+        step_sleep=STEP_SLEEP)
+
+
+def _run_once(mode, fleet, prompts):
+    with use_dispatcher(fleet.dispatcher), recording() as tr:
+        t0 = time.perf_counter()
+        if mode == "plain":
+            with sequential_mode():
+                result = fanout(prompts)
+        else:
+            result = fanout(prompts)
+        dt = time.perf_counter() - t0
+    return result, dt, tr
+
+
+def _hit_counts(fleet):
+    """Fleet-wide (probed, hits) from the per-replica route counters."""
+    backends = fleet.stats.snapshot()["backends"]
+    return (sum(b["prefix_probed"] for b in backends.values()),
+            sum(b["prefix_hits"] for b in backends.values()))
+
+
+def _assert_compile_bounds(fleet, label):
+    for name, eng in zip(fleet.names, fleet.engines):
+        bound = eng.prefill_shape_bound
+        assert eng.prefill_compilations <= bound, (
+            f"{label}/{name}: {eng.prefill_compilations} prefill "
+            f"compilations exceed the bucket bound {bound} — "
+            f"recompile-per-length regression")
+
+
+def _prime(fleet, label):
+    """Reset every replica's radix cache, then run the untimed priming
+    wave (concurrent, so least-outstanding spreads the cold sessions)."""
+    for eng in fleet.engines:
+        eng.reset_prefix_cache()
+    r, _, _ = _run_once("poppy", fleet, priming_prompts())
+    assert len(r) == SESSIONS, f"{label}: priming wave lost requests"
+
+
+def tp_leg(model, params, prompts):
+    """Tensor-parallel engine ≡ single-device engine, token for token,
+    with the same bounded compile count.  Needs ≥2 devices (CI sets
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    if jax.device_count() < 2:
+        return {"status": "skipped", "reason":
+                f"needs >=2 devices, have {jax.device_count()}"}
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving import ByteTokenizer, ServingEngine
+    tok = ByteTokenizer(model.cfg.vocab_size)
+    eng1 = ServingEngine(model, params, max_slots=SLOTS, max_len=MAX_LEN)
+    eng2 = ServingEngine(model, params, max_slots=SLOTS, max_len=MAX_LEN,
+                         mesh=make_serving_mesh(tp=2), name="tp2")
+
+    async def gen_all(eng):
+        outs = await asyncio.gather(*(
+            eng.generate(tok.encode(p), max_new_tokens=MAX_NEW_TOKENS,
+                         temperature=0.0) for p in prompts))
+        await eng.stop()
+        return [list(o) for o in outs]
+
+    t1 = asyncio.run(gen_all(eng1))
+    t2 = asyncio.run(gen_all(eng2))
+    assert t1 == t2, (
+        f"tp=2 engine diverges from single-device tokens: {t2} vs {t1}")
+    bound = eng2.prefill_shape_bound
+    assert eng2.prefill_compilations <= bound, (
+        f"tp=2 engine: {eng2.prefill_compilations} prefill compilations "
+        f"exceed the bucket bound {bound}")
+    return {"status": "ok", "tp": 2, "n_prompts": len(prompts),
+            "prefill_compilations": eng2.prefill_compilations,
+            "prefill_shape_bound": bound}
+
+
+def bench(*, trials=3):
+    prompts = timed_prompts()
+    model, params = build_params()
+    fleet1 = make_fleet(model, params, replicas=1,
+                        policy="prefix_affinity")
+    fleet4 = make_fleet(model, params, replicas=REPLICAS,
+                        policy="prefix_affinity")
+    fleet_lo = make_fleet(model, params, replicas=REPLICAS,
+                          policy="least_outstanding")
+    fleets = [("single", fleet1), ("fleet4", fleet4), ("lo", fleet_lo)]
+
+    # compile-warm every replica once with the full workload shape (all
+    # prompts share suffix/prefix bucket lengths, so one pass compiles
+    # every prefill bucket and the decode step on each replica);
+    # timing and hit rates are measured per trial after a cache reset
+    for label, f in fleets:
+        _prime(f, label)
+        _run_once("poppy", f, prompts)
+
+    times = {"plain": [], "single": [], "fleet4": [], "lo": []}
+    rates = {"fleet4": [], "lo": []}
+    for _ in range(trials):
+        for label, f in fleets:
+            _prime(f, label)
+        r_ref, dt, tr_ref = _run_once("plain", fleet1, prompts)
+        times["plain"].append(dt)
+        marks = {label: _hit_counts(f) for label, f in fleets}
+        r1, dt, tr1 = _run_once("poppy", fleet1, prompts)
+        times["single"].append(dt)
+        r4, dt, tr4 = _run_once("poppy", fleet4, prompts)
+        times["fleet4"].append(dt)
+        rlo, dt, trlo = _run_once("poppy", fleet_lo, prompts)
+        times["lo"].append(dt)
+
+        assert r1 == r_ref, (
+            f"single-replica fleet diverges from sequential oracle: "
+            f"{r1!r} vs {r_ref!r}")
+        assert r4 == r_ref, (
+            f"4-replica fleet not token-exact vs single replica: "
+            f"{r4!r} vs {r_ref!r}")
+        assert rlo == r_ref, (
+            f"least-outstanding fleet not token-exact: "
+            f"{rlo!r} vs {r_ref!r}")
+        for label, tr in (("single", tr1), ("fleet4", tr4), ("lo", trlo)):
+            ok, why = equivalent(tr_ref, tr)
+            assert ok, f"{label} trace not ≡_A: {why}"
+        for label, f in fleets:
+            _assert_compile_bounds(f, label)
+        # timed-wave hit rates from the per-replica route counters
+        for label, f in (("fleet4", fleet4), ("lo", fleet_lo)):
+            p0, h0 = marks[label]
+            p1, h1 = _hit_counts(f)
+            assert p1 - p0 == len(prompts), (
+                f"{label}: expected {len(prompts)} routed probes, "
+                f"got {p1 - p0}")
+            rates[label].append((h1 - h0) / (p1 - p0))
+        assert rates["fleet4"][-1] > rates["lo"][-1], (
+            f"prefix-affinity hit rate {rates['fleet4'][-1]:.2f} not "
+            f"strictly above least-outstanding {rates['lo'][-1]:.2f}")
+
+    med = {m: statistics.median(ts) for m, ts in times.items()}
+    backends = fleet4.stats.snapshot()["backends"]
+    return {
+        "sessions": SESSIONS,
+        "queries_per_session": QUERIES,
+        "n_requests": len(prompts),
+        "prefix_chars": PREFIX_CHARS,
+        "max_new_tokens": MAX_NEW_TOKENS,
+        "replicas": REPLICAS,
+        "slots_per_replica": SLOTS,
+        "step_sleep_s": STEP_SLEEP,
+        **{f"{m}_s": t for m, t in med.items()},
+        "fleet_scaling_x4": med["single"] / med["fleet4"],
+        "affinity_hit_rate": statistics.median(rates["fleet4"]),
+        "least_outstanding_hit_rate": statistics.median(rates["lo"]),
+        "per_replica_routed": {n: b["routed"]
+                               for n, b in backends.items()},
+        "per_replica_hit_tokens": {n: b["prefix_hit_tokens"]
+                                   for n, b in backends.items()},
+        "tp": tp_leg(model, params, prompts[:3]),
+    }
+
+
+def run(out_dir="experiments/apps", trials=3, smoke=False,
+        trace_out=None):
+    with maybe_tracing(trace_out):
+        return _run(out_dir, trials, smoke)
+
+
+def _run(out_dir, trials, smoke):
+    r = bench(trials=trials)
+    print(f"{r['n_requests']} requests ({r['sessions']} sessions): "
+          f"1 replica {r['single_s']*1e3:.0f}ms → {r['replicas']} "
+          f"replicas {r['fleet4_s']*1e3:.0f}ms = "
+          f"{r['fleet_scaling_x4']:.2f}×;  warm-route rate "
+          f"{r['affinity_hit_rate']:.2f} (affinity) vs "
+          f"{r['least_outstanding_hit_rate']:.2f} (least-outstanding);  "
+          f"tp leg: {r['tp']['status']}", flush=True)
+    # equality, ≡_A, the strict affinity>least-outstanding rate gap, and
+    # per-replica compile bounds were asserted every trial
+    assert r["fleet_scaling_x4"] >= 2.5, (
+        f"acceptance: {REPLICAS} replicas must drain the fan-out burst "
+        f"≥2.5× faster than one, got {r['fleet_scaling_x4']:.2f}×")
+    if not smoke:
+        print(f"\nacceptance: {r['fleet_scaling_x4']:.2f}× ≥ 2.5× ✓")
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig15.json").write_text(json.dumps(r, indent=1))
+    return r
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the run here")
+    args = ap.parse_args()
+    run(trials=args.trials, trace_out=args.trace_out)

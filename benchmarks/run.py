@@ -47,7 +47,7 @@ def smoke(out_path=SMOKE_JSON):
     from benchmarks import (fig5_speedup, fig9_dispatch, fig10_sync_offload,
                             fig11_effect_domains, fig12_autobatch,
                             fig13_prefix_prefill, fig14_paged_kv,
-                            obs_overhead)
+                            fig15_fleet, obs_overhead)
 
     t0 = time.time()
     figures = {}
@@ -113,6 +113,19 @@ def smoke(out_path=SMOKE_JSON):
             lambda: fig14_paged_kv.run(trials=1, smoke=True),
             lambda r: {"admitted_users_ratio": r["admitted_users_ratio"],
                        "jit_headroom": r["jit_headroom"]})
+    # fig15 asserts token-exactness + ≡_A of every fleet run vs the
+    # single-replica fleet and the sequential oracle, the strict
+    # affinity > least-outstanding warm-route rate gap (read from the
+    # per-replica dispatch counters), per-replica compile bounds, and the
+    # ≥2.5× 4-vs-1-replica drain bar — the scaling ratio counts overlapped
+    # simulated device steps, so it holds at smoke scale; the TP leg runs
+    # whenever ≥2 devices are visible (the multi-device CI job sets
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8)
+    attempt("fig15", "fleet token equality + ≡_A + affinity > "
+                     "least-outstanding + ≥2.5× scale-out",
+            lambda: fig15_fleet.run(trials=1, smoke=True),
+            lambda r: {"fleet_scaling_x4": r["fleet_scaling_x4"],
+                       "affinity_hit_rate": r["affinity_hit_rate"]})
     # obs_overhead asserts the tracing-enabled overhead bar (<5% pairwise
     # delta on fig5 tiny-N) and critical-path attribution soundness; an
     # assertion failure surfaces through the same equivalence machinery
@@ -156,7 +169,7 @@ def main():
                             fig8_scaling, fig10_sync_offload,
                             fig11_effect_domains, fig12_autobatch,
                             fig13_prefix_prefill, fig14_paged_kv,
-                            table1_characteristics)
+                            fig15_fleet, table1_characteristics)
 
     print("=" * 72)
     print("Table 1 — benchmark program characteristics")
@@ -205,6 +218,12 @@ def main():
           "prefix sharing")
     print("=" * 72)
     fig14_paged_kv.run(trials=trials)
+
+    print("\n" + "=" * 72)
+    print("Fig. 15 — replica fleet: routed scale-out + prefix-affinity "
+          "placement")
+    print("=" * 72)
+    fig15_fleet.run(trials=trials)
 
     print("\n" + "=" * 72)
     print("Fig. 6 — ToT execution trace (queue → dispatch → resolve)")

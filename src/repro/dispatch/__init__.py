@@ -49,6 +49,7 @@ from .reliability import (  # noqa: F401
 )
 from .router import (  # noqa: F401
     LeastOutstandingRouter,
+    PrefixAffinityRouter,
     Replica,
     Router,
     WeightedRouter,
@@ -58,7 +59,8 @@ from .stats import BackendStats, DispatchStats, LatencyDigest  # noqa: F401
 
 __all__ = [
     "Dispatcher",
-    "Router", "WeightedRouter", "LeastOutstandingRouter", "Replica",
+    "Router", "WeightedRouter", "LeastOutstandingRouter",
+    "PrefixAffinityRouter", "Replica",
     "make_router",
     "AdmissionPolicy", "AdmissionController", "AdmissionRejected",
     "TokenBucket",

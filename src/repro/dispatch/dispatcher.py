@@ -120,12 +120,13 @@ class Dispatcher(Backend):
             lambda b: b.generate(prompt, max_tokens=max_tokens,
                                  temperature=temperature, stop=stop),
             cacheable=temperature <= 0.0, domains=domains,
-            batch=(("generate", (max_tokens, temperature, stop)), prompt))
+            batch=(("generate", (max_tokens, temperature, stop)), prompt),
+            hint=prompt)
 
     async def embed(self, text, domains=()):
         return await self.dispatch("embed", (text,),
                                    lambda b: b.embed(text), domains=domains,
-                                   batch=(("embed", ()), text))
+                                   batch=(("embed", ()), text), hint=text)
 
     async def generate_batch(self, prompts, *, max_tokens, temperature,
                              stop, domains=()):
@@ -147,14 +148,16 @@ class Dispatcher(Backend):
     # -- dispatch pipeline ---------------------------------------------------
 
     async def dispatch(self, kind: str, payload, call, *, cacheable=True,
-                       domains=(), batch=None):
+                       domains=(), batch=None, hint=None):
         """Dispatch ``call(backend) -> awaitable`` for a request identified
         by ``(kind, payload)`` through cache → batch → hedge → route →
         admit → retry.  ``domains`` tags the request with its effect-domain
         keys for the per-domain stats view (purely observational).
         ``batch`` is ``(group, element)`` — when a micro-batcher is
         configured, the request windows with identical-``group`` traffic
-        instead of dispatching alone."""
+        instead of dispatching alone.  ``hint`` is the request's prompt
+        text (or other affinity token), passed to the router's ``pick`` so
+        a prefix-affinity policy can place it."""
         self.stats.requests += 1
         if domains:
             self.stats.note_domains(domains)
@@ -171,7 +174,7 @@ class Dispatcher(Backend):
                     return self._one_via_batcher(group, element)
             else:
                 def runner():
-                    return self._hedged(key, call)
+                    return self._hedged(key, call, hint=hint)
             if not use_cache:
                 return await runner()
             return await self.cache.get_or_dispatch(key, runner,
@@ -296,8 +299,14 @@ class Dispatcher(Backend):
         single admission unit regardless of batch size."""
         n = len(payloads)
         key = request_key(f"{group[0]}.batch", (tuple(payloads), group[1]))
+        # a batch routes as one unit: its first element's prompt is the
+        # affinity hint (engine batch windows share a prefix, so any
+        # element identifies the warm replica)
+        hint = payloads[0] if payloads and isinstance(payloads[0], str) \
+            else None
         results = await self._hedged(
-            key, lambda b: self._backend_batch(b, group, payloads))
+            key, lambda b: self._backend_batch(b, group, payloads),
+            hint=hint)
         if not isinstance(results, (list, tuple)) or len(results) != n:
             raise RuntimeError(
                 f"batched backend returned {type(results).__name__} of "
@@ -326,9 +335,9 @@ class Dispatcher(Backend):
         # admission; failures isolate per element via return_exceptions)
         return list(await asyncio.gather(*coros, return_exceptions=True))
 
-    async def _hedged(self, key, call):
+    async def _hedged(self, key, call, hint=None):
         if self.hedge is None:
-            return await self._routed(key, call)
+            return await self._routed(key, call, hint=hint)
         st = self.stats
 
         def on_hedge():
@@ -344,16 +353,33 @@ class Dispatcher(Backend):
                 trz.event("hedge.win", cat="dispatch")
 
         return await with_hedge(
-            lambda: self._routed(key, call), self.hedge,
+            lambda: self._routed(key, call, hint=hint), self.hedge,
             on_hedge=on_hedge, on_win=on_win)
 
-    def _pick(self) -> tuple[Replica, object]:
-        replica = self.router.pick() if self.router is not None \
+    def _pick(self, hint=None) -> tuple[Replica, object]:
+        replica = self.router.pick(hint) if self.router is not None \
             else self._ambient
         return replica, self._gate[id(replica)]
 
-    async def _routed(self, key, call):
-        replica, gate = self._pick()
+    def _note_route(self, replica: Replica, hint):
+        """Per-replica routing counters: re-probe the *picked* replica's
+        prefix digest for the hit-depth metric.  The probe is a read-only
+        radix-trie walk, and probing here (rather than trusting the
+        router) gives the same counters under every policy — the affinity
+        benchmark compares policies from identical instrumentation."""
+        matched = None
+        if hint is not None:
+            probe = getattr(replica.resolve(), "prefix_probe", None)
+            if probe is not None:
+                try:
+                    matched = int(probe(hint))
+                except Exception:
+                    matched = None
+        self.stats.note_route(replica.name, matched)
+
+    async def _routed(self, key, call, hint=None):
+        replica, gate = self._pick(hint)
+        self._note_route(replica, hint)
         st = self.stats
         if gate is None:
             return await self._attempt(replica, key, call)

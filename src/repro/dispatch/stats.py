@@ -79,6 +79,10 @@ class BackendStats:
     requests = InstrumentAttr()
     errors = InstrumentAttr()
     outstanding_peak = InstrumentAttr()
+    routed = InstrumentAttr()            # router picks that landed here
+    prefix_probed = InstrumentAttr()     # routed picks with an affinity probe
+    prefix_hits = InstrumentAttr()       # probes matching >=1 cached token
+    prefix_hit_tokens = InstrumentAttr()  # total matched prefix depth
 
     def __init__(self, registry: MetricsRegistry | None = None,
                  name: str = ""):
@@ -87,6 +91,13 @@ class BackendStats:
         self._i_errors = reg.counter("backend_errors", backend=name)
         self._i_outstanding_peak = reg.counter("backend_outstanding_peak",
                                                backend=name)
+        self._i_routed = reg.counter("replica_routed", backend=name)
+        self._i_prefix_probed = reg.counter("replica_prefix_probes",
+                                            backend=name)
+        self._i_prefix_hits = reg.counter("replica_prefix_hits",
+                                          backend=name)
+        self._i_prefix_hit_tokens = reg.counter("replica_prefix_hit_tokens",
+                                                backend=name)
         self.latency: Histogram = reg.histogram("backend_latency_s",
                                                 backend=name)
 
@@ -169,6 +180,21 @@ class DispatchStats:
                                    shared_tokens=shared_tokens,
                                    computed_tokens=computed_tokens)
 
+    def note_route(self, name: str, matched: int | None = None):
+        """Record a router pick landing on replica ``name``.  ``matched``
+        is the prefix-affinity probe depth (tokens of the prompt already
+        cached on the picked replica), or ``None`` when routing had no
+        prompt hint or the backend exposes no digest — those picks count
+        as routed but not probed, keeping hit *rate* meaningful."""
+        with self._lock:
+            bs = self.backend(name)
+            bs.routed += 1
+            if matched is not None:
+                bs.prefix_probed += 1
+                if matched > 0:
+                    bs.prefix_hits += 1
+                    bs.prefix_hit_tokens += matched
+
     def enqueue(self):
         with self._lock:
             self._queue.inc()
@@ -218,6 +244,10 @@ class DispatchStats:
                     "requests": bs.requests,
                     "errors": bs.errors,
                     "outstanding_peak": bs.outstanding_peak,
+                    "routed": bs.routed,
+                    "prefix_probed": bs.prefix_probed,
+                    "prefix_hits": bs.prefix_hits,
+                    "prefix_hit_tokens": bs.prefix_hit_tokens,
                     "p50_s": bs.latency.p50,
                     "p99_s": bs.latency.p99,
                     "mean_s": bs.latency.mean,
@@ -259,8 +289,13 @@ class DispatchStats:
             lines.append("  domains: " + ", ".join(
                 f"{d}={n}" for d, n in top))
         for name, bs in snap["backends"].items():
-            lines.append(
+            line = (
                 f"  {name}: {bs['requests']} reqs, {bs['errors']} errors, "
                 f"p50 {bs['p50_s'] * 1e3:.1f}ms p99 {bs['p99_s'] * 1e3:.1f}ms, "
                 f"peak in-flight {bs['outstanding_peak']}")
+            if bs["prefix_probed"]:
+                line += (f", affinity {bs['prefix_hits']}/"
+                         f"{bs['prefix_probed']} warm "
+                         f"({bs['prefix_hit_tokens']} tok)")
+            lines.append(line)
         return "\n".join(lines)

@@ -30,6 +30,7 @@ import traceback   # noqa: E402
 from pathlib import Path  # noqa: E402
 
 import jax         # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -95,6 +96,60 @@ def collective_stats(hlo_text: str) -> dict:
     return stats
 
 
+def _tree_bytes(tree) -> int:
+    return int(sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
+                   for leaf in jax.tree.leaves(tree)))
+
+
+def paged_kv_pool_bytes(cfg, *, num_pages: int, page_size: int) -> int:
+    """Bytes the serving engine's *paged* KV pool allocates for a
+    ``num_pages``-page pool: ``num_pages`` usable pages plus the reserved
+    scratch page 0 (``ServingEngine._init_paged`` builds
+    ``init_paged_cache(num_pages + 1, page_size)``).  Shape inference
+    only — no arrays materialize.  Raises ``ValueError`` for models whose
+    KV is not positionally sliceable (they have no paged layout)."""
+    from repro.models.model import Model
+    model = Model(cfg)
+    shaped = jax.eval_shape(
+        lambda: model.init_paged_cache(num_pages + 1, page_size))
+    return _tree_bytes(shaped)
+
+
+def contiguous_kv_bytes(cfg, *, max_slots: int, max_len: int) -> int:
+    """Bytes of the contiguous per-slot slab cache (the pre-paged serving
+    layout, still used by recurrent/hybrid/int8/windowed models)."""
+    from repro.models.model import Model
+    shaped = Model(cfg).init_cache(max_slots, max_len, abstract=True)
+    return _tree_bytes(shaped)
+
+
+def serving_kv_estimate(cfg, *, max_slots: int, max_len: int,
+                        page_size: int = 16) -> dict:
+    """HBM estimate for a decode cell's serving KV at the engine's default
+    pool sizing (``num_pages = max_slots · max_len / page_size``), for
+    both layouts — the dry-run report matches what the engine actually
+    allocates (tests assert agreement with ``tree_nbytes(kv_pages)``)."""
+    out = {
+        "max_slots": max_slots,
+        "max_len": max_len,
+        "contiguous_bytes": contiguous_kv_bytes(
+            cfg, max_slots=max_slots, max_len=max_len),
+    }
+    try:
+        num_pages = max_slots * (max_len // page_size)
+        out.update({
+            "layout": "paged",
+            "page_size": page_size,
+            "num_pages": num_pages,
+            "paged_bytes": paged_kv_pool_bytes(
+                cfg, num_pages=num_pages, page_size=page_size),
+        })
+    except ValueError as e:  # non-sliceable KV: contiguous slab only
+        out["layout"] = "contiguous"
+        out["paged_unsupported"] = str(e)
+    return out
+
+
 def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
              out_dir: Path) -> dict:
     cfg = get_config(arch)
@@ -113,6 +168,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older JAX wraps the dict in a list
+            ca = ca[0] if ca else {}
         ma = compiled.memory_analysis()
         hlo = compiled.as_text()
         coll = collective_stats(hlo)
@@ -137,6 +194,11 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
             "collectives": coll,
             "num_params": model.num_params(),
         })
+        if shape.kind == "decode":
+            # serving-cache HBM at the engine's default pool sizing, both
+            # layouts — this is the number the serving engine allocates
+            rec["serving_kv"] = serving_kv_estimate(
+                cfg, max_slots=shape.global_batch, max_len=shape.seq_len)
     except Exception as e:  # a failure here is a bug in the system
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"

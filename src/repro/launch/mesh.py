@@ -28,6 +28,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, devices=devices)
 
 
+def make_serving_mesh(tp: int = 1, *, devices=None):
+    """A ``(1, tp)`` = ("data", "model") mesh for one serving engine.
+
+    Serving shards only over the tensor axis (decode batch sizes are too
+    small and too dynamic for data parallelism inside one engine; the
+    fleet scales out with whole replicas instead).  Pass ``devices`` to
+    carve disjoint slices of the host's devices for fleet replicas.
+    """
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    pool = list(devices) if devices is not None else jax.devices()
+    if len(pool) < tp:
+        raise RuntimeError(
+            f"serving mesh tp={tp} needs {tp} devices, have {len(pool)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "importing jax to simulate more on CPU")
+    return jax.make_mesh((1, tp), ("data", "model"), devices=pool[:tp])
+
+
 def make_host_mesh():
     """A trivial 1-device mesh for CPU smoke/integration runs."""
     return jax.make_mesh((1, 1), ("data", "model"),

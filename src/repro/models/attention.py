@@ -294,6 +294,11 @@ def decode_attention(cfg, p, x, cache, positions, *, window=0):
                                 cfg.rope_theta, x.dtype)
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
+    # head-dim placement for tensor-parallel serving (no-op without rules):
+    # keeps the cache write and the attention itself local to each shard
+    q = shard_hint(q, "act_qkv")
+    k = shard_hint(k, "act_kv")
+    v = shard_hint(v, "act_kv")
     slots = positions % C if window > 0 else positions
     packed = pack_kv(cfg, k, v)
     new_cache = {}
@@ -318,6 +323,7 @@ def decode_attention(cfg, p, x, cache, positions, *, window=0):
                 q, new_cache["k"], new_cache["v"], new_cache["k_scale"],
                 new_cache["v_scale"], valid,
                 interpret=(impl == "pallas_interpret"))
+            out = shard_hint(out, "act_qkv")
             out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
             return out, new_cache
         ck = dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
@@ -340,6 +346,7 @@ def decode_attention(cfg, p, x, cache, positions, *, window=0):
             q, ck, cv, valid, interpret=(impl == "pallas_interpret"))
     else:
         out = mha_reference(q, ck, cv, mask=mask)
+    out = shard_hint(out, "act_qkv")
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return out, new_cache
 
@@ -384,6 +391,12 @@ def paged_decode_attention(cfg, p, x, cache, positions, page_table):
                                 cfg.rope_theta, x.dtype)
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
+    # tensor-parallel serving: heads over the model axis — the page-pool
+    # leaves carry the matching KVH sharding (sharding.rules cache_pspecs
+    # layout="paged"), so the scatter below stays shard-local
+    q = shard_hint(q, "act_qkv")
+    k = shard_hint(k, "act_kv")
+    v = shard_hint(v, "act_kv")
     page_ids = jnp.take_along_axis(
         page_table, jnp.minimum(positions // ps, N - 1)[:, None], axis=1
     )[:, 0]
@@ -408,6 +421,7 @@ def paged_decode_attention(cfg, p, x, cache, positions, page_table):
         cv = new_cache["v"][page_table].reshape(B, N * ps, -1, cfg.head_dim)
         valid = jnp.arange(N * ps)[None, :] < lengths[:, None]
         out = mha_reference(q, ck, cv, mask=valid[:, None, None, :])
+    out = shard_hint(out, "act_qkv")
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return out, new_cache
 

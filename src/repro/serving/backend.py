@@ -40,6 +40,13 @@ class LocalEngineBackend(Backend):
         self.min_shared_prefix = min_shared_prefix
         self.hedges = 0
 
+    def prefix_probe(self, prompt: str) -> int:
+        """Longest-cached-prefix token count for ``prompt`` — the routing
+        digest consulted by ``dispatch``'s prefix-affinity policy.  A
+        read-only radix-trie walk (no pins, no stat mutation); returns 0
+        when the engine runs without a prefix cache."""
+        return self.engine.prefix_probe(self.tok.encode(prompt))
+
     async def generate(self, prompt, *, max_tokens, temperature, stop):
         return await self._generate_tokens(
             self.tok.encode(prompt), max_tokens=max_tokens,

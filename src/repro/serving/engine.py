@@ -46,6 +46,13 @@ import numpy as np
 
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.spans import DETACHED, current_tracer, maybe_span
+from repro.sharding.rules import (
+    cache_pspecs,
+    make_serving_rules,
+    named,
+    params_pspecs,
+    use_rules,
+)
 from repro.serving.prefix_cache import (
     PagedPrefixCache,
     PrefixCache,
@@ -216,16 +223,35 @@ class ServingEngine:
     KV to retain; 0/None disables), ``prefill_chunk`` (tokens per prefill
     chunk interleaved with decode; None = whole prompt in one chunk), and
     ``prefill_buckets`` (pad-to lengths for the jitted prefill; default
-    powers of two up to ``max_len``)."""
+    powers of two up to ``max_len``).
+
+    Tensor parallelism: pass ``mesh`` (a ``("data","model")`` mesh from
+    ``launch.mesh.make_serving_mesh``) and the engine spans its devices —
+    params and the KV pool are placed under the serving sharding rules
+    (``sharding.rules.make_serving_rules``: heads/pool over the ``model``
+    axis, page tables replicated) and every jitted step traces under them,
+    so the models' ``shard_hint``s bind activations to the mesh.  The
+    scheduler is unchanged; tokens are bit-identical to the single-device
+    engine (same program, GSPMD-partitioned).  ``name`` labels this
+    engine's observability tracks (``<name>:decode`` …) so fleet replicas
+    stay distinguishable in one trace; empty keeps the bare track names."""
 
     def __init__(self, model, params, *, max_slots=8, max_len=256,
                  eos_token=None, step_sleep=0.0,
                  prefix_cache_budget=64 * 1024 * 1024,
                  prefill_chunk=None, prefill_buckets=None,
                  idle_quiesce_s=1.0, page_size=16, num_pages=None,
-                 kv_layout=None, metrics=None):
+                 kv_layout=None, metrics=None, mesh=None, name=""):
         self.model = model
         self.cfg = model.cfg
+        self.name = name
+        self.mesh = mesh
+        self._rules = make_serving_rules(mesh, model.cfg) \
+            if mesh is not None else None
+        if self._rules is not None:
+            params = jax.device_put(
+                params, named(self._rules,
+                              params_pspecs(self._rules, model)))
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
@@ -304,15 +330,23 @@ class ServingEngine:
                     if prefill_buckets else default_buckets(max_len)
             self._empty_prefix = tree_slice(
                 model.init_cache(1, 1), self._seq_axes, 0, 0)
-            self._prefill_px = jax.jit(
-                lambda p, toks, pfx, plen, lidx: model.prefill(
+
+            def _px_fn(p, toks, pfx, plen, lidx):
+                logits, cache = model.prefill(
                     p, {"tokens": toks}, capacity=toks.shape[1],
-                    prefix=pfx, prefix_len=plen, last_index=lidx))
+                    prefix=pfx, prefix_len=plen, last_index=lidx)
+                return logits, self._pin_cache(cache, "contiguous")
+
+            self._prefill_px = self._jit_sharded(_px_fn)
         else:
             self._buckets = ()
         self.prefill_chunk = prefill_chunk if self._paged else None
-        self._prefill_exact = jax.jit(
-            lambda p, b: model.prefill(p, b, capacity=max_len))
+
+        def _exact_fn(p, b):
+            logits, cache = model.prefill(p, b, capacity=max_len)
+            return logits, self._pin_cache(cache, "contiguous")
+
+        self._prefill_exact = self._jit_sharded(_exact_fn)
 
         if self.paged_kv:
             self._init_paged(page_size, num_pages, prefix_cache_budget)
@@ -322,8 +356,16 @@ class ServingEngine:
             self.allocator = None
             self._wait_pages: list[Request] = []
             self.page_op_shapes: set = set()
-            self.cache = model.init_cache(max_slots, max_len)
-            self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+            self.cache = self._place_cache(model.init_cache(max_slots,
+                                                            max_len),
+                                           "contiguous")
+
+            def _decode_fn(p, cache, toks, pos):
+                logits, cache = model.decode_step(p, cache, toks, pos)
+                return logits, self._pin_cache(cache, "contiguous")
+
+            self._decode = self._jit_sharded(_decode_fn,
+                                             donate_argnums=(1,))
             self.prefix_cache = (
                 PrefixCache(self._seq_axes, prefix_cache_budget)
                 if (self._paged and prefix_cache_budget) else None)
@@ -337,9 +379,11 @@ class ServingEngine:
                         start[ax - 1] = slot  # batch axis precedes seq
                         return jax.lax.dynamic_update_slice(
                             cur, seg.astype(cur.dtype), tuple(start))
-                    return jax.tree.map(write, self._seq_axes, cache, new)
+                    out = jax.tree.map(write, self._seq_axes, cache, new)
+                    return self._pin_cache(out, "contiguous")
 
-                self._splice = jax.jit(_splice_fn, donate_argnums=(0,))
+                self._splice = self._jit_sharded(_splice_fn,
+                                                 donate_argnums=(0,))
 
     def _init_paged(self, page_size, num_pages, prefix_cache_budget):
         """Block-paged KV state: a page pool shared by all slots + the
@@ -359,8 +403,9 @@ class ServingEngine:
         self.allocator = PageAllocator(self.num_pages, page_size,
                                        metrics=self.metrics)
         # pool leaf shape: [n_groups, num_pages+1, page_size, KVH, hd]
-        self.kv_pages = self.model.init_paged_cache(self.num_pages + 1,
-                                                    page_size)
+        self.kv_pages = self._place_cache(
+            self.model.init_paged_cache(self.num_pages + 1, page_size),
+            "paged")
         self._page_table = np.zeros((self.max_slots, self.pages_per_slot),
                                     np.int32)
         self._table_dev = jnp.asarray(self._page_table)
@@ -369,10 +414,21 @@ class ServingEngine:
         self._wait_pages: list[Request] = []   # admission backpressure
         self.page_op_shapes: set = set()
         self.cache = None
-        self._decode_paged = jax.jit(self.model.decode_step_paged,
-                                     donate_argnums=(1,))
-        self._page_gather = jax.jit(self._gather_fn)
-        self._page_fill = jax.jit(self._fill_fn, donate_argnums=(0,))
+
+        def _decode_paged_fn(p, pools, toks, pos, table):
+            logits, pools = self.model.decode_step_paged(p, pools, toks,
+                                                         pos, table)
+            return logits, self._pin_cache(pools, "paged")
+
+        self._decode_paged = self._jit_sharded(_decode_paged_fn,
+                                               donate_argnums=(1,))
+        self._page_gather = self._jit_sharded(
+            lambda pools, ids: self._pin_cache(
+                self._gather_fn(pools, ids), "contiguous"))
+        self._page_fill = self._jit_sharded(
+            lambda pools, seg, ids: self._pin_cache(
+                self._fill_fn(pools, seg, ids), "paged"),
+            donate_argnums=(0,))
         if prefix_cache_budget:
             page_bytes = tree_nbytes(self.kv_pages) // (self.num_pages + 1)
             budget_pages = int(prefix_cache_budget // max(1, page_bytes))
@@ -407,7 +463,57 @@ class ServingEngine:
             return pool.at[idx].set(pages.astype(pool.dtype))
         return jax.tree.map(w, self._seq_axes, pools, seg)
 
+    # -- tensor-parallel placement (no-ops without a mesh) ---------------------
+
+    def _jit_sharded(self, fn, **jit_kwargs):
+        """``jax.jit(fn)``, tracing under the engine's serving rules so the
+        models' ``shard_hint``s resolve against the mesh.  Rules bind at
+        trace time via the ``sharding.rules`` contextvar; compiled
+        executables keep them baked in."""
+        if self._rules is None:
+            return jax.jit(fn, **jit_kwargs)
+        rules = self._rules
+
+        def traced(*args):
+            with use_rules(rules):
+                return fn(*args)
+
+        return jax.jit(traced, **jit_kwargs)
+
+    def _pin_cache(self, tree, layout: str):
+        """Constrain a cache/pool pytree (inside jit) to its canonical
+        layout, so donated KV buffers keep a stable sharding across steps
+        — without the pin, GSPMD is free to re-layout each compiled shape
+        and donation degenerates into resharding copies."""
+        if self._rules is None:
+            return tree
+        shardings = named(self._rules,
+                          cache_pspecs(self._rules, tree, layout=layout))
+        return jax.tree.map(jax.lax.with_sharding_constraint,
+                            tree, shardings)
+
+    def _place_cache(self, tree, layout: str):
+        """Device placement for a freshly initialized cache/pool."""
+        if self._rules is None:
+            return tree
+        return jax.device_put(
+            tree, named(self._rules,
+                        cache_pspecs(self._rules, tree, layout=layout)))
+
+    def _tr(self, track: str) -> str:
+        """Observability track name, replica-prefixed when the engine is
+        named (fleet replicas share one trace)."""
+        return f"{self.name}:{track}" if self.name else track
+
     # -- client API -----------------------------------------------------------
+
+    def prefix_probe(self, tokens) -> int:
+        """Longest radix-cached prefix of ``tokens`` (read-only; 0 when
+        prefix caching is disabled).  The per-replica digest behind
+        dispatch's prefix-affinity routing."""
+        if self.prefix_cache is None:
+            return 0
+        return self.prefix_cache.probe(tokens)
 
     async def generate(self, prompt_tokens, *, max_new_tokens=32,
                        temperature=0.0) -> list:
@@ -741,8 +847,8 @@ class ServingEngine:
                 "prefill.chunk", cat="serving.prefill",
                 parent=(task.req.span if task.req is not None
                         else task.span),
-                track=(f"slot:{task.slot}" if task.slot >= 0
-                       else "prefill"),
+                track=self._tr(f"slot:{task.slot}" if task.slot >= 0
+                               else "prefill"),
                 tokens=chunk, covered=task.covered)
         logits, kvseg = self._run_prefill(
             seg, task.acc, task.covered,
@@ -798,7 +904,7 @@ class ServingEngine:
                 + [0] * (nb - n_fill)
             self.page_op_shapes.add(("fill", nb))
             with maybe_span("page.fill", cat="serving.paging",
-                            track="paging", pages=n_fill):
+                            track=self._tr("paging"), pages=n_fill):
                 self.kv_pages = self._page_fill(
                     self.kv_pages, seg, jnp.asarray(ids, jnp.int32))
         if self.prefix_cache is not None:
@@ -880,7 +986,7 @@ class ServingEngine:
             req.span.attrs["slot"] = slot
             req.span.attrs["queue_s"] = req.started_at - req.submitted_at
             req.trz.event("admit", cat="serving.admit",
-                          parent=req.span, track=f"slot:{slot}",
+                          parent=req.span, track=self._tr(f"slot:{slot}"),
                           slot=slot)
 
     # -- paged admission -------------------------------------------------------
@@ -920,7 +1026,8 @@ class ServingEngine:
                 tokens[:n - 1])
         total = min(n + req.max_new_tokens, self.max_len)
         need = -(-total // self.page_size) - matched // self.page_size
-        with maybe_span("page.alloc", cat="serving.paging", track="paging",
+        with maybe_span("page.alloc", cat="serving.paging",
+                        track=self._tr("paging"),
                         need=need, matched_pages=matched // self.page_size):
             fresh = self._alloc_pages(need)
         if fresh is None:
@@ -929,7 +1036,8 @@ class ServingEngine:
             self.admit_stalls += 1
             if req.trz is not None:
                 req.trz.event("page.stall", cat="serving.paging",
-                              parent=req.span, track="paging", need=need)
+                              parent=req.span, track=self._tr("paging"),
+                              need=need)
             return None
         # the slot takes its own ref on shared pages — the trie may evict
         # its copy of the path while this request still decodes
@@ -966,7 +1074,7 @@ class ServingEngine:
             a.note_fault()
             if self.prefix_cache is not None:
                 with maybe_span("page.reclaim", cat="serving.paging",
-                                track="paging", need=need):
+                                track=self._tr("paging"), need=need):
                     self.prefix_cache.reclaim(need)
         ids = a.alloc(need)
         self._update_page_gauges()
@@ -986,7 +1094,7 @@ class ServingEngine:
             ids = list(mpages) + [0] * (nb - len(mpages))
             self.page_op_shapes.add(("gather", nb))
             with maybe_span("page.gather", cat="serving.paging",
-                            track="paging", pages=len(mpages)):
+                            track=self._tr("paging"), pages=len(mpages)):
                 pfx = self._page_gather(self.kv_pages,
                                         jnp.asarray(ids, jnp.int32))
             if len(self._pad_memo) >= self._pad_memo_cap:
@@ -1038,7 +1146,7 @@ class ServingEngine:
         trz = next((r.trz for r in self.active.values()
                     if r.trz is not None), None)
         dsp = trz.begin("decode.step", cat="serving.decode",
-                        parent=DETACHED, track="decode",
+                        parent=DETACHED, track=self._tr("decode"),
                         occupancy=len(self.active)) \
             if trz is not None else None
         t0 = time.perf_counter()

@@ -193,6 +193,18 @@ class PagedPrefixCache:
 
     # -- client API ----------------------------------------------------------
 
+    def probe(self, tokens) -> int:
+        """Read-only longest-cached-prefix length, for routing digests.
+
+        No pins, no edge splits, no lookup/hit accounting — safe to call
+        from the dispatch router on every request.  Because it refuses to
+        split edges, a partial edge match floors to the node boundary, so
+        the result can undershoot what :meth:`match_and_pin` would return;
+        a routing hint only needs ordering, not exactness.
+        """
+        _, matched = self._walk(tuple(tokens), split=False)
+        return matched
+
     def match_and_pin(self, tokens):
         """Longest cached page-aligned prefix.  Returns ``(matched_len,
         page_ids, handle)``; the caller must :meth:`release` the handle
@@ -416,6 +428,12 @@ class PrefixCache:
         return path, pos
 
     # -- client API ----------------------------------------------------------
+
+    def probe(self, tokens) -> int:
+        """Read-only longest-cached-prefix length (see
+        :meth:`PagedPrefixCache.probe`): no pins, splits, or accounting."""
+        _, matched = self._walk(tuple(tokens), split=False)
+        return matched
 
     def match_and_pin(self, tokens):
         """Longest cached prefix of ``tokens``.  Returns ``(matched_len,

@@ -6,6 +6,7 @@ from .rules import (  # noqa: F401
     cache_pspecs,
     constrain_activation,
     make_rules,
+    make_serving_rules,
     named,
     param_pspec,
     params_pspecs,

@@ -152,6 +152,20 @@ def make_rules(mesh, cfg) -> ShardingRules:
     return ShardingRules(mesh, strategy, param_rules, act_rules)
 
 
+def make_serving_rules(mesh, cfg) -> ShardingRules:
+    """Serving-time rules: tensor parallelism over ``model``, forced to the
+    ``heads`` strategy.
+
+    Decode works on a sequence of length 1, so the ulysses layouts (which
+    shard the *sequence* over ``model``) degenerate to full replication via
+    the divisibility fallback — every device would recompute the whole
+    attention.  ``heads`` shards q/k/v heads and the paged KV pool instead,
+    which is the layout the fleet's per-replica meshes want.  Head counts
+    that don't divide ``tp`` fall back to replication per-dim as usual.
+    """
+    return make_rules(mesh, cfg.replace(tp_strategy="heads"))
+
+
 class use_rules:
     def __init__(self, rules: ShardingRules | None):
         self.rules = rules
@@ -269,12 +283,20 @@ def opt_state_pspecs(rules: ShardingRules, model) -> dict:
     return params_pspecs(shadow, model)
 
 
-def _cache_leaf_pspec(rules: ShardingRules, path: str, shape) -> P:
+def _cache_leaf_pspec(rules: ShardingRules, path: str, shape,
+                      layout: str = "contiguous") -> P:
     """Cache sharding by leaf name:
 
-    KV caches [.., B, C, KVH, hd]: batch → dp; heads → model when divisible,
-    else the *sequence* dim shards over model (flash-decoding style partial
-    attention — XLA inserts the small partial-softmax reductions).
+    Contiguous KV caches [.., B, C, KVH, hd]: batch → dp; heads → model when
+    divisible, else the *sequence* dim shards over model (flash-decoding
+    style partial attention — XLA inserts the small partial-softmax
+    reductions).
+    Paged KV pools [.., P, ps, KVH, hd]: only the head dim shards (over
+    model, when divisible) — page and in-page dims stay replicated because
+    page ids are a single global namespace shared by every slot's page
+    table; splitting pages across devices would turn the allocator's
+    refcounted free list into a distributed one.  Page tables (plain int32
+    host arrays) never reach this function.
     Recurrent states: width/head dims over model.
     """
     sizes = _axis_sizes(rules.mesh)
@@ -282,7 +304,11 @@ def _cache_leaf_pspec(rules: ShardingRules, path: str, shape) -> P:
     leaf = path.split("/")[-1]
     nd = len(shape)
     spec = [None] * nd
-    if leaf in ("k", "v", "cross_k", "cross_v"):
+    if layout == "paged" and leaf in ("k", "v"):
+        kvh = nd - 2
+        if _fit(shape[kvh], ("model",), sizes):
+            spec[kvh] = "model"
+    elif leaf in ("k", "v", "cross_k", "cross_v"):
         b, c, kvh = nd - 4, nd - 3, nd - 2
         spec[b] = _fit(shape[b], dp, sizes)
         if _fit(shape[kvh], ("model",), sizes):
@@ -308,12 +334,15 @@ def _cache_leaf_pspec(rules: ShardingRules, path: str, shape) -> P:
     return P(*spec)
 
 
-def cache_pspecs(rules: ShardingRules, cache_abstract) -> dict:
+def cache_pspecs(rules: ShardingRules, cache_abstract,
+                 layout: str = "contiguous") -> dict:
+    if layout not in ("contiguous", "paged"):
+        raise ValueError(f"unknown cache layout {layout!r}")
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
     out = []
     for path, leaf in flat:
         pstr = "/".join(str(getattr(k, "key", k)) for k in path)
-        out.append(_cache_leaf_pspec(rules, pstr, leaf.shape))
+        out.append(_cache_leaf_pspec(rules, pstr, leaf.shape, layout))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -1,0 +1,223 @@
+"""Replica-fleet tests: the prefix-affinity routing policy (warm routing,
+cold fallback, saturation spill, broken digests), ``make_router``
+validation errors, the per-replica route/prefix-hit counters, and the
+``EngineFleet`` end-to-end token-exactness invariant — a routed fleet
+returns exactly the tokens a single engine returns."""
+
+import asyncio
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.dispatch import Dispatcher, PrefixAffinityRouter, make_router
+from repro.dispatch.stats import DispatchStats
+from repro.models import build_model
+from repro.serving import ByteTokenizer, EngineFleet, ServingEngine
+
+
+class WarmBackend:
+    """Stub backend with a programmable prefix digest."""
+
+    def __init__(self, depths=None):
+        self.depths = depths or {}
+
+    def prefix_probe(self, hint):
+        return self.depths.get(hint, 0)
+
+
+class BrokenDigestBackend:
+    def prefix_probe(self, hint):
+        raise RuntimeError("digest exploded")
+
+
+# -- prefix-affinity policy ---------------------------------------------------
+
+
+def test_affinity_routes_to_warmest_replica():
+    cold, warm, warmer = (WarmBackend(), WarmBackend({"s1": 8}),
+                          WarmBackend({"s1": 32}))
+    r = make_router([cold, warm, warmer], policy="prefix_affinity")
+    assert r.pick("s1").backend is warmer
+    # warmth beats load (no spill configured): even with backlog the
+    # warm replica keeps its session
+    r.pick("s1").begin()
+    assert r.pick("s1").backend is warmer
+
+
+def test_affinity_cold_falls_back_to_least_outstanding():
+    backends = [WarmBackend(), WarmBackend()]
+    r = make_router(backends, policy="prefix_affinity")
+    first = r.pick("never-seen")
+    first.begin()
+    assert r.pick("never-seen").backend is not first.backend
+    # no hint at all (e.g. an embed call) also falls back
+    assert isinstance(r, PrefixAffinityRouter)
+    assert r.pick(None) is not None
+
+
+def test_affinity_min_match_threshold():
+    shallow = WarmBackend({"s1": 4})
+    idle = WarmBackend()
+    r = make_router([shallow, idle], policy="prefix_affinity",
+                    min_match=8)
+    shallow_rep = r.replicas[0]
+    shallow_rep.begin()     # shallow is warmer but busier…
+    picked = r.pick("s1")   # …and 4 < min_match → least-outstanding
+    assert picked.backend is idle
+
+
+def test_affinity_overload_spill():
+    warm = WarmBackend({"s1": 16})
+    cold = WarmBackend()
+    r = make_router([warm, cold], policy="prefix_affinity",
+                    overload_slack=1)
+    warm_rep = r.replicas[0]
+    # within slack: backlog 1 vs 0 → still routes warm
+    warm_rep.begin()
+    assert r.pick("s1").backend is warm
+    # beyond slack: backlog 2 vs 0 → re-paying prefill beats queueing
+    warm_rep.begin()
+    assert r.pick("s1").backend is cold
+
+
+def test_affinity_tie_breaks_by_load_then_wrr():
+    a, b = WarmBackend({"s1": 16}), WarmBackend({"s1": 16})
+    r = make_router([a, b], policy="prefix_affinity")
+    r.replicas[0].begin()
+    assert r.pick("s1").backend is b        # equally warm, b is idler
+    r.replicas[0].end()
+    picks = {r.pick("s1").backend for _ in range(2)}
+    assert picks == {a, b}                  # equal warmth+load interleaves
+
+
+def test_affinity_broken_digest_never_fails_routing():
+    r = make_router([BrokenDigestBackend(), WarmBackend({"s1": 8})],
+                    policy="prefix_affinity")
+    assert r.pick("s1").backend is r.replicas[1].backend
+    # both broken/cold → plain least-outstanding, still no exception
+    r2 = make_router([BrokenDigestBackend(), BrokenDigestBackend()],
+                     policy="prefix_affinity")
+    assert r2.pick("s1") is not None
+
+
+# -- make_router validation ---------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["weighted", "least_outstanding",
+                                    "prefix_affinity"])
+def test_make_router_rejects_weight_length_mismatch(policy):
+    with pytest.raises(ValueError, match="len\\(weights\\) must match"):
+        make_router(["a", "b", "c"], policy=policy, weights=[1, 2])
+
+
+@pytest.mark.parametrize("policy", ["weighted", "least_outstanding",
+                                    "prefix_affinity"])
+@pytest.mark.parametrize("bad", [[1, 0], [1, -2.5]])
+def test_make_router_rejects_nonpositive_weights(policy, bad):
+    with pytest.raises(ValueError, match="weights must be positive"):
+        make_router(["a", "b"], policy=policy, weights=bad)
+
+
+def test_make_router_rejects_name_length_mismatch():
+    with pytest.raises(ValueError, match="len\\(names\\) must match"):
+        make_router(["a", "b"], names=["only-one"])
+
+
+def test_make_router_rejects_unknown_policy_kwargs():
+    with pytest.raises(TypeError):
+        make_router(["a"], policy="weighted", min_match=2)
+
+
+# -- per-replica route counters ----------------------------------------------
+
+
+def test_note_route_counters_and_snapshot():
+    st = DispatchStats()
+    st.note_route("r0", matched=12)     # warm routed request
+    st.note_route("r0", matched=0)      # probed, cold
+    st.note_route("r0", matched=None)   # un-probe-able (no hint)
+    snap = st.snapshot()["backends"]["r0"]
+    assert snap["routed"] == 3
+    assert snap["prefix_probed"] == 2
+    assert snap["prefix_hits"] == 1
+    assert snap["prefix_hit_tokens"] == 12
+    assert "affinity 1/2 warm (12 tok)" in st.report()
+
+
+def test_dispatcher_records_per_replica_routes():
+    class CountingBackend(WarmBackend):
+        async def generate(self, prompt, *, max_tokens, temperature,
+                           stop):
+            return f"out:{prompt}"
+
+    warm = CountingBackend({"s1:q": 6})
+    cold = CountingBackend()
+    d = Dispatcher([warm, cold], policy="prefix_affinity",
+                   names=["warm", "cold"])
+
+    async def go():
+        return await d.generate("s1:q", max_tokens=4, temperature=0.0,
+                                stop=None)
+
+    assert asyncio.run(go()) == "out:s1:q"
+    snap = d.stats.snapshot()["backends"]
+    assert snap["warm"]["routed"] == 1
+    assert snap["warm"]["prefix_hits"] == 1
+    assert snap["warm"]["prefix_hit_tokens"] == 6
+    assert snap.get("cold", {}).get("routed", 0) == 0
+
+
+# -- EngineFleet end-to-end ---------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("stablelm-3b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=4, head_dim=16, d_ff=128)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(3))
+
+
+def test_fleet_validation(tiny):
+    model, params = tiny
+    with pytest.raises(ValueError, match="replicas"):
+        EngineFleet(model, params, replicas=0)
+    with pytest.raises(ValueError, match="tp"):
+        EngineFleet(model, params, tp=0)
+    with pytest.raises(RuntimeError, match="devices"):
+        EngineFleet(model, params, tp=1 + len(jax.devices()))
+
+
+def test_fleet_tokens_match_single_engine(tiny):
+    model, params = tiny
+    tok = ByteTokenizer(model.cfg.vocab_size)
+    prompts = [f"session {i % 2}: question {i}" for i in range(6)]
+
+    single = ServingEngine(model, params, max_slots=4, max_len=64)
+
+    async def ref():
+        outs = await asyncio.gather(*(
+            single.generate(tok.encode(p), max_new_tokens=6,
+                            temperature=0.0) for p in prompts))
+        await single.stop()
+        return [tok.decode(o) for o in outs]
+
+    fleet = EngineFleet(model, params, replicas=2, max_slots=4,
+                        max_len=64)
+
+    async def routed():
+        outs = await asyncio.gather(*(
+            fleet.dispatcher.generate(p, max_tokens=6, temperature=0.0,
+                                      stop=None) for p in prompts))
+        await fleet.stop()
+        return list(outs)
+
+    expected = asyncio.run(ref())
+    got = asyncio.run(routed())
+    assert got == expected
+    # the fleet actually spread load and counted it per replica
+    snap = fleet.stats.snapshot()["backends"]
+    assert sum(b["routed"] for b in snap.values()) == len(prompts)
+    assert all(b["routed"] > 0 for b in snap.values())
+    assert fleet.engine_stats().keys() == {"replica0", "replica1"}
