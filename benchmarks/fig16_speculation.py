@@ -1,0 +1,335 @@
+"""Fig. 16: speculative execution (beyond-paper; DESIGN.md §2.4,
+EXPERIMENTS.md §Fig. 16).
+
+Three legs, all differential against the non-speculative engine:
+
+  branchy  a routing cascade: each round classifies twice (coarse →
+           fine, both slow @unordered calls whose results feed ``if``
+           conditions) before dispatching one of four experts, then
+           audits the pick through a @sequential effect.  Non-
+           speculatively every round costs 3 serial stages; with
+           ``speculation()`` both arms of every branch run while the
+           conditions are still pending, so a round costs ~1 stage.
+           The acceptance bar is ≥2× end-to-end over the
+           non-speculative engine.
+  predict  value speculation: a ``predictor=`` hook on the routing
+           external publishes a guess, three dependent enrichments
+           launch on it, and validation confirms the guess — the
+           route → fan-out chain collapses from 2 stages to ~1.
+  race     ``first_success`` over three redundant rollouts with loser
+           cancellation through the dispatcher, vs running the
+           rollouts sequentially until one succeeds.
+
+Every trial asserts result equality across plain / non-speculative /
+speculative runs, ≡_A trace equivalence of both engine runs against the
+sequential oracle, zero committed effects from losing arms
+(``loser_effects`` + audit-log equality), a bounded wasted-work ratio
+(speculative dispatches ≤ WASTE_BOUND × non-speculative), and — for the
+race — that the winner is exactly the deterministic-latency oracle's
+pick and the losers fully drained (no leaked dispatch admissions).
+
+    PYTHONPATH=src:. python benchmarks/fig16_speculation.py
+"""
+
+from __future__ import annotations
+
+import asyncio
+import hashlib
+import json
+import statistics
+import time
+from pathlib import Path
+
+from repro.core import (equivalent, first_success, poppy, recording,
+                        sequential, sequential_mode, speculation, unordered)
+from repro.core.ai import SimulatedBackend, llm, use_backend, use_dispatcher
+
+from benchmarks.common import maybe_tracing
+
+ROUNDS = 3
+CALL_S = 0.03
+#: speculative dispatches per non-speculative dispatch: a round's cascade
+#: dispatches at most 7 calls (1 coarse + 2 fine + 4 experts) where the
+#: non-speculative engine dispatches 3 — anything past 7/3 (+ slack for
+#: the audit tail) means speculation is leaking work it should not start
+WASTE_BOUND = 3.0
+
+# module-level state: dispatch log + audit log (reset per run); @poppy
+# needs module-level externals so branch arms classify statically
+CALLS: list = []
+EFFECTS: list = []
+_DELAY = {"s": CALL_S}
+
+
+def _digest(text):
+    return int.from_bytes(
+        hashlib.sha256(str(text).encode()).digest()[:4], "big")
+
+
+@unordered(returns_immutable=True)
+async def classify(stage, text):
+    CALLS.append(("classify", stage))
+    await asyncio.sleep(_DELAY["s"])
+    return _digest(f"{stage}|{text}") % 2 == 0
+
+
+@unordered(returns_immutable=True)
+async def expert(kind, text):
+    CALLS.append(("expert", kind))
+    await asyncio.sleep(_DELAY["s"])
+    return f"{kind}#{_digest(text) % 997}"
+
+
+@sequential
+def audit(entry):
+    # the per-round persistence effect: must only ever record the
+    # winning arm's pick, in program order
+    EFFECTS.append(entry)
+    return None
+
+
+@poppy
+def route_pipeline(q, rounds):
+    acc = q
+    for i in range(rounds):
+        coarse = classify(f"coarse{i}", acc)
+        if coarse:
+            fine = classify(f"fineA{i}", acc)
+            if fine:
+                r = expert(f"a1-{i}", acc)
+            else:
+                r = expert(f"a2-{i}", acc)
+        else:
+            fine = classify(f"fineB{i}", acc)
+            if fine:
+                r = expert(f"b1-{i}", acc)
+            else:
+                r = expert(f"b2-{i}", acc)
+        audit(r)
+        acc = f"{acc}>{r}"
+    return acc
+
+
+def _predict_route(pos, kw):
+    # mirrors ``route``'s digest on the peeked argument; a still-pending
+    # (or speculative) argument peeks as a Pending and the int() below
+    # raises — returning None declines the prediction
+    try:
+        return f"route-{_digest(pos[0]) % 4}"
+    except Exception:
+        return None
+
+
+@unordered(returns_immutable=True, predictor=_predict_route)
+async def pick_route(q):
+    CALLS.append(("pick_route", q))
+    await asyncio.sleep(_DELAY["s"])
+    return f"route-{_digest(q) % 4}"
+
+
+@unordered(returns_immutable=True)
+async def consult(route, k):
+    CALLS.append(("consult", route, k))
+    await asyncio.sleep(_DELAY["s"])
+    return f"{route}/{k}"
+
+
+@poppy
+def routed_fanout(q):
+    r = pick_route(q)
+    a = consult(r, 0)
+    b = consult(r, 1)
+    c = consult(r, 2)
+    return f"{a}|{b}|{c}"
+
+
+@poppy
+def race_rollouts(q):
+    return first_success(
+        lambda: llm(f"rollout-a {q}", max_tokens=48),
+        lambda: llm(f"rollout-b {q}", max_tokens=8),
+        lambda: llm(f"rollout-c {q}", max_tokens=24),
+    )
+
+
+def _reset():
+    CALLS.clear()
+    EFFECTS.clear()
+
+
+def _timed(fn, *args, plain=False, spec=False):
+    _reset()
+    ctx = speculation() if spec else _null()
+    with ctx as sp:
+        with recording() as tr:
+            t0 = time.perf_counter()
+            if plain:
+                with sequential_mode():
+                    r = fn(*args)
+            else:
+                r = fn(*args)
+            dt = time.perf_counter() - t0
+    stats = sp.stats if spec else None
+    return r, dt, tr, list(EFFECTS), len(CALLS), stats
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+def bench_branchy(*, rounds=ROUNDS, trials=3, call_s=CALL_S):
+    _DELAY["s"] = call_s
+    times = {"plain": [], "nonspec": [], "spec": []}
+    waste = 0.0
+    for _ in range(trials):
+        r0, dt0, t0, fx0, _, _ = _timed(route_pipeline, "q", rounds,
+                                        plain=True)
+        r1, dt1, t1, fx1, n1, _ = _timed(route_pipeline, "q", rounds)
+        r2, dt2, t2, fx2, n2, st = _timed(route_pipeline, "q", rounds,
+                                          spec=True)
+        times["plain"].append(dt0)
+        times["nonspec"].append(dt1)
+        times["spec"].append(dt2)
+        assert r0 == r1 == r2, f"results diverge: {r0!r}/{r1!r}/{r2!r}"
+        for tag, tr in (("nonspec", t1), ("spec", t2)):
+            ok, why = equivalent(t0, tr)
+            assert ok, f"{tag}: trace not ≡_A: {why}"
+        # rollback airtightness: the audit log is identical in content
+        # *and order* across all three runs — no loser effect committed
+        assert fx0 == fx1 == fx2, f"effects diverge: {fx0}/{fx1}/{fx2}"
+        assert st.loser_effects == 0
+        assert st.branches_speculated >= rounds
+        assert st.arms_aborted >= rounds
+        ratio = n2 / n1
+        waste = max(waste, ratio)
+        assert ratio <= WASTE_BOUND, (
+            f"wasted work unbounded: {n2} speculative dispatches vs "
+            f"{n1} non-speculative ({ratio:.2f}× > {WASTE_BOUND}×)")
+    med = {m: statistics.median(ts) for m, ts in times.items()}
+    return {
+        "rounds": rounds,
+        **{f"{m}_s": t for m, t in med.items()},
+        "speedup_spec_vs_nonspec": med["nonspec"] / med["spec"],
+        "speedup_spec_vs_plain": med["plain"] / med["spec"],
+        "waste_ratio": waste,
+    }
+
+
+def bench_predict(*, trials=3, call_s=CALL_S):
+    _DELAY["s"] = call_s
+    times = {"nonspec": [], "spec": []}
+    for _ in range(trials):
+        r0, _, t0, _, _, _ = _timed(routed_fanout, "qq", plain=True)
+        r1, dt1, t1, _, _, _ = _timed(routed_fanout, "qq")
+        r2, dt2, t2, _, _, st = _timed(routed_fanout, "qq", spec=True)
+        times["nonspec"].append(dt1)
+        times["spec"].append(dt2)
+        assert r0 == r1 == r2
+        for tr in (t1, t2):
+            ok, why = equivalent(t0, tr)
+            assert ok, f"trace not ≡_A: {why}"
+        # the predictor mirrors the route digest, so every guess
+        # validates and nothing re-runs
+        assert st.predictions == 1 and st.pred_hits == 1
+        assert st.redo_runs == 0
+    med = {m: statistics.median(ts) for m, ts in times.items()}
+    return {
+        "nonspec_s": med["nonspec"],
+        "spec_s": med["spec"],
+        "speedup_predict": med["nonspec"] / med["spec"],
+    }
+
+
+def bench_race(*, trials=3):
+    from repro.dispatch import Dispatcher
+
+    race_times, seq_times = [], []
+    for _ in range(trials):
+        be = SimulatedBackend()
+        # the deterministic-latency oracle: the winner must be exactly
+        # the rollout the backend's latency model finishes first
+        cands = [(f"rollout-{k} hello", mt)
+                 for k, mt in (("a", 48), ("b", 8), ("c", 24))]
+
+        def lat(p, mt):
+            return be.latency(p, min(mt, 1 + be._digest(p) % 7))
+
+        wp, wmt = min(cands, key=lambda c: lat(*c))
+        d = Dispatcher()
+        with use_backend(be), use_dispatcher(d):
+            with sequential_mode():
+                expect = llm(wp, max_tokens=wmt)
+            # sequential-fallback baseline: try rollouts one by one
+            t0 = time.perf_counter()
+            with sequential_mode():
+                for p, mt in cands:
+                    llm(p, max_tokens=mt)
+            seq_times.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            out = race_rollouts("hello")
+            race_times.append(time.perf_counter() - t0)
+        assert out == expect, f"race winner diverges: {out!r} != {expect!r}"
+        st = d.stats
+        # losers cancelled *through the dispatcher* and fully drained:
+        # no admission left queued, no attempt still in flight
+        assert st.races == 1 and st.race_losers == 2 and st.cancelled == 2
+        assert st.queue_depth == 0
+        assert be._in_flight == 0
+    race = statistics.median(race_times)
+    seq = statistics.median(seq_times)
+    return {
+        "race_s": race,
+        "sequential_s": seq,
+        "speedup_race": seq / race,
+    }
+
+
+def run(out_dir="experiments/apps", trials=3, rounds=ROUNDS, call_s=CALL_S,
+        smoke=False, trace_out=None):
+    with maybe_tracing(trace_out):
+        return _run(out_dir, trials, rounds, call_s, smoke)
+
+
+def _run(out_dir, trials, rounds, call_s, smoke):
+    br = bench_branchy(rounds=rounds, trials=trials, call_s=call_s)
+    print(f"branchy  plain {br['plain_s']:.3f}s  nonspec "
+          f"{br['nonspec_s']:.3f}s  spec {br['spec_s']:.3f}s  "
+          f"spec/nonspec {br['speedup_spec_vs_nonspec']:.2f}×  "
+          f"(waste {br['waste_ratio']:.2f}×)", flush=True)
+    pr = bench_predict(trials=trials, call_s=call_s)
+    print(f"predict  nonspec {pr['nonspec_s']:.3f}s  spec "
+          f"{pr['spec_s']:.3f}s  {pr['speedup_predict']:.2f}×", flush=True)
+    rc = bench_race(trials=trials)
+    print(f"race     sequential {rc['sequential_s']:.3f}s  race "
+          f"{rc['race_s']:.3f}s  {rc['speedup_race']:.2f}×", flush=True)
+
+    if not smoke:
+        assert br["speedup_spec_vs_nonspec"] >= 2.0, (
+            f"acceptance: speculation must run the branchy routing app ≥2× "
+            f"faster than the non-speculative engine, got "
+            f"{br['speedup_spec_vs_nonspec']:.2f}×")
+        print(f"\nacceptance: {br['speedup_spec_vs_nonspec']:.2f}× ≥ 2× ✓")
+
+    result = {"branchy": br, "predict": pr, "race": rc}
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig16.json").write_text(json.dumps(result, indent=1))
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    ap.add_argument("--call-s", type=float, default=CALL_S)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace of the run here")
+    args = ap.parse_args()
+    run(trials=args.trials, rounds=args.rounds, call_s=args.call_s,
+        trace_out=args.trace_out)

@@ -6,6 +6,7 @@
     Fig. 11  effect-domain keying          fig11_effect_domains
     Fig. 12  auto-batching                 fig12_autobatch
     Fig. 13  prefix-aware prefill          fig13_prefix_prefill
+    Fig. 16  speculative execution         fig16_speculation
     Fig. 6   ToT execution trace           fig6_trace
     Fig. 7   interpreter overhead          fig7_overhead
     Fig. 8   parallelism scaling           fig8_scaling
@@ -47,7 +48,7 @@ def smoke(out_path=SMOKE_JSON):
     from benchmarks import (fig5_speedup, fig9_dispatch, fig10_sync_offload,
                             fig11_effect_domains, fig12_autobatch,
                             fig13_prefix_prefill, fig14_paged_kv,
-                            fig15_fleet, obs_overhead)
+                            fig15_fleet, fig16_speculation, obs_overhead)
 
     t0 = time.time()
     figures = {}
@@ -126,6 +127,22 @@ def smoke(out_path=SMOKE_JSON):
             lambda: fig15_fleet.run(trials=1, smoke=True),
             lambda r: {"fleet_scaling_x4": r["fleet_scaling_x4"],
                        "affinity_hit_rate": r["affinity_hit_rate"]})
+    # fig16 asserts, on every trial, result equality + ≡_A of both the
+    # non-speculative and speculative runs against the sequential oracle,
+    # zero committed effects from losing arms, the bounded wasted-work
+    # ratio, perfect predictor validation, and race-loser drain through
+    # the dispatcher — so a speculation-soundness regression (a loser
+    # effect committing, a leaked admission, an unvalidated guess
+    # escaping) fails this job even at smoke scale; the ≥2× speedup bar
+    # is enforced only in full runs, but spec_vs_nonspec is tracked by
+    # the gate
+    attempt("fig16", "speculative equality + ≡_A + zero loser effects + "
+                     "bounded waste + race drain",
+            lambda: fig16_speculation.run(trials=1, call_s=0.01,
+                                          smoke=True),
+            lambda r: {"spec_vs_nonspec":
+                       r["branchy"]["speedup_spec_vs_nonspec"],
+                       "race": r["race"]["speedup_race"]})
     # obs_overhead asserts the tracing-enabled overhead bar (<5% pairwise
     # delta on fig5 tiny-N) and critical-path attribution soundness; an
     # assertion failure surfaces through the same equivalence machinery
@@ -169,7 +186,8 @@ def main():
                             fig8_scaling, fig10_sync_offload,
                             fig11_effect_domains, fig12_autobatch,
                             fig13_prefix_prefill, fig14_paged_kv,
-                            fig15_fleet, table1_characteristics)
+                            fig15_fleet, fig16_speculation,
+                            table1_characteristics)
 
     print("=" * 72)
     print("Table 1 — benchmark program characteristics")
@@ -224,6 +242,12 @@ def main():
           "placement")
     print("=" * 72)
     fig15_fleet.run(trials=trials)
+
+    print("\n" + "=" * 72)
+    print("Fig. 16 — speculation: branchy routing cascade, predicted "
+          "routes, racing rollouts")
+    print("=" * 72)
+    fig16_speculation.run(trials=trials)
 
     print("\n" + "=" * 72)
     print("Fig. 6 — ToT execution trace (queue → dispatch → resolve)")

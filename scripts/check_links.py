@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Markdown link checker for the repo docs (CI lint step).
+
+Validates, with no third-party dependencies:
+
+- relative links resolve to a file or directory in the repo
+  (``[x](../DESIGN.md)``, ``[y](docs/BENCHMARKS.md)``);
+- fragment links point at a real heading's GitHub-style anchor, both
+  in-page (``[z](#refreshing)``) and cross-page
+  (``[w](DESIGN.md#2-runtime)``);
+- reference-style definitions (``[label]: target``) get the same checks.
+
+External links (http/https/mailto) are *not* fetched — CI must not
+depend on the network — but a bare-domain target missing its scheme is
+flagged.  Checked files: README.md, DESIGN.md, EXPERIMENTS.md,
+ROADMAP.md, and everything under docs/.
+
+    python scripts/check_links.py [root]
+
+Exit code 0 when every link resolves, 1 otherwise (one line per broken
+link: ``file:line: message``).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DOC_FILES = ("README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md")
+DOC_DIRS = ("docs",)
+
+# [text](target) — target may carry an optional "title"; images share the
+# syntax (the leading "!" doesn't change resolution rules)
+_INLINE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+# [label]: target reference definitions
+_REFDEF = re.compile(r"^\s{0,3}\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_FENCE = re.compile(r"^(```|~~~).*?^\1\s*$", re.MULTILINE | re.DOTALL)
+_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_anchor(heading: str) -> str:
+    """GitHub's anchor algorithm: strip markup, lowercase, drop anything
+    but word chars/spaces/hyphens, spaces become hyphens."""
+    text = re.sub(r"[`*_]|\[([^\]]*)\]\([^)]*\)", r"\1", heading).strip()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.lower().replace(" ", "-")
+
+
+def doc_files(root: Path):
+    files = [root / f for f in DOC_FILES if (root / f).is_file()]
+    for d in DOC_DIRS:
+        files.extend(sorted((root / d).rglob("*.md"))
+                     if (root / d).is_dir() else [])
+    return files
+
+
+def anchors_of(path: Path, cache: dict) -> set:
+    if path not in cache:
+        text = _FENCE.sub("", path.read_text(encoding="utf-8"))
+        cache[path] = {github_anchor(h) for h in _HEADING.findall(text)}
+    return cache[path]
+
+
+def check_file(path: Path, root: Path, cache: dict) -> list:
+    raw = path.read_text(encoding="utf-8")
+    # mask fenced code blocks (keep newlines so line numbers survive)
+    text = _FENCE.sub(lambda m: re.sub(r"[^\n]", " ", m.group(0)), raw)
+    errors = []
+
+    def lineno(pos: int) -> int:
+        return text.count("\n", 0, pos) + 1
+
+    targets = [(m.start(1), m.group(1)) for m in _INLINE.finditer(text)]
+    targets += [(m.start(1), m.group(1)) for m in _REFDEF.finditer(text)]
+    for pos, target in targets:
+        where = f"{path.relative_to(root)}:{lineno(pos)}"
+        if target.startswith(_SCHEMES):
+            continue
+        if target.startswith("#"):
+            frag, dest = target[1:], path
+        else:
+            base, _, frag = target.partition("#")
+            dest = (path.parent / base).resolve()
+            if not dest.exists():
+                errors.append(f"{where}: broken link: {target!r} "
+                              f"(no such file {base!r})")
+                continue
+            if re.match(r"^[\w.-]+\.(com|org|net|io|dev)(/|$)", base):
+                errors.append(f"{where}: bare domain {base!r} — "
+                              "missing https:// ?")
+                continue
+        if frag and dest.suffix == ".md":
+            if frag.lower() not in anchors_of(dest, cache):
+                errors.append(f"{where}: broken anchor: {target!r} "
+                              f"(no heading anchors to #{frag!r} in "
+                              f"{dest.name})")
+    return errors
+
+
+def main(argv) -> int:
+    root = Path(argv[1]).resolve() if len(argv) > 1 else \
+        Path(__file__).resolve().parent.parent
+    files = doc_files(root)
+    cache: dict = {}
+    errors = []
+    for f in files:
+        errors.extend(check_file(f, root, cache))
+    for e in errors:
+        print(e)
+    n_links = sum(len(_INLINE.findall(f.read_text(encoding="utf-8")))
+                  for f in files)
+    if errors:
+        print(f"\ncheck_links: {len(errors)} broken link(s) across "
+              f"{len(files)} files")
+        return 1
+    print(f"check_links: {len(files)} files, ~{n_links} links, all OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -33,6 +33,7 @@ from .batching import (  # noqa: F401
 from .engine import OffloadPolicy, current_offload_policy, offload_policy  # noqa: F401
 from .errors import (  # noqa: F401
     ExternalCallError,
+    FirstSuccessError,
     PoppyCompileError,
     PoppyError,
     PoppyRuntimeError,
@@ -45,16 +46,19 @@ from .registry import (  # noqa: F401
     BatchSpec,
     register_immutable_type,
 )
+from .ai import first_success  # noqa: F401
+from .speculate import SpecStats, current_speculation, speculation  # noqa: F401
 from .trace import Trace, equivalent, recording  # noqa: F401
 
 __all__ = [
     "poppy", "unordered", "readonly", "sequential", "external",
     "sequential_mode", "in_sequential_mode", "PoppyFn",
     "PoppyError", "PoppyCompileError", "PoppyRuntimeError",
-    "PoppyUnboundLocalError", "ExternalCallError",
+    "PoppyUnboundLocalError", "ExternalCallError", "FirstSuccessError",
     "UNORDERED", "READONLY", "SEQUENTIAL", "register_immutable_type",
     "Trace", "recording", "equivalent",
     "OffloadPolicy", "offload_policy", "current_offload_policy",
     "BatchSpec", "batch_handler", "BatchingPolicy", "batching",
     "current_batching_policy",
+    "speculation", "SpecStats", "current_speculation", "first_success",
 ]

@@ -27,12 +27,16 @@ from __future__ import annotations
 import asyncio
 import contextvars
 import hashlib
+import inspect
 import math
 import threading
 from dataclasses import dataclass, field
 
+from . import registry
 from .annotations import batch_handler, readonly, sequential, unordered
+from .errors import FirstSuccessError
 from .values import is_pending, peek
+from ..obs.spans import maybe_span
 
 
 class Backend:
@@ -209,6 +213,8 @@ def get_backend() -> Backend:
 
 
 class use_backend:
+    """Context manager binding the ambient LLM/embed backend."""
+
     def __init__(self, b: Backend):
         self.b = b
 
@@ -559,6 +565,98 @@ class use_sync_clients:
         for w, orig in self._saved:
             w.__poppy_dispatch__ = orig
         return False
+
+
+# ---------------------------------------------------------------------------
+# redundant-rollout racing
+
+
+async def _drive_rollout(r):
+    """Run one rollout to completion on the racing loop.
+
+    Accepts async callables (awaited directly), annotation wrappers over
+    *blocking* components (offloaded to a worker thread so the race stays
+    concurrent), and plain sync callables returning either a value or an
+    awaitable (e.g. ``lambda: llm(prompt)`` called from external code,
+    where the wrapper hands back the coroutine)."""
+    if not callable(r):
+        raise TypeError(
+            f"first_success rollout must be callable, got {type(r).__name__}")
+    if registry.is_async_callable(r):
+        return await r()
+    target = getattr(r, "__poppy_dispatch__", None)
+    if target is not None and not registry.is_async_callable(target):
+        # a blocking component twin (llm_sync et al.): don't block the loop
+        return await asyncio.to_thread(r)
+    out = r()
+    if inspect.isawaitable(out):
+        return await out
+    return out
+
+
+@unordered(returns_immutable=True)
+async def first_success(*rollouts, accept=None):
+    """Race redundant rollouts; the first acceptable result wins and every
+    other rollout is cancelled (speculation's early-termination combinator,
+    DESIGN.md §2.4).
+
+    Each rollout is a zero-argument callable — typically a closure over a
+    component call, e.g. ``lambda: llm(prompt, temperature=0.8)``.  All
+    rollouts launch concurrently; the first to finish with a result that
+    ``accept`` admits (default: any non-raising result) wins.  Ties within
+    one completion wave break to the lowest argument index, so the race is
+    deterministic under simultaneous completion.  Losers are cancelled and
+    *drained* before returning — cancellation propagates through the
+    dispatcher (admission slots and replica in-flight counts are released
+    by its ``finally`` blocks and counted in ``DispatchStats.cancelled``),
+    so a race never leaks capacity.
+
+    Raises :class:`~repro.core.errors.FirstSuccessError` with the
+    per-rollout outcomes when every rollout fails.  Being ``@unordered``
+    with an immutable result, the race itself dispatches the moment its
+    closures are ready and composes with branch speculation.
+    """
+    if not rollouts:
+        raise ValueError("first_success needs at least one rollout")
+    st = get_dispatcher().stats
+    st.races += 1
+    tasks = [asyncio.ensure_future(_drive_rollout(r)) for r in rollouts]
+    index = {t: i for i, t in enumerate(tasks)}
+    failures: list = [None] * len(tasks)
+    winner = None
+    try:
+        with maybe_span("first_success", cat="race", n=len(rollouts)):
+            pending = set(tasks)
+            while pending and winner is None:
+                done, pending = await asyncio.wait(
+                    pending, return_when=asyncio.FIRST_COMPLETED)
+                for t in sorted(done, key=index.__getitem__):
+                    i = index[t]
+                    if t.cancelled():
+                        failures[i] = asyncio.CancelledError()
+                        continue
+                    e = t.exception()
+                    if e is not None:
+                        failures[i] = e
+                        continue
+                    res = t.result()
+                    if accept is not None and not accept(res):
+                        failures[i] = res
+                        continue
+                    winner = (i, res)
+                    break
+            if winner is None:
+                raise FirstSuccessError(failures)
+            return winner[1]
+    finally:
+        losers = [t for t in tasks if not t.done()]
+        for t in losers:
+            t.cancel()
+        if losers:
+            st.race_losers += len(losers)
+            # drain: losers must be fully unwound (dispatcher slots
+            # released) before the race returns
+            await asyncio.gather(*losers, return_exceptions=True)
 
 
 # console output must stay in program order; inline offload — a print is

@@ -187,18 +187,19 @@ def _sig_params(fn):
 
 
 def _static_info(cls_name, offload=None, effects=None, imm_result=False,
-                 batchable=None):
+                 batchable=None, predictor=None):
     return lambda fn: registry.ExternalInfo(
         cls=cls_name, name=registry.callable_name(fn), offload=offload,
         effects=effects, params=_sig_params(fn), imm_result=imm_result,
-        batchable=batchable)
+        batchable=batchable, predictor=predictor)
 
 
 def _static_annotation(cls_name, fn, offload, effects=None,
-                       returns_immutable=False, batchable=None):
+                       returns_immutable=False, batchable=None,
+                       predictor=None):
     deco = _external(_static_info(cls_name, offload=offload, effects=effects,
                                   imm_result=returns_immutable,
-                                  batchable=batchable))
+                                  batchable=batchable, predictor=predictor))
     return deco if fn is None else deco(fn)
 
 
@@ -233,7 +234,7 @@ def batch_handler(wrapper):
 
 
 def unordered(fn=None, *, offload=None, effects=None,
-              returns_immutable=False, batchable=None):
+              returns_immutable=False, batchable=None, predictor=None):
     """External call that may execute in any order (stateless externals,
     pure operations on immutable data).
 
@@ -258,9 +259,20 @@ def unordered(fn=None, *, offload=None, effects=None,
     into one batched backend request — a ``(max_batch, max_wait_ms,
     key_fn)`` tuple / ``BatchSpec`` / ``True`` (DESIGN.md §2.3); attach
     the batched implementation with :func:`batch_handler` and enable the
-    windows per scope with ``repro.core.batching``."""
+    windows per scope with ``repro.core.batching``.
+
+    ``predictor`` arms predict-and-validate speculation (DESIGN.md §2.4)
+    inside a ``with speculation():`` context: ``predictor(pos, kw) ->
+    value | None`` is called synchronously at queue time with the
+    arguments *as known so far* (entries may be ``Pending`` placeholders
+    — return ``None`` to decline).  A non-``None`` guess resolves the
+    call's placeholder immediately so dependents launch speculatively;
+    the real call validates it, and a miss rolls the dependents back and
+    re-executes them with the actual value.  The predictor must be cheap,
+    deterministic-safe to discard, and — enforced — the external must be
+    ``@unordered`` with ``returns_immutable=True``."""
     return _static_annotation(registry.UNORDERED, fn, offload, effects,
-                              returns_immutable, batchable)
+                              returns_immutable, batchable, predictor)
 
 
 def readonly(fn=None, *, offload=None, effects=None,

@@ -25,11 +25,15 @@ Reg = int
 
 @dataclass
 class BStmt:
+    """Base of all Bezoar statements (carries the source line)."""
+
     lineno: int = field(default=0, kw_only=True)
 
 
 @dataclass
 class BConst(BStmt):
+    """Load a literal constant into a register."""
+
     dst: Reg
     value: Any
 
@@ -50,18 +54,24 @@ class BGlobal(BStmt):
 
 @dataclass
 class BLoad(BStmt):
+    """Read a mutable local variable into a register."""
+
     dst: Reg
     var: str
 
 
 @dataclass
 class BStore(BStmt):
+    """Assign a register to a mutable local variable."""
+
     var: str
     src: Reg
 
 
 @dataclass
 class BCall(BStmt):
+    """Call (external or internal) - the unit the engine parallelizes."""
+
     dst: Reg
     fn: Reg
     args: list[Reg]
@@ -89,6 +99,8 @@ class BPrim(BStmt):
 
 @dataclass
 class BIf(BStmt):
+    """Conditional on a boolean register."""
+
     cond: Reg  # register holding a *bool* (frontend inserts py_truth)
     then: list[BStmt]
     orelse: list[BStmt]
@@ -96,6 +108,8 @@ class BIf(BStmt):
 
 @dataclass
 class BFor(BStmt):
+    """``for`` over a snapshot spine of the iterable."""
+
     item_var: str  # mutable var assigned each iteration (tuple targets pre-desugared)
     iter: Reg      # register holding the snapshot spine (frontend inserts iter_spine)
     body: list[BStmt]
@@ -103,6 +117,8 @@ class BFor(BStmt):
 
 @dataclass
 class BWhile(BStmt):
+    """``while`` with a re-evaluated condition block."""
+
     cond_body: list[BStmt]  # re-evaluated every iteration
     cond: Reg               # bool register defined by cond_body
     body: list[BStmt]
@@ -110,11 +126,15 @@ class BWhile(BStmt):
 
 @dataclass
 class BReturn(BStmt):
+    """Return a register's value from the enclosing function."""
+
     src: Reg
 
 
 @dataclass
 class BDefFn(BStmt):
+    """Define a nested function, capturing enclosing names by value."""
+
     dst: Reg
     func: "BFunc"
     # enclosing-scope names captured by the nested function, read from the
@@ -125,6 +145,8 @@ class BDefFn(BStmt):
 
 @dataclass
 class BFunc:
+    """A whole compiled function: parameters, body, register count."""
+
     name: str
     params: list[str]
     defaults_from: Any  # the original Python function (for defaults/globals)

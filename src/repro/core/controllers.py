@@ -29,8 +29,10 @@ import asyncio
 
 from . import registry
 from .errors import ExternalCallError, PoppyRuntimeError
+from .speculate import SpecEpoch, current_scope
 from .trace import safe_repr
-from .values import check_bound, deep_resolve, shallow
+from .values import (await_future, check_bound, current_taint, deep_resolve,
+                     peek, reset_taint, settled, taint_scope)
 from ..obs.spans import (PHASE_MIN_S, current_span, current_tracer,
                          maybe_span)
 
@@ -66,7 +68,10 @@ def _chain_all(srcs, dst):
 async def _await_locks(futs):
     for f in futs:
         if f is not None and not f.done():
-            await f
+            # await_future: lock futures are shared across controllers — a
+            # cancelled speculative loser parked here must not cancel the
+            # chain out from under the winners
+            await await_future(f)
 
 
 async def _await_locks_traced(futs, locks):
@@ -98,7 +103,8 @@ def _span_note(**attrs):
         sp.attrs.update(attrs)
 
 
-async def invoke_external(rt, fn, pos, kw, ev, *, allow_batch=False):
+async def invoke_external(rt, fn, pos, kw, ev, *, allow_batch=False,
+                          settle=False):
     """Dispatch an external call with fully resolved arguments.
 
     ``allow_batch=True`` (set by the *unordered* dispatch paths only) lets
@@ -108,11 +114,17 @@ async def invoke_external(rt, fn, pos, kw, ev, *, allow_batch=False):
     classes never batch: reordering *within* the batch flush would be
     unobservable, but the window delays dispatch, and only unordered calls
     are free to wait on unrelated work.
+
+    ``settle=True`` (set for *ordered* dispatches under speculation)
+    resolves arguments via :func:`repro.core.values.settled` — the call
+    waits for every upstream prediction to validate instead of dispatching
+    on a guess, because an effectful call cannot be rolled back.
     """
     trz = current_tracer()
     t_args = trz.now() if trz is not None else 0.0
-    pos = [check_bound(await deep_resolve(a)) for a in pos]
-    kw = {k: check_bound(await deep_resolve(v)) for k, v in kw.items()}
+    pos = [check_bound(await deep_resolve(a, settle=settle)) for a in pos]
+    kw = {k: check_bound(await deep_resolve(v, settle=settle))
+          for k, v in kw.items()}
     if trz is not None and trz.now() - t_args >= PHASE_MIN_S:
         # dependency wait worth attributing (sub-threshold resolves are
         # elided — most args are already concrete)
@@ -122,6 +134,12 @@ async def invoke_external(rt, fn, pos, kw, ev, *, allow_batch=False):
         # cancellation) instead of dispatching preserves sequential
         # semantics (plain Python would have terminated before this call)
         raise asyncio.CancelledError
+    if rt.spec is not None:
+        sc = current_scope()
+        if sc is not None and sc.aborted:
+            # this task belongs to a losing arm and is about to be
+            # cancelled — don't race the cancellation with a dispatch
+            raise asyncio.CancelledError
     if allow_batch and rt.batching:
         spec = registry.batch_spec(fn)
         if spec is not None:
@@ -171,9 +189,154 @@ async def invoke_external(rt, fn, pos, kw, ev, *, allow_batch=False):
     return result
 
 
+def _redo_event(rt, ev, fn, callsite, cls, keys):
+    """Discard the trace event of a stale (mispredicted) dispatch attempt
+    and open a fresh queued/classified event for the re-execution, so the
+    committed trace records exactly one event per call — the one the
+    non-speculative engine would have recorded."""
+    if rt.trace is None:
+        return None
+    if ev is not None:
+        rt.trace.drop_event(ev)
+        rt.spec.stats.dropped_events += 1
+    nev = rt.trace.queued(registry.callable_name(fn), callsite,
+                          wrapped=hasattr(fn, "__poppy_dispatch__"))
+    rt.trace.classified(nev, cls, effects=keys)
+    return nev
+
+
+async def _invoke_settled(rt, fn, pos, kw, ev, callsite, cls, keys, *,
+                          allow_batch=False):
+    """Dispatch until the result is *taint-free*: the predict-and-validate
+    redo loop (DESIGN.md §2.4).  Each attempt captures the speculation
+    epochs its argument resolution flowed through; a result that depended
+    on a guess is held until the guess validates, and on a miss the stale
+    attempt's trace event is discarded and the call re-executes with the
+    actual value — exactly once per mispredicted epoch.
+    """
+    stats = rt.spec.stats
+    while True:
+        tok = taint_scope()
+        try:
+            result = await invoke_external(rt, fn, pos, kw, ev,
+                                           allow_batch=allow_batch)
+        finally:
+            epochs = current_taint()
+            reset_taint(tok)
+        stale = [e for e in epochs
+                 if e.validated.done() and not e.validated.result()]
+        live = tuple(e for e in epochs if not e.validated.done())
+        if not stale and not live:
+            return result, ev
+        if not stale:
+            ok = True
+            for e in live:
+                ok = (await await_future(e.validated)) and ok
+            if ok:
+                return result, ev
+        # a guess this attempt consumed was wrong: the producer epochs
+        # already swapped in fresh argument futures — re-execute
+        ev = _redo_event(rt, ev, fn, callsite, cls, keys)
+        stats.redo_runs += 1
+
+
+async def _dispatch_unordered(rt, fn, pos, kw, ev, callsite, keys, dst,
+                              dfut):
+    """Unordered dispatch under speculation: publish the result as soon
+    as it is known, *speculatively* when it depends on unvalidated
+    guesses (registering the placeholder with each epoch so a miss can
+    roll it back), and re-execute on mispredicts until taint-free."""
+    stats = rt.spec.stats
+    while True:
+        tok = taint_scope()
+        try:
+            result = await invoke_external(rt, fn, pos, kw, ev,
+                                           allow_batch=True)
+        finally:
+            epochs = current_taint()
+            reset_taint(tok)
+        stale = [e for e in epochs
+                 if e.validated.done() and not e.validated.result()]
+        live = tuple(e for e in epochs if not e.validated.done())
+        if stale:
+            # raced: a miss landed mid-dispatch — the result is stale
+            ev = _redo_event(rt, ev, fn, callsite, UNORDERED, keys)
+            stats.redo_runs += 1
+            continue
+        fut = dst.fut if dst is not None else dfut
+        if not live:
+            if dst is not None and dst.spec:
+                dst.spec = None
+            if not fut.done():
+                fut.set_result(result)
+            return
+        if dst is None:
+            # no placeholder to tag speculative — hold until validated
+            ok = True
+            for e in live:
+                ok = (await await_future(e.validated)) and ok
+            if ok:
+                if not fut.done():
+                    fut.set_result(result)
+                return
+            ev = _redo_event(rt, ev, fn, callsite, UNORDERED, keys)
+            stats.redo_runs += 1
+            continue
+        # tainted: publish speculatively so dependents keep flowing
+        for e in live:
+            e.register(dst)
+        dst.spec = live
+        stats.spec_publishes += 1
+        if not fut.done():
+            fut.set_result(result)
+        ok = True
+        for e in live:
+            ok = (await await_future(e.validated)) and ok
+        if ok:
+            if dst.spec is live:
+                dst.spec = None
+            return
+        # miss: our placeholder got a fresh future from the epoch's
+        # rollback; discard the stale event and re-execute
+        ev = _redo_event(rt, ev, fn, callsite, UNORDERED, keys)
+        stats.redo_runs += 1
+
+
+async def _unordered_spec(rt, fn, pos, kw, ev, callsite, keys, dst, dfut,
+                          info):
+    """Unordered dispatch when a :class:`~repro.core.speculate.speculation`
+    context is active: try predict-and-validate first (when the external
+    declares a ``predictor=`` and the policy arms it), otherwise run the
+    taint-tracking redo loop."""
+    spec = rt.spec
+    if (spec.policy.predict and dst is not None and info is not None
+            and info.predictor is not None):
+        try:
+            pred = info.predictor([peek(a) for a in pos],
+                                  {k: peek(v) for k, v in kw.items()})
+        except Exception:
+            pred = None  # a predictor must never break the call
+        if pred is not None:
+            spec.stats.predictions += 1
+            epoch = SpecEpoch(rt, dst, pred)
+            dst.spec = (epoch,)
+            if not dfut.done():
+                dfut.set_result(pred)  # dependents launch on the guess
+            result, _ = await _invoke_settled(rt, fn, pos, kw, ev, callsite,
+                                              UNORDERED, keys,
+                                              allow_batch=True)
+            if epoch.resolve(rt, result):
+                spec.stats.pred_hits += 1
+            else:
+                spec.stats.pred_misses += 1
+            return
+    await _dispatch_unordered(rt, fn, pos, kw, ev, callsite, keys, dst,
+                              dfut)
+
+
 async def external_controller(rt, fn, pos, kw, fresh, keys, links,
                               dfut: asyncio.Future, callsite: str,
-                              resolve_links=None):
+                              resolve_links=None, dst=None):
     """The controller coroutine for one queued external call.
 
     ``keys`` are the effect-domain keys the engine resolved for this call;
@@ -193,7 +356,7 @@ async def external_controller(rt, fn, pos, kw, fresh, keys, links,
     trz = current_tracer()
     if trz is None:
         await _external_controller(rt, fn, pos, kw, fresh, keys, links,
-                                   dfut, callsite, resolve_links)
+                                   dfut, callsite, resolve_links, dst)
         return
     # one span per queued external, on its effect domains' track; the
     # lifecycle phases below (classify, lock waits, arg resolution, batch
@@ -203,12 +366,12 @@ async def external_controller(rt, fn, pos, kw, fresh, keys, links,
         else "domain:*"
     with trz.span(name, cat="external", track=track, callsite=callsite):
         await _external_controller(rt, fn, pos, kw, fresh, keys, links,
-                                   dfut, callsite, resolve_links)
+                                   dfut, callsite, resolve_links, dst)
 
 
 async def _external_controller(rt, fn, pos, kw, fresh, keys, links,
                                dfut: asyncio.Future, callsite: str,
-                               resolve_links=None):
+                               resolve_links=None, dst=None):
     ev = rt.trace.queued(registry.callable_name(fn), callsite,
                          wrapped=hasattr(fn, "__poppy_dispatch__")) \
         if rt.trace is not None else None
@@ -220,11 +383,14 @@ async def _external_controller(rt, fn, pos, kw, fresh, keys, links,
         cls = info.cls
     else:
         # dynamic dispatch: classification needs argument *types* — await
-        # the spine of each argument (not its contents)
+        # the spine of each argument (not its contents).  ``settled`` (not
+        # ``shallow``): classification is a control decision, so it must
+        # never act on an unvalidated speculative value (identical to
+        # ``shallow`` when speculation is off)
         trz = current_tracer()
         t_cls = trz.now() if trz is not None else 0.0
-        cpos = [check_bound(await shallow(a)) for a in pos]
-        ckw = {k: await shallow(v) for k, v in kw.items()}
+        cpos = [check_bound(await settled(a)) for a in pos]
+        ckw = {k: await settled(v) for k, v in kw.items()}
         cls = registry.get_callable_class(fn, cpos, ckw, fresh)
         if trz is not None and trz.now() - t_cls >= PHASE_MIN_S:
             trz.record("classify", t_cls, cat="external.classify")
@@ -233,6 +399,17 @@ async def _external_controller(rt, fn, pos, kw, fresh, keys, links,
     if ev is not None:
         rt.trace.classified(ev, cls, effects=keys)
     _span_note(cls=cls, effects=[str(k) for k in keys] if keys else ["*"])
+
+    spec = rt.spec
+    if spec is not None and cls != UNORDERED:
+        sc = current_scope()
+        if sc is not None and not sc.settled:
+            # effectful call inside an unresolved speculative arm: hold at
+            # the dispatch boundary until the branch decision commits this
+            # arm (or be cancelled with it) — a losing arm must commit no
+            # effects
+            spec.stats.gated_holds += 1
+            await sc.admitted()
 
     if links is None:
         if cls == UNORDERED:
@@ -245,6 +422,10 @@ async def _external_controller(rt, fn, pos, kw, fresh, keys, links,
                     _chain_all([s.f_w], o.f_w)
 
             rt.spawn(plumb())
+            if spec is not None:
+                await _unordered_spec(rt, fn, pos, kw, ev, callsite, keys,
+                                      dst, dfut, info)
+                return
             result = await invoke_external(rt, fn, pos, kw, ev,
                                            allow_batch=True)
             dfut.set_result(result)
@@ -268,6 +449,10 @@ async def _external_controller(rt, fn, pos, kw, fresh, keys, links,
         for s, o in links:
             _chain_all([s.f_r], o.f_r)
             _chain_all([s.f_w], o.f_w)
+        if spec is not None:
+            await _unordered_spec(rt, fn, pos, kw, ev, callsite, keys,
+                                  dst, dfut, info)
+            return
         result = await invoke_external(rt, fn, pos, kw, ev,
                                        allow_batch=True)
         dfut.set_result(result)
@@ -276,7 +461,11 @@ async def _external_controller(rt, fn, pos, kw, fresh, keys, links,
             await _await_locks_traced([s.f_r for s, _ in links], "r")
             for o in outs:
                 _resolve_lock(o.f_r)  # forward before dispatching
-            result = await invoke_external(rt, fn, pos, kw, ev)
+            result = await invoke_external(rt, fn, pos, kw, ev,
+                                           settle=spec is not None)
+            if spec is not None and (sc := current_scope()) is not None \
+                    and sc.aborted:
+                spec.stats.loser_effects += 1  # invariant: must stay 0
             dfut.set_result(result)
             await _await_locks_traced([s.f_w for s, _ in links], "w")
         except BaseException as e:
@@ -292,7 +481,11 @@ async def _external_controller(rt, fn, pos, kw, fresh, keys, links,
             await _await_locks_traced(
                 [s.f_r for s, _ in links] + [s.f_w for s, _ in links],
                 "rw")
-            result = await invoke_external(rt, fn, pos, kw, ev)
+            result = await invoke_external(rt, fn, pos, kw, ev,
+                                           settle=spec is not None)
+            if spec is not None and (sc := current_scope()) is not None \
+                    and sc.aborted:
+                spec.stats.loser_effects += 1  # invariant: must stay 0
             dfut.set_result(result)
         except BaseException as e:
             if not isinstance(e, asyncio.CancelledError):

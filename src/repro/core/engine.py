@@ -44,6 +44,7 @@ from .lambda_o import (
     LWhile,
     PoppyClosure,
 )
+from .speculate import current_scope, current_speculation
 from .trace import Trace, current_trace
 from .values import (
     KS_READY,
@@ -56,6 +57,7 @@ from .values import (
     deep_resolve,
     is_pending,
     peek,
+    settled,
     shallow,
 )
 
@@ -148,13 +150,17 @@ class Frame:
 
 
 def _fulfill(fut: asyncio.Future, value):
-    """Set ``fut`` from ``value``, chaining if value is itself Pending."""
-    if is_pending(value):
-        value.fut.add_done_callback(
-            lambda f: fut.done() or fut.set_result(f.result()))
-    else:
-        if not fut.done():
-            fut.set_result(value)
+    """Set ``fut`` from ``value``.
+
+    A ``Pending`` value is stored *by reference* (consumers loop-unwrap
+    placeholder chains) rather than flattened through a done-callback:
+    flattening would copy a speculatively-resolved value out of its
+    placeholder and strand the taint/epoch tag behind (DESIGN.md §2.4) —
+    the chain keeps ``spec`` visible at every link, and keeps exceptions
+    in the future that actually failed.
+    """
+    if not fut.done():
+        fut.set_result(value)
 
 
 def _is_internal(fn) -> bool:
@@ -225,6 +231,13 @@ class Runtime:
         self._executor: ThreadPoolExecutor | None = None
         self.batching = current_batching_policy().enabled
         self._batches: BatchCollector | None = None
+        # speculation (DESIGN.md §2.4): captured from the ambient
+        # ``with speculation():`` context; None → every speculative path
+        # below is skipped and the engine behaves exactly as before
+        self.spec = current_speculation()
+        # task → owning SpecScope, for routing task failures to a
+        # still-speculative arm instead of failing the whole run
+        self.scope_of: dict[asyncio.Task, object] = {}
 
     # -- auto-batching -----------------------------------------------------
 
@@ -285,15 +298,29 @@ class Runtime:
     def spawn(self, coro):
         task = self.loop.create_task(coro)
         self.tasks.add(task)
+        if self.spec is not None:
+            sc = current_scope()
+            if sc is not None and not sc.settled:
+                sc.adopt(task)
+                self.scope_of[task] = sc
         task.add_done_callback(self._task_done)
         return task
 
     def _task_done(self, task):
         self.tasks.discard(task)
+        sc = self.scope_of.pop(task, None)
+        if sc is not None:
+            sc.tasks.discard(task)
         if task.cancelled():
             return
         exc = task.exception()
         if exc is not None:
+            if sc is not None and not sc.committed:
+                # a speculative arm is allowed to crash: remember the
+                # error; it surfaces iff the arm commits (scope.commit)
+                if sc.error is None:
+                    sc.error = exc
+                return
             self.fail(exc)
 
     def fail(self, exc: BaseException):
@@ -325,7 +352,10 @@ class Runtime:
             inputs = self._bind(poppy_fn, list(args), dict(kwargs))
             outs = self.instantiate(poppy_fn.lfunc,
                                     poppy_fn.lfunc.block, inputs)
-            ret_task = self.loop.create_task(deep_resolve(outs[0]))
+            # settle=True: the program's return value must never be a
+            # still-speculative guess (DESIGN.md §2.4)
+            ret_task = self.loop.create_task(
+                deep_resolve(outs[0], settle=True))
             err_task = self.loop.create_task(self._err_evt.wait())
             try:
                 await asyncio.wait({ret_task, err_task},
@@ -481,7 +511,10 @@ class Runtime:
         raise PoppyRuntimeError(f"unknown prim {kind}")  # pragma: no cover
 
     async def _prim_async(self, kind, vals, fut):
-        vals = [await deep_resolve(v) for v in vals]
+        # settle=True: set/dict/proj results are published unregistered
+        # (no redo loop owns this future), so they must not be computed
+        # from an unvalidated guess
+        vals = [await deep_resolve(v, settle=True) for v in vals]
         fut.set_result(self._finish_prim(kind, vals))
 
     # -- conditionals ------------------------------------------------------------------
@@ -498,17 +531,89 @@ class Runtime:
             for r, v in zip(op.outs, outs):
                 frame.regs[r] = v
             return
+        sp = self.spec
+        if (sp is not None and sp.policy.branches
+                and self._ite_worth_speculating(op, frame)):
+            self._speculate_ite(op, frame, cond)
+            return
         futs = [self.new_future() for _ in op.outs]
         for r, f in zip(op.outs, futs):
             frame.regs[r] = Pending(f)
 
         async def later():
-            c = check_bound(await shallow(cond))
+            # settled(): a control decision never acts on a speculative
+            # value — a predicted condition waits for validation here
+            c = check_bound(await settled(cond))
             outs = self._expand_branch(op, frame, c)
             for f, v in zip(futs, outs):
                 _fulfill(f, v)
 
         self.spawn(later())
+
+    def _ite_worth_speculating(self, op: LIte, frame: Frame) -> bool:
+        """Race the arms only when at least one arm dispatches a
+        statically-``@unordered`` external (resolved from the lowering-time
+        callee-name capture, :func:`repro.core.lower._block_call_names`) —
+        otherwise both arms are interpreter glue and the non-speculative
+        deferral is cheaper.  Unknown callees contribute nothing: safety
+        is enforced dynamically (scope gating), this is purely a
+        benefit heuristic."""
+        for names in (op.then_calls, op.else_calls):
+            for n in names:
+                try:
+                    fn = self._resolve_global(frame.lfunc, n)
+                except NameError:
+                    continue
+                info = getattr(fn, "__poppy_external__", None)
+                if info is not None and info.cls == registry.UNORDERED:
+                    return True
+        return False
+
+    def _speculate_ite(self, op: LIte, frame: Frame, cond):
+        """Branch speculation (DESIGN.md §2.4): expand *both* arms now,
+        each inside a :class:`~repro.core.speculate.SpecScope` — unordered
+        externals dispatch immediately, effectful calls park on the
+        scope's admission gate, and every task/trace event the arm
+        produces is tagged to the scope.  When the condition settles, the
+        winner commits and the loser aborts (tasks cancelled, trace
+        segment discarded)."""
+        from .speculate import SpecScope, scope_context
+        futs = [self.new_future() for _ in op.outs]
+        for r, f in zip(op.outs, futs):
+            frame.regs[r] = Pending(f)
+        self.spec.stats.branches_speculated += 1
+
+        def expand(arm: bool):
+            seg = self.trace.new_segment() if self.trace is not None else 0
+            scope = SpecScope(self, parent=current_scope(), seg=seg)
+            outs = None
+            with scope_context(scope):
+                try:
+                    outs = self._expand_branch(op, frame, arm)
+                except BaseException as e:
+                    # the wrong arm may legitimately crash (e.g. an
+                    # UnboundLocal in the not-taken path); hold the error
+                    # and surface it only if this arm commits
+                    scope.error = e
+            return scope, outs
+
+        then_scope, then_outs = expand(True)
+        else_scope, else_outs = expand(False)
+
+        async def decide():
+            c = check_bound(await settled(cond))
+            if c:
+                win_scope, win_outs, lose = then_scope, then_outs, else_scope
+            else:
+                win_scope, win_outs, lose = else_scope, else_outs, then_scope
+            lose.abort()
+            win_scope.commit()
+            if win_outs is None:
+                raise win_scope.error
+            for f, v in zip(futs, win_outs):
+                _fulfill(f, v)
+
+        self.spawn(decide())
 
     # -- fold (for loops) ---------------------------------------------------------
 
@@ -533,7 +638,7 @@ class Runtime:
             frame.regs[r] = Pending(f)
 
         async def later():
-            sp = check_bound(await shallow(spine))
+            sp = check_bound(await settled(spine))
             outs = self._run_fold(op, frame, sp)
             for f, v in zip(futs, outs):
                 _fulfill(f, v)
@@ -577,7 +682,7 @@ class Runtime:
 
         async def later(cond, carries_after):
             while True:
-                c = check_bound(await shallow(cond))
+                c = check_bound(await settled(cond))
                 if not c:
                     bind(carries_after)
                     return
@@ -616,10 +721,11 @@ class Runtime:
             if is_pending(pos_c) or is_pending(kw_c):
                 dfut = self.new_future()
                 sfut = self.new_future()
-                regs[op.dst] = Pending(dfut)
+                dst = Pending(dfut)
+                regs[op.dst] = dst
                 regs[op.s_out] = Pending(sfut)
                 self.spawn(self._deferred_unpack(op, fnv, pos_c, kw_c, s_in,
-                                                 dfut, sfut))
+                                                 dfut, sfut, dst))
                 return
             pos = list(check_bound(pos_c))
             kw = dict(check_bound(kw_c))
@@ -661,11 +767,12 @@ class Runtime:
             su = registry.static_unordered(fn, pos, kw, fresh)
             if su is not None:
                 dfut = self.new_future()
-                regs[op.dst] = Pending(dfut, imm_hint=su)
+                dst = Pending(dfut, imm_hint=su)
+                regs[op.dst] = dst
                 regs[op.s_out] = s_in
                 self.spawn(external_controller(
                     self, fn, pos, kw, fresh, (STAR,), [], dfut,
-                    op.callsite))
+                    op.callsite, dst=dst))
                 return
             # queued external call: resolve the effect-domain keys, fork
             # the keyed ordering state, and spawn a concurrency controller.
@@ -677,9 +784,10 @@ class Runtime:
             # a mutable list).
             info = getattr(fn, "__poppy_external__", None)
             dfut = self.new_future()
-            regs[op.dst] = Pending(
+            dst = Pending(
                 dfut, imm_hint=info is not None and info.cls is not None
                 and info.imm_result)
+            regs[op.dst] = dst
             if is_pending(s_in):
                 # ordering state not yet known (e.g. downstream of a
                 # deferred method call): defer the fork itself so per-domain
@@ -688,21 +796,23 @@ class Runtime:
                 sfut = self.new_future()
                 regs[op.s_out] = Pending(sfut)
                 self.spawn(self._queued_after_s(op, fn, pos, kw, fresh,
-                                                s_in, dfut, sfut))
+                                                s_in, dfut, sfut, dst))
                 return
             keys, out_keyed, links = self._fork_keyed(fn, pos, kw, s_in)
             regs[op.s_out] = out_keyed
             self.spawn(external_controller(
-                self, fn, pos, kw, fresh, keys, links, dfut, op.callsite))
+                self, fn, pos, kw, fresh, keys, links, dfut, op.callsite,
+                dst=dst))
             return
 
         # unknown callee: defer everything
         dfut = self.new_future()
         sfut = self.new_future()
-        regs[op.dst] = Pending(dfut)
+        dst = Pending(dfut)
+        regs[op.dst] = dst
         regs[op.s_out] = Pending(sfut)
         self.spawn(self._deferred_call(op, fnv, pos, kw, fresh, s_in,
-                                       dfut, sfut))
+                                       dfut, sfut, dst))
 
     def _new_seq_state(self) -> SeqState:
         return SeqState(self.new_future(), self.new_future())
@@ -719,13 +829,15 @@ class Runtime:
         out_keyed, links = s_in.fork(keys, self._new_seq_state)
         return keys, out_keyed, links
 
-    async def _deferred_unpack(self, op, fnv, pos_c, kw_c, s_in, dfut, sfut):
-        pos_c = check_bound(await shallow(pos_c))
-        kw_c = check_bound(await shallow(kw_c))
+    async def _deferred_unpack(self, op, fnv, pos_c, kw_c, s_in, dfut, sfut,
+                               dst=None):
+        pos_c = check_bound(await settled(pos_c))
+        kw_c = check_bound(await settled(kw_c))
         await self._deferred_call(op, fnv, list(pos_c), dict(kw_c), (),
-                                  s_in, dfut, sfut)
+                                  s_in, dfut, sfut, dst)
 
-    async def _queued_after_s(self, op, fn, pos, kw, fresh, s_in, dfut, sfut):
+    async def _queued_after_s(self, op, fn, pos, kw, fresh, s_in, dfut, sfut,
+                              dst=None):
         """Known external callee, pending ordering state: run the
         controller now with a thunk that awaits the keyed state and forks
         it with full per-domain precision.  The controller uses the thunk
@@ -739,7 +851,7 @@ class Runtime:
 
         await external_controller(self, fn, pos, kw, fresh, (STAR,), None,
                                   dfut, op.callsite,
-                                  resolve_links=resolve_links)
+                                  resolve_links=resolve_links, dst=dst)
 
     def _dispatch_inline(self, fn, pos, kw, callsite):
         from .controllers import unwrap_external
@@ -775,8 +887,11 @@ class Runtime:
             vals = bind_positional(lf.name, lf.params, pos, kw)
         return vals + list(captured) + [s_in]
 
-    async def _deferred_call(self, op, fnv, pos, kw, fresh, s_in, dfut, sfut):
-        fn = check_bound(await shallow(fnv))
+    async def _deferred_call(self, op, fnv, pos, kw, fresh, s_in, dfut, sfut,
+                             dst=None):
+        # settled(): dispatch decisions (which callee, internal vs
+        # external) never act on a speculative value
+        fn = check_bound(await settled(fnv))
         if _is_internal(fn):
             inputs = self._bind_graph_call(fn, pos, kw, s_in)
             outs = self.instantiate(fn.lfunc, fn.lfunc.block, inputs)
@@ -790,7 +905,7 @@ class Runtime:
         keys, out_keyed, links = self._fork_keyed(fn, pos, kw, s_in)
         sfut.set_result(out_keyed)
         await external_controller(self, fn, pos, kw, fresh, keys, links,
-                                  dfut, op.callsite)
+                                  dfut, op.callsite, dst=dst)
 
 
 def run_poppy(poppy_fn, args, kwargs, *, trace=None):

@@ -32,6 +32,19 @@ class PoppyUnboundLocalError(PoppyRuntimeError):
     """A promoted local variable was read before assignment."""
 
 
+class FirstSuccessError(PoppyRuntimeError):
+    """Every rollout in a :func:`repro.core.ai.first_success` race failed
+    (raised, or was rejected by the ``accept`` filter).  ``failures`` holds
+    the per-rollout outcomes in argument order: an exception instance for a
+    raising rollout, or the rejected result."""
+
+    def __init__(self, failures):
+        self.failures = list(failures)
+        super().__init__(
+            f"all {len(self.failures)} first_success rollouts failed: "
+            f"{self.failures!r}")
+
+
 class ExternalCallError(PoppyRuntimeError):
     """An external call raised; PopPy terminates and surfaces the error
     to the user (paper §4.1: no silent execution of unsupported code)."""

@@ -28,6 +28,8 @@ def CARRY(i):
 
 @dataclass
 class LBlock:
+    """A register block: inputs, ops, outputs - the lambda^O unit of code."""
+
     nregs: int = 0
     input_srcs: list = field(default_factory=list)  # parallel to input_regs
     input_regs: list[int] = field(default_factory=list)
@@ -37,12 +39,16 @@ class LBlock:
 
 @dataclass
 class LConst:
+    """Load a literal constant into a register."""
+
     dst: int
     value: Any
 
 
 @dataclass
 class LGlobal:
+    """Lazily-resolved global / builtin name read."""
+
     dst: int
     name: str
 
@@ -63,6 +69,8 @@ class LPrim:
 
 @dataclass
 class LCallOp:
+    """Call site threading the sequence variable (s_in -> s_out)."""
+
     dst: int
     s_out: int
     fn: int
@@ -78,14 +86,25 @@ class LCallOp:
 
 @dataclass
 class LIte:
+    """Conditional: both arms lowered as blocks over shared carries."""
+
     outs: tuple            # dst regs, parallel to each branch's outputs
     cond: int              # bool (or Pending) — frontend inserted py_truth
     then_block: LBlock
     else_block: LBlock
+    # Statically-known callee names per arm (global-name call sites,
+    # including nested control flow), captured at lowering time.  The
+    # engine's branch-speculation heuristic resolves these against the
+    # enclosing function's globals to ask "does either arm dispatch an
+    # @unordered external worth racing?" without expanding the arms.
+    then_calls: tuple = ()
+    else_calls: tuple = ()
 
 
 @dataclass
 class LFor:
+    """Fold over a snapshot spine with loop-carried registers."""
+
     outs: tuple
     spine: int             # tuple (or Pending) — frontend inserted iter_spine
     init: tuple            # regs holding initial carry values
@@ -94,6 +113,8 @@ class LFor:
 
 @dataclass
 class LWhile:
+    """While-fold: condition block + body block over carries."""
+
     outs: tuple
     init: tuple
     cond_block: LBlock     # outputs: [cond_reg] + carries-after-cond
@@ -102,6 +123,8 @@ class LWhile:
 
 @dataclass
 class LClosure:
+    """Materialize a nested lambda^O function with captured registers."""
+
     dst: int
     lfunc: "LFunc"
     captured: tuple        # regs in the defining block
@@ -109,6 +132,8 @@ class LClosure:
 
 @dataclass
 class LFunc:
+    """A lowered function: parameter/captured names + its root block."""
+
     name: str
     params: list[str]
     captured_names: list[str]

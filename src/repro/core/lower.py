@@ -57,6 +57,37 @@ from .values import UNBOUND
 _S = "$S"
 
 
+def _block_call_names(block: LBlock) -> tuple:
+    """Statically-known callee names of every call site in ``block``
+    (recursing into nested control flow): a call whose callee register is
+    defined by an ``LGlobal`` in the same block resolves to that global's
+    name.  Callees flowing in as registers (closures, parameters) are not
+    representable by name and are simply omitted — the speculation
+    heuristic consuming this treats an omitted callee as "unknown", never
+    as safe."""
+    names: list[str] = []
+
+    def scan(blk: LBlock):
+        globals_of = {op.dst: op.name for op in blk.ops
+                      if isinstance(op, LGlobal)}
+        for op in blk.ops:
+            if isinstance(op, LCallOp):
+                n = globals_of.get(op.fn)
+                if n is not None:
+                    names.append(n)
+            elif isinstance(op, LIte):
+                scan(op.then_block)
+                scan(op.else_block)
+            elif isinstance(op, LFor):
+                scan(op.body)
+            elif isinstance(op, LWhile):
+                scan(op.cond_block)
+                scan(op.body_block)
+
+    scan(block)
+    return tuple(names)
+
+
 def _stored_vars(stmts) -> set[str]:
     """Variables (including $S) whose value may change in these statements."""
     out: set[str] = set()
@@ -222,7 +253,9 @@ class _BlockBuilder:
             r = self.newreg()
             self.env[v] = r
             outs.append(r)
-        self.emit(LIte(tuple(outs), cond, tb, eb))
+        self.emit(LIte(tuple(outs), cond, tb, eb,
+                       then_calls=_block_call_names(tb),
+                       else_calls=_block_call_names(eb)))
 
     def lower_for(self, s: BFor):
         body_vars = _stored_vars(s.body)
@@ -343,6 +376,8 @@ class _FuncLowerer:
 
 
 class Lowerer:
+    """Lowers one Bezoar function into a lambda^O block tree."""
+
     def __init__(self):
         self._cache: dict[int, LFunc] = {}
 

@@ -43,6 +43,8 @@ _force_sequential: contextvars.ContextVar[bool] = contextvars.ContextVar(
 
 
 class force_sequential_annotations:
+    """Context manager classifying every external sequential (Fig. 7)."""
+
     def __enter__(self):
         self._tok = _force_sequential.set(True)
         return self
@@ -183,11 +185,11 @@ class ExternalInfo:
     """
 
     __slots__ = ("cls", "classify", "name", "offload", "effects", "params",
-                 "imm_result", "batchable")
+                 "imm_result", "batchable", "predictor")
 
     def __init__(self, cls=None, classify=None, name="", offload=None,
                  effects=None, params=None, imm_result=False,
-                 batchable=None):
+                 batchable=None, predictor=None):
         assert (cls is None) != (classify is None)
         if cls is not None:
             assert cls in _CLASSES, cls
@@ -196,6 +198,17 @@ class ExternalInfo:
         if effects is not None and not callable(effects):
             effects = tuple(effects)
             assert all(isinstance(k, str) for k in effects), effects
+        if predictor is not None:
+            # Predict-and-validate (DESIGN.md §2.4) is only sound for
+            # calls that are free to reorder and whose results are
+            # immutable: the guess may flow through downstream immutable
+            # glue and be discarded wholesale on a miss, but a guessed
+            # mutable object could be aliased and mutated before
+            # validation, which no rollback can undo.
+            assert callable(predictor), predictor
+            assert cls == UNORDERED, (
+                f"predictor= requires an @unordered external, got {cls!r}")
+            assert imm_result, "predictor= requires returns_immutable=True"
         self.cls = cls
         self.classify = classify
         self.name = name
@@ -204,6 +217,7 @@ class ExternalInfo:
         self.params = tuple(params) if params is not None else None
         self.imm_result = bool(imm_result)
         self.batchable = normalize_batchable(batchable)
+        self.predictor = predictor
 
 
 def annotated_offload(fn):

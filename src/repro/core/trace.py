@@ -42,6 +42,8 @@ def safe_repr(v, limit=200):
 
 @dataclass
 class TraceEvent:
+    """One external call's queue/dispatch/resolve record (the =_A unit)."""
+
     name: str
     callsite: str = ""
     cls: str = ""
@@ -63,6 +65,12 @@ class TraceEvent:
     # arguments, so they match across plain and PopPy runs; anonymous
     # ``obj:``-keyed intrinsic events are unwrapped and never compared.
     effects: tuple = ("*",)
+    # speculation segment (DESIGN.md §2.4): 0 = committed trace; a
+    # non-zero segment holds events recorded inside a still-speculative
+    # branch arm.  Commit retags the segment into its parent; abort
+    # discards it, so a finished run's trace only ever contains seg-0
+    # events and ≡_A comparisons see exactly the committed behavior.
+    seg: int = 0
 
 
 @dataclass
@@ -78,6 +86,11 @@ class Trace:
     # wall-clock time at ``t0`` — aligns traces across processes
     epoch: float = field(default_factory=time.time)
     _seq: int = field(default=0, repr=False)
+    _nseg: int = field(default=0, repr=False)
+    # segments discarded by speculative rollback: events tagged with a
+    # dead segment are dropped, and late recordings into one (a losing
+    # arm's controller between queue and cancellation) are never appended
+    _dead_segs: set = field(default_factory=set, repr=False)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def now(self) -> float:
@@ -93,10 +106,12 @@ class Trace:
     # -- engine-side API --------------------------------------------------
 
     def queued(self, name, callsite="", wrapped=True) -> TraceEvent:
+        seg = _segment_var.get()
         ev = TraceEvent(name=name, callsite=callsite,
-                        t_queue=self.now(), wrapped=wrapped)
+                        t_queue=self.now(), wrapped=wrapped, seg=seg)
         with self._lock:
-            self.events.append(ev)
+            if seg not in self._dead_segs:
+                self.events.append(ev)
         return ev
 
     def classified(self, ev: TraceEvent, cls: str, effects=None):
@@ -116,6 +131,42 @@ class Trace:
 
     def resolved(self, ev: TraceEvent):
         ev.t_resolve = self.now()
+
+    # -- speculative segments (DESIGN.md §2.4) -------------------------------
+
+    def new_segment(self) -> int:
+        """Open a fresh speculative segment id (never 0)."""
+        with self._lock:
+            self._nseg += 1
+            return self._nseg
+
+    def commit_segment(self, seg: int, into: int = 0):
+        """Merge a winning arm's events into the parent segment (``into=0``
+        commits to the main trace)."""
+        with self._lock:
+            for e in self.events:
+                if e.seg == seg:
+                    e.seg = into
+
+    def drop_segment(self, seg: int) -> int:
+        """Discard a losing arm's events; returns how many were dropped.
+        The segment is also marked dead so in-flight recordings from its
+        (cancelling) tasks cannot resurface."""
+        with self._lock:
+            self._dead_segs.add(seg)
+            before = len(self.events)
+            self.events = [e for e in self.events if e.seg != seg]
+            return before - len(self.events)
+
+    def drop_event(self, ev: TraceEvent) -> bool:
+        """Discard one event (a stale predict-and-validate attempt that is
+        being re-executed with the actual value)."""
+        with self._lock:
+            for i, e in enumerate(self.events):
+                if e is ev:
+                    del self.events[i]
+                    return True
+            return False
 
     # -- plain-Python-side API ---------------------------------------------
 
@@ -154,9 +205,27 @@ class Trace:
 _current_trace: contextvars.ContextVar[Trace | None] = contextvars.ContextVar(
     "poppy_trace", default=None)
 
+#: Ambient speculative segment: tasks spawned while expanding a
+#: speculative branch arm inherit its segment id (contextvars copy), so
+#: every event they record lands in the arm's discardable segment.
+_segment_var: contextvars.ContextVar[int] = contextvars.ContextVar(
+    "poppy_trace_segment", default=0)
+
 
 def current_trace() -> Trace | None:
     return _current_trace.get()
+
+
+def current_segment() -> int:
+    return _segment_var.get()
+
+
+def set_segment(seg: int):
+    return _segment_var.set(seg)
+
+
+def reset_segment(token):
+    _segment_var.reset(token)
 
 
 class recording:

@@ -12,6 +12,7 @@ External calls are dispatched only with *deep-resolved* arguments.
 from __future__ import annotations
 
 import asyncio
+import contextvars
 
 from .errors import PoppyUnboundLocalError
 
@@ -42,16 +43,31 @@ class Pending:
     fast path for operator intrinsics over immutable inputs, and consumed
     by the same path so chains of loop glue (``acc += (x,)``) classify at
     queue time without awaiting upstream results.
+
+    ``spec`` is the *speculation epoch set* (DESIGN.md §2.4): ``None``
+    for ordinary placeholders; a tuple of unvalidated
+    :class:`repro.core.speculate.SpecEpoch` objects while ``fut`` holds a
+    *predicted* (or predicted-derived) value.  Awaiting ``fut`` on a
+    speculative Pending yields the guess — consumers that must never act
+    on a guess use :func:`settled` instead, and :func:`shallow` records
+    the epochs it flowed through into the ambient taint set so producers
+    can mark their own results speculative in turn.  On validation the
+    epoch either clears ``spec`` (hit) or swaps ``fut`` for a fresh
+    future that the re-executed producer resolves (miss) — stale guesses
+    are unreachable after the swap.
     """
 
-    __slots__ = ("fut", "imm_hint")
+    __slots__ = ("fut", "imm_hint", "spec")
 
     def __init__(self, fut: asyncio.Future, imm_hint: bool = False):
         self.fut = fut
         self.imm_hint = imm_hint
+        self.spec = None
 
     def __repr__(self):
-        return f"<pending{' imm' if self.imm_hint else ''} {id(self):#x}>"
+        tag = " imm" if self.imm_hint else ""
+        tag += " spec" if self.spec else ""
+        return f"<pending{tag} {id(self):#x}>"
 
 
 def is_pending(v) -> bool:
@@ -62,10 +78,99 @@ def shallow_ready(v) -> bool:
     return type(v) is not Pending
 
 
+#: Ambient speculation-taint set: the epochs whose *predicted* values the
+#: current task has observed through :func:`shallow` / :func:`deep_resolve`.
+#: Task-local (contextvars copy at task creation), holding a frozenset so
+#: scope save/restore is O(1).  Controllers bracket each dispatch attempt
+#: with :func:`taint_scope` / :func:`current_taint` to learn whether the
+#: result they are about to publish depends on an unvalidated guess.
+_taint: contextvars.ContextVar[frozenset] = contextvars.ContextVar(
+    "poppy_spec_taint", default=frozenset())
+
+
+def taint_scope():
+    """Open a fresh (empty) taint scope; returns a reset token."""
+    return _taint.set(frozenset())
+
+
+def reset_taint(token):
+    _taint.reset(token)
+
+
+def current_taint() -> frozenset:
+    return _taint.get()
+
+
+def note_taint(epochs):
+    cur = _taint.get()
+    new = cur.union(epochs)
+    if new is not cur and new != cur:
+        _taint.set(new)
+
+
+#: True inside a ``with speculation():`` context (set by
+#: :class:`repro.core.speculate.speculation`).  Engine futures — value
+#: placeholders, lock chains, keyed-state futures — are *multi-consumer*:
+#: the winning arm awaits the very same futures a cancelled loser task may
+#: be parked on, and ``Task.cancel()`` propagates into the future the task
+#: is currently awaiting (``_fut_waiter.cancel()``), which would corrupt
+#: shared state.  Under speculation every engine-future await therefore
+#: goes through :func:`await_future`, which shields the future: the task
+#: still dies promptly, the future survives.  Off speculation the await is
+#: direct — zero-overhead, behavior unchanged.
+_shielding: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "poppy_spec_shielding", default=False)
+
+
+def set_shielding(on: bool):
+    return _shielding.set(on)
+
+
+def reset_shielding(token):
+    _shielding.reset(token)
+
+
+async def await_future(fut):
+    """Await an engine future; cancellation-safe under speculation."""
+    if fut.done():
+        return fut.result()
+    if _shielding.get():
+        return await asyncio.shield(fut)
+    return await fut
+
+
 async def shallow(v):
-    """Await the top-level value (its spine); embedded Pendings may remain."""
+    """Await the top-level value (its spine); embedded Pendings may remain.
+
+    Flowing through a *speculative* Pending yields the predicted value and
+    records its epochs in the ambient taint set (see :data:`_taint`).
+    """
     while type(v) is Pending:
-        v = await v.fut
+        s = v.spec
+        if s is not None:
+            note_taint(s)
+        v = await await_future(v.fut)
+    return v
+
+
+async def settled(v):
+    """Like :func:`shallow`, but never yields a speculative value: awaits
+    each epoch's validation and re-reads the placeholder (a miss swaps
+    ``fut``; a hit clears ``spec``).  Used wherever a guess must not leak:
+    control decisions (branch/loop conditions), effectful-call arguments,
+    mutable-container substitution, and the program's return value."""
+    while type(v) is Pending:
+        s = v.spec
+        if s is not None:
+            for e in s:
+                if not e.validated.done():
+                    await await_future(e.validated)
+            if v.spec is s and v.spec is not None:
+                # validated but not yet detached (hit commits clear spec
+                # synchronously, so this is only a transient miss window)
+                v.spec = None
+            continue  # re-read fut: a miss swapped it
+        v = await await_future(v.fut)
     return v
 
 
@@ -77,8 +182,16 @@ def peek(v):
     failed/cancelled) Pending unchanged.  Lets synchronous engine code (the
     inline fast path, effect-key resolution) see through a placeholder that
     has in fact resolved, without awaiting.
+
+    Speculatively-resolved Pendings are treated as *unresolved*: the guess
+    stays invisible to every synchronous path (static classification,
+    effect-key templates — which then degrade soundly to the ``"*"``
+    domain — and predictor inputs), so only the awaited paths, which carry
+    taint, can observe it.
     """
     while type(v) is Pending:
+        if v.spec is not None:
+            break
         f = v.fut
         if not f.done() or f.cancelled() or f.exception() is not None:
             break
@@ -108,42 +221,50 @@ def check_bound(v):
     return v
 
 
-async def deep_resolve(v):
+async def deep_resolve(v, *, settle=False):
     """Resolve every embedded Pending.
 
     Immutable containers (tuple/slice) are rebuilt; mutable containers
     (list/dict) are substituted *in place* — this preserves aliasing
     semantics (sequential Python would have stored the concrete value in
     that same object).
+
+    With ``settle=True`` every placeholder is resolved via :func:`settled`
+    (no speculative value escapes).  Even with ``settle=False``, values
+    substituted into **mutable** containers are always settled first: an
+    in-place write cannot be rolled back on a mispredict, so a guess may
+    flow through rebuilt immutables (re-resolvable from the original
+    structure on redo) but never into a list/dict/closure cell.
     """
-    v = await shallow(v)
+    v = await (settled(v) if settle else shallow(v))
     t = type(v)
     if t is tuple:
         if deep_ready(v):
             return v
-        return tuple([await deep_resolve(e) for e in v])
+        return tuple([await deep_resolve(e, settle=settle) for e in v])
     if t is list:
         for i, e in enumerate(v):
             if not deep_ready(e):
-                v[i] = await deep_resolve(e)
+                v[i] = await deep_resolve(e, settle=True)
         return v
     if t is dict:
         for k, e in list(v.items()):
             if not deep_ready(e):
-                v[k] = await deep_resolve(e)
+                v[k] = await deep_resolve(e, settle=True)
         return v
     if t is slice:
         if deep_ready(v):
             return v
         return slice(
-            await deep_resolve(v.start),
-            await deep_resolve(v.stop),
-            await deep_resolve(v.step),
+            await deep_resolve(v.start, settle=settle),
+            await deep_resolve(v.stop, settle=settle),
+            await deep_resolve(v.step, settle=settle),
         )
     if getattr(v, "__poppy_internal__", False) and hasattr(v, "captured_vals"):
         if not deep_ready(v):
             v.captured_vals = tuple(
-                [await deep_resolve(e) for e in v.captured_vals])
+                [await deep_resolve(e, settle=True)
+                 for e in v.captured_vals])
         return v
     return v
 
@@ -175,11 +296,11 @@ class SeqState:
 
     async def wait_r(self):
         if self.f_r is not None and not self.f_r.done():
-            await self.f_r
+            await await_future(self.f_r)
 
     async def wait_w(self):
         if self.f_w is not None and not self.f_w.done():
-            await self.f_w
+            await await_future(self.f_w)
 
     def __repr__(self):
         def s(f):

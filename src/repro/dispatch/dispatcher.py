@@ -433,7 +433,12 @@ class Dispatcher(Backend):
                 result = await with_retry(
                     lambda: call(backend), self.retry, key=key,
                     on_retry=on_retry)
-        except BaseException:
+        except BaseException as e:
+            if isinstance(e, asyncio.CancelledError):
+                # speculation rollback / first_success loser: the attempt
+                # was abandoned, not failed — count it separately so error
+                # rates stay meaningful
+                st.cancelled += 1
             st.observe(replica.name, time.monotonic() - t0, error=True)
             raise
         finally:

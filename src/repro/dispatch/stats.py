@@ -115,6 +115,9 @@ class DispatchStats:
     hedges = InstrumentAttr()        # duplicate requests launched
     hedge_wins = InstrumentAttr()    # a hedge finished before the primary
     rejected = InstrumentAttr()      # admission queue overflow
+    cancelled = InstrumentAttr()     # backend attempts cancelled mid-flight
+    races = InstrumentAttr()         # first_success races started
+    race_losers = InstrumentAttr()   # rollouts cancelled after a winner
 
     def __init__(self, registry: MetricsRegistry | None = None):
         reg = registry if registry is not None else MetricsRegistry()
@@ -129,6 +132,9 @@ class DispatchStats:
         self._i_hedges = reg.counter("dispatch_hedges")
         self._i_hedge_wins = reg.counter("dispatch_hedge_wins")
         self._i_rejected = reg.counter("dispatch_rejected")
+        self._i_cancelled = reg.counter("dispatch_cancelled")
+        self._i_races = reg.counter("dispatch_races")
+        self._i_race_losers = reg.counter("dispatch_race_losers")
         # admission queue: one gauge carries depth (value) and peak
         self._queue = reg.gauge("dispatch_queue_depth")
         self.per_backend: dict[str, BackendStats] = {}
@@ -237,6 +243,9 @@ class DispatchStats:
             "hedges": self.hedges,
             "hedge_wins": self.hedge_wins,
             "rejected": self.rejected,
+            "cancelled": self.cancelled,
+            "races": self.races,
+            "race_losers": self.race_losers,
             "queue_peak": self.queue_peak,
             "per_domain": dict(self.per_domain),
             "backends": {
@@ -268,6 +277,11 @@ class DispatchStats:
             f"{snap['hedges']} hedges ({snap['hedge_wins']} wins), "
             f"queue peak {snap['queue_peak']}"
         ]
+        if snap["races"] or snap["cancelled"]:
+            lines.append(
+                f"  races: {snap['races']} first_success races, "
+                f"{snap['race_losers']} losers cancelled, "
+                f"{snap['cancelled']} attempts cancelled mid-flight")
         if snap["batch"]:
             b = snap["batch"]
             lines.append(

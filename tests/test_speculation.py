@@ -1,0 +1,450 @@
+"""Differential tests for speculative execution (DESIGN.md §2.4).
+
+Speculation is opt-in and must be *unobservable* apart from latency:
+every test here asserts result equality and ≡_A trace equivalence
+against the non-speculative baseline, and counter-asserts the rollback
+invariants — no committed effects from losing arms (``loser_effects``
+stays 0), mispredicted dependents re-execute exactly once, first_success
+losers are cancelled and fully drained (no leaked dispatch admissions,
+no in-flight backend calls), and no speculative trace segment survives
+into the committed trace.
+"""
+
+from __future__ import annotations
+
+import asyncio
+
+import pytest
+
+from repro.core import (
+    FirstSuccessError,
+    equivalent,
+    first_success,
+    poppy,
+    recording,
+    sequential,
+    sequential_mode,
+    speculation,
+    unordered,
+)
+from repro.core.ai import SimulatedBackend, llm, use_backend, use_dispatcher
+
+from helpers_core import ExternalWorld
+
+
+# ---------------------------------------------------------------------------
+# shared externals (module level: stable reprs keep ≡_A comparisons exact)
+
+CALLS: list = []
+
+
+@unordered
+async def flag_of(x):
+    CALLS.append(("flag_of", x))
+    await asyncio.sleep(0.02)
+    return x > 0
+
+
+@unordered
+async def arm_pos(q):
+    CALLS.append(("arm_pos", q))
+    await asyncio.sleep(0.02)
+    return f"pos:{q}"
+
+
+@unordered
+async def arm_neg(q):
+    CALLS.append(("arm_neg", q))
+    await asyncio.sleep(0.02)
+    return f"neg:{q}"
+
+
+@unordered
+async def enrich(r):
+    CALLS.append(("enrich", r))
+    await asyncio.sleep(0.02)
+    return f"<{r}>"
+
+
+EFFECTS: list = []
+
+
+@sequential
+def record_effect(msg):
+    EFFECTS.append(msg)
+    return None
+
+
+@poppy
+def branchy(x, q):
+    flag = flag_of(x)
+    if flag:
+        r = arm_pos(q)
+    else:
+        r = arm_neg(q)
+    return enrich(r)
+
+
+@poppy
+def branchy_effectful(x, q):
+    flag = flag_of(x)
+    if flag:
+        r = arm_pos(q)
+        record_effect(r)
+    else:
+        r = arm_neg(q)
+        record_effect(r)
+    return r
+
+
+def _reset():
+    CALLS.clear()
+    EFFECTS.clear()
+
+
+def run_speculative_vs_plain(fn, *args):
+    """Run plain (oracle) and speculative; return (results, traces, stats)."""
+    _reset()
+    with recording() as t_plain:
+        with sequential_mode():
+            r_plain = fn(*args)
+    plain_effects = list(EFFECTS)
+    _reset()
+    with speculation() as sp:
+        with recording() as t_spec:
+            r_spec = fn(*args)
+    return (r_plain, r_spec), (t_plain, t_spec), sp.stats, plain_effects
+
+
+class TestBranchSpeculation:
+    def test_differential_both_polarities(self):
+        for x in (1, -1):
+            (r1, r2), (t1, t2), stats, _ = run_speculative_vs_plain(
+                branchy, x, "q")
+            assert r1 == r2
+            ok, why = equivalent(t1, t2)
+            assert ok, why
+            assert stats.branches_speculated == 1
+            assert stats.arms_committed == 1
+            assert stats.arms_aborted == 1
+            assert stats.loser_effects == 0
+
+    def test_wrong_arm_work_is_discarded_from_trace(self):
+        _reset()
+        with speculation() as sp:
+            with recording() as t:
+                branchy(1, "q")
+        # both arms dispatched...
+        names = [c[0] for c in CALLS]
+        assert "arm_pos" in names and "arm_neg" in names
+        # ...but the committed trace only carries the winner: it is ≡_A to
+        # the non-speculative trace, so the loser's events were dropped
+        assert sp.stats.dropped_events >= 1
+        assert all(e.seg == 0 for e in t.events), (
+            "speculative segments leaked into the committed trace")
+        assert not any(e.name == "arm_neg" for e in t.events)
+
+    def test_effectful_arm_does_not_speculate_effects(self):
+        """A @sequential call inside a speculative arm parks on the scope
+        gate; the losing arm's effect must never run."""
+        (r1, r2), (t1, t2), stats, plain_effects = run_speculative_vs_plain(
+            branchy_effectful, 5, "q")
+        assert r1 == r2
+        ok, why = equivalent(t1, t2)
+        assert ok, why
+        # only the winning arm's effect committed, in oracle order
+        assert EFFECTS == plain_effects == ["pos:q"]
+        assert stats.gated_holds >= 1
+        assert stats.loser_effects == 0
+
+    def test_off_by_default(self):
+        _reset()
+        with recording():
+            branchy(1, "q")
+        # no speculation context: only the taken arm ever dispatches
+        names = [c[0] for c in CALLS]
+        assert "arm_neg" not in names
+
+    def test_speculation_overlaps_condition_and_arms(self):
+        """The point of the exercise: arm work overlaps the pending
+        condition, so speculative wall-clock beats sequential stages."""
+        import time
+        _reset()
+        t0 = time.perf_counter()
+        branchy(1, "q")
+        base = time.perf_counter() - t0
+        _reset()
+        with speculation():
+            t0 = time.perf_counter()
+            branchy(1, "q")
+            spec = time.perf_counter() - t0
+        # 3 sequential stages (~60ms) vs flag||arm then enrich (~40ms)
+        assert spec < base, (spec, base)
+
+
+# ---------------------------------------------------------------------------
+# predict-and-validate
+
+PRED_VALUE = {"v": "route-a"}
+
+
+def predict_route(pos, kw):
+    return PRED_VALUE["v"]
+
+
+@unordered(returns_immutable=True, predictor=predict_route)
+async def route(q):
+    CALLS.append(("route", q))
+    await asyncio.sleep(0.02)
+    return "route-a"
+
+
+@poppy
+def routed(q):
+    r = route(q)
+    return enrich(r)
+
+
+class TestPredictAndValidate:
+    def test_hit_skips_nothing_and_reruns_nothing(self):
+        PRED_VALUE["v"] = "route-a"
+        (r1, r2), (t1, t2), stats, _ = run_speculative_vs_plain(routed, "q")
+        assert r1 == r2 == "<route-a>"
+        ok, why = equivalent(t1, t2)
+        assert ok, why
+        assert stats.predictions == 1
+        assert stats.pred_hits == 1
+        assert stats.redo_runs == 0
+        # dependent ran exactly once (on the guess, which was right)
+        assert [c[0] for c in CALLS].count("enrich") == 1
+
+    def test_mispredict_reruns_exactly_once(self):
+        PRED_VALUE["v"] = "WRONG"
+        try:
+            (r1, r2), (t1, t2), stats, _ = run_speculative_vs_plain(
+                routed, "q")
+        finally:
+            PRED_VALUE["v"] = "route-a"
+        assert r1 == r2 == "<route-a>"
+        ok, why = equivalent(t1, t2)
+        assert ok, why
+        assert stats.pred_misses == 1
+        # the dependent dispatched twice (guess + redo) but *committed* one
+        # trace event — and never a third time
+        assert stats.redo_runs == 1
+        assert [c[0] for c in CALLS].count("enrich") == 2
+        assert stats.dropped_events >= 1
+        assert sum(1 for e in t2.events if e.name == "enrich") == 1
+
+    def test_declined_prediction_is_normal_dispatch(self):
+        PRED_VALUE["v"] = None  # predictor declines
+        try:
+            (r1, r2), (t1, t2), stats, _ = run_speculative_vs_plain(
+                routed, "q")
+        finally:
+            PRED_VALUE["v"] = "route-a"
+        assert r1 == r2
+        assert stats.predictions == 0
+        assert stats.redo_runs == 0
+
+    def test_predictor_requires_unordered_immutable(self):
+        with pytest.raises(AssertionError):
+            @unordered(predictor=lambda pos, kw: 1)  # no returns_immutable
+            async def bad(q):
+                return q
+        from repro.core import readonly
+        with pytest.raises(TypeError):
+            readonly(predictor=lambda pos, kw: 1)
+
+
+# ---------------------------------------------------------------------------
+# first_success racing
+
+
+@poppy
+def race_three(q):
+    best = first_success(
+        lambda: llm(f"try-a {q}", max_tokens=48),
+        lambda: llm(f"try-b {q}", max_tokens=4),
+        lambda: llm(f"try-c {q}", max_tokens=48),
+    )
+    return best
+
+
+class TestFirstSuccess:
+    def _fresh_dispatcher(self):
+        from repro.dispatch import Dispatcher
+        return Dispatcher()
+
+    def test_winner_matches_oracle_and_losers_drain(self):
+        b = SimulatedBackend()
+        d = self._fresh_dispatcher()
+        with use_backend(b), use_dispatcher(d):
+            out = race_three("hello")
+        st = d.stats
+        assert isinstance(out, str) and out
+        assert st.races == 1
+        assert st.race_losers == 2
+        # losers were cancelled through the dispatcher and fully drained:
+        # in-flight attempts unwound, admission queue empty
+        assert st.cancelled == 2
+        assert st.queue_depth == 0
+        assert b._in_flight == 0
+
+    def test_deterministic_result_vs_sequential_candidate(self):
+        """The race is deterministic: the winner is exactly the candidate
+        the backend's (deterministic) latency model finishes first, and its
+        payload matches what the sequential oracle produces for it."""
+        b = SimulatedBackend()
+        cands = [("try-a hello", 48), ("try-b hello", 4),
+                 ("try-c hello", 48)]
+
+        def lat(p, mt):
+            return b.latency(p, min(mt, 1 + b._digest(p) % 7))
+
+        wp, wmt = min(cands, key=lambda c: lat(*c))
+        d = self._fresh_dispatcher()
+        with use_backend(b), use_dispatcher(d):
+            with sequential_mode():
+                expect = llm(wp, max_tokens=wmt)
+            out = race_three("hello")
+        assert out == expect
+
+    def test_all_fail_raises(self):
+        async def boom():
+            raise RuntimeError("nope")
+
+        with pytest.raises(FirstSuccessError) as ei:
+            asyncio.run(first_success.__poppy_dispatch__(boom, boom))
+        assert len(ei.value.failures) == 2
+
+    def test_accept_filter_and_tie_break(self):
+        async def a():
+            return "reject-me"
+
+        async def bee():
+            await asyncio.sleep(0.01)
+            return "ok-b"
+
+        async def c():
+            await asyncio.sleep(0.01)
+            return "ok-c"
+
+        out = asyncio.run(first_success.__poppy_dispatch__(
+            a, bee, c, accept=lambda s: s.startswith("ok")))
+        # b and c complete in the same wave; lowest index wins
+        assert out == "ok-b"
+
+    def test_no_rollouts_is_an_error(self):
+        with pytest.raises(ValueError):
+            asyncio.run(first_success.__poppy_dispatch__())
+
+
+# ---------------------------------------------------------------------------
+# rollback airtightness with ordered externals downstream
+
+
+@poppy
+def branch_then_effect(x, q, world):
+    flag = flag_of(x)
+    if flag:
+        r = arm_pos(q)
+    else:
+        r = arm_neg(q)
+    world.store(r)
+    return world.peek()
+
+
+def test_locks_balanced_after_speculation():
+    """A sequential/readonly chain *after* the branch still runs in program
+    order and completes — aborted scopes must not leave a lock chain
+    dangling (the run would hang) or admit a phantom store."""
+    world = ExternalWorld()
+    _reset()
+    with sequential_mode():
+        r_plain = branch_then_effect(2, "q", world)
+        plain_out = list(world.out)
+    world.reset()
+    _reset()
+    with speculation() as sp:
+        r_spec = branch_then_effect(2, "q", world)
+    assert r_plain == r_spec
+    assert world.out == plain_out == [("store", "pos:q"),
+                                      ("peek", "pos:q")]
+    assert sp.stats.loser_effects == 0
+
+
+def test_nested_branches_cascade_abort():
+    (r1, r2), (t1, t2), stats, _ = run_speculative_vs_plain(
+        nested_branches, 1, -1, "q")
+    assert r1 == r2
+    ok, why = equivalent(t1, t2)
+    assert ok, why
+    assert stats.loser_effects == 0
+    assert stats.arms_committed >= 1
+    assert stats.arms_aborted >= 1
+
+
+@poppy
+def nested_branches(x, y, q):
+    fx = flag_of(x)
+    fy = flag_of(y)
+    if fx:
+        if fy:
+            r = arm_pos(q)
+        else:
+            r = arm_neg(q)
+    else:
+        r = enrich(q)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# property test: random branchy programs vs the sequential oracle
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # baked image may lack hypothesis; only this test skips
+    HAVE_HYPOTHESIS = False
+
+
+@poppy
+def prop_program(x, y, q):
+    fx = flag_of(x)
+    if fx:
+        a = arm_pos(q)
+    else:
+        a = arm_neg(q)
+    fy = flag_of(y)
+    if fy:
+        b = enrich(a)
+    else:
+        b = arm_pos(a)
+    return f"{a}|{b}"
+
+
+def _check_prop(x, y, q):
+    (r1, r2), (t1, t2), stats, _ = run_speculative_vs_plain(
+        prop_program, x, y, q)
+    assert r1 == r2
+    ok, why = equivalent(t1, t2)
+    assert ok, why
+    assert stats.loser_effects == 0
+    assert all(e.seg == 0 for e in t2.events)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(x=st.integers(-3, 3), y=st.integers(-3, 3),
+           q=st.text("ab", min_size=1, max_size=4))
+    def test_property_branchy_vs_oracle(x, y, q):
+        _check_prop(x, y, q)
+else:
+    @pytest.mark.parametrize("x,y,q", [
+        (1, 1, "a"), (1, -1, "b"), (-1, 1, "ab"), (-1, -1, "a"),
+        (0, 0, "bb"), (2, -3, "ba"),
+    ])
+    def test_property_branchy_vs_oracle(x, y, q):
+        # exhaustive-corner fallback when hypothesis is unavailable
+        _check_prop(x, y, q)
