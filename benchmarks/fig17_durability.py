@@ -1,0 +1,351 @@
+"""Fig. 17: durability under chaos (beyond-paper; DESIGN.md §2.5,
+EXPERIMENTS.md §Fig. 17).
+
+Three legs, all differential against an uninterrupted run:
+
+  recovery  write-ahead journal kill/resume: a child process runs the
+            pipeline with ``Journal(kill_after=K)`` and hard-exits
+            (``os._exit``) the instant the K-th committed external lands
+            on disk — a SIGKILL mid-run as far as the journal can tell.
+            The parent resumes from the surviving journal and asserts
+            the final result is byte-identical to the uninterrupted
+            oracle, the trace stays ≡_A, and at least ``REPLAY_FLOOR``
+            of the resumed run's externals were served from the journal
+            instead of re-executing.
+  faults    seeded fault injection through the dispatcher: a 20%%
+            error-rate plan with retries absorbing every draw — asserts
+            result equality with the healthy run, zero leaked dispatcher
+            admissions / in-flight backend slots, and the circuit
+            breaker's full open → half-open probe → close cycle when a
+            backend dies and heals.
+  serving   injected failures in front of the tiny JAX serving engine:
+            every perturbed request must leave decode slots and
+            KV-page/prefix-pin counters exactly balanced.
+
+    PYTHONPATH=src:. python benchmarks/fig17_durability.py
+"""
+
+from __future__ import annotations
+
+import asyncio
+import hashlib
+import json
+import os
+import statistics
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+#: Acceptance floor: fraction of the resumed run's externals that must be
+#: served from the journal (the chaos kill point is chosen so an honest
+#: replay clears this with margin).
+REPLAY_FLOOR = 0.8
+TOPICS = ("alpha", "beta", "gamma", "delta", "epsilon", "zeta")
+CALL_S = 0.01
+KILL_AFTER = 15   # of the pipeline's 18 journaled resolutions
+
+EFFECTS: list = []
+CALLS: list = []
+_DELAY = {"s": CALL_S}
+
+
+def _digest(text):
+    return int.from_bytes(
+        hashlib.sha256(str(text).encode()).digest()[:4], "big")
+
+
+# -- the durable pipeline (module-level so child and parent share keys) ------
+
+from repro.core import (equivalent, poppy, recording, sequential,  # noqa: E402
+                        sequential_mode, unordered)
+from repro.durability import (KILL_EXIT, Journal, resume,  # noqa: E402
+                              use_journal)
+
+
+@unordered(returns_immutable=True)
+def research(topic):
+    CALLS.append(("research", topic))
+    time.sleep(_DELAY["s"])
+    return f"research({topic})#{_digest(topic) % 997}"
+
+
+@unordered(returns_immutable=True)
+def summarize(text):
+    CALLS.append(("summarize", text))
+    time.sleep(_DELAY["s"])
+    return f"sum#{_digest(text) % 997}"
+
+
+@sequential(effects=("report",))
+def save(entry):
+    EFFECTS.append(entry)
+    return None
+
+
+@poppy
+def pipeline(topics):
+    acc = ()
+    for t in topics:
+        r = research(t)
+        s = summarize(r)
+        save(s)
+        acc += (s,)
+    return "|".join(acc)
+
+
+def _reset():
+    CALLS.clear()
+    EFFECTS.clear()
+
+
+# -- leg 1: kill/resume recovery --------------------------------------------
+
+
+def _child_main(journal_path, kill_after):
+    """Run the pipeline, hard-exiting after ``kill_after`` journal
+    appends.  Reaching the end means the kill never fired — exit 0 so the
+    parent can tell the difference."""
+    with use_journal(Journal(journal_path, mode="record",
+                             kill_after=kill_after)):
+        pipeline(TOPICS)
+    return 0
+
+
+def _spawn_killed_child(journal_path, kill_after):
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(root), str(root / "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    return subprocess.run(
+        [sys.executable, str(Path(__file__).resolve()),
+         "--child", str(journal_path), "--kill-after", str(kill_after)],
+        env=env, capture_output=True, text=True, timeout=120)
+
+
+def bench_recovery(*, trials=2, kill_after=KILL_AFTER):
+    frac_min = 1.0
+    times = {"full": [], "resume": []}
+    for _ in range(trials):
+        # uninterrupted oracle (plain + engine, both in-process)
+        _reset()
+        with sequential_mode(), recording() as tr_plain:
+            expect = pipeline(TOPICS)
+        fx_plain = list(EFFECTS)
+        _reset()
+        t0 = time.perf_counter()
+        with recording() as tr_full:
+            full = pipeline(TOPICS)
+        times["full"].append(time.perf_counter() - t0)
+        assert full == expect
+
+        # killed child: dies via os._exit(KILL_EXIT) mid-journal
+        tmp = Path(tempfile.mkdtemp(prefix="fig17_"))
+        jp = tmp / "run.journal"
+        proc = _spawn_killed_child(jp, kill_after)
+        assert proc.returncode == KILL_EXIT, (
+            f"child should die at append #{kill_after} with exit "
+            f"{KILL_EXIT}, got {proc.returncode}\n{proc.stderr[-2000:]}")
+        lines = [ln for ln in jp.read_text().splitlines() if ln.strip()]
+        assert len(lines) >= kill_after, (
+            f"journal short: {len(lines)} < {kill_after}")
+
+        # resume: byte-identical completion, mostly served from disk
+        _reset()
+        t0 = time.perf_counter()
+        with recording() as tr_res, resume(jp) as jr:
+            resumed = pipeline(TOPICS)
+        times["resume"].append(time.perf_counter() - t0)
+        assert resumed == expect, (
+            f"resumed result diverges: {resumed!r} != {expect!r}")
+        for tag, tr in (("full", tr_full), ("resume", tr_res)):
+            ok, why = equivalent(tr_plain, tr)
+            assert ok, f"{tag}: trace not ≡_A: {why}"
+        st = jr.stats
+        assert st.loaded >= kill_after, st
+        total = st.replayed + len(CALLS) + len(EFFECTS)
+        frac = st.replayed / total if total else 0.0
+        frac_min = min(frac_min, frac)
+        assert frac >= REPLAY_FLOOR, (
+            f"replay fraction {frac:.2f} below floor {REPLAY_FLOOR} "
+            f"({st.replayed} replayed of {total} externals)")
+        # a resumed run is itself resumable: it appended the tail
+        assert st.appended >= 1, st
+    return {
+        "kill_after": kill_after,
+        "full_s": statistics.median(times["full"]),
+        "resume_s": statistics.median(times["resume"]),
+        "recovery_replay_fraction": frac_min,
+        "resume_speedup": (statistics.median(times["full"])
+                           / statistics.median(times["resume"])),
+    }
+
+
+# -- leg 2: dispatcher fault injection + circuit breaker ---------------------
+
+
+def bench_faults(*, trials=2):
+    from repro.core.ai import SimulatedBackend
+    from repro.dispatch import Dispatcher, RetryPolicy
+    from repro.dispatch.reliability import BreakerPolicy, CircuitOpenError
+    from repro.durability.faults import (FaultInjector, FaultPlan,
+                                         InjectedFault)
+
+    injected = 0
+    for trial in range(trials):
+        async def chaos_run(trial=trial):
+            prompts = [f"fault-{trial}-{i}" for i in range(16)]
+            kw = dict(max_tokens=6, temperature=0.0, stop=None)
+            # healthy oracle
+            be0 = SimulatedBackend(time_scale=0.01)
+            d0 = Dispatcher([be0])
+            healthy = await asyncio.gather(
+                *(d0.generate(p, **kw) for p in prompts))
+            # chaos run: seeded 20% error rate, retries absorb every draw
+            be = SimulatedBackend(time_scale=0.01)
+            d = Dispatcher([be],
+                           retry=RetryPolicy(max_attempts=8, base_s=0.001),
+                           faults=FaultPlan(error_rate=0.2, seed=7))
+            chaotic = await asyncio.gather(
+                *(d.generate(p, **kw) for p in prompts))
+            assert chaotic == healthy, "faulty run diverged from healthy"
+            st = d.stats
+            assert st.faults_injected > 0, "plan injected nothing"
+            # zero leaks: no queued admission, no in-flight slot
+            assert st.queue_depth == 0
+            for r in d.router.replicas:
+                assert r.outstanding == 0, f"leaked slot on {r.name}"
+            assert be._in_flight == 0
+            return st.faults_injected
+
+        async def breaker_cycle():
+            be = SimulatedBackend(time_scale=0.01)
+            fi = FaultInjector(FaultPlan(error_rate=1.0, seed=3))
+            d = Dispatcher([be],
+                           breaker=BreakerPolicy(failure_threshold=3,
+                                                 cooldown_s=0.05),
+                           faults=fi)
+            kw = dict(max_tokens=6, temperature=0.0, stop=None)
+            for i in range(5):
+                try:
+                    await d.generate(f"dead-{i}", **kw)
+                except (InjectedFault, CircuitOpenError):
+                    pass
+            st = d.stats
+            assert st.breaker_opens >= 1, "breaker never opened"
+            assert st.breaker_fastfails >= 1, "open circuit never fast-failed"
+            fi.plan = FaultPlan()          # the backend heals
+            await asyncio.sleep(0.06)      # past the cooldown
+            out = await d.generate("healed", **kw)
+            assert out, "probe request failed after heal"
+            assert st.breaker_probes >= 1 and st.breaker_closes >= 1, (
+                "breaker never probed/closed after heal")
+            for r in d.router.replicas:
+                assert r.outstanding == 0
+
+        injected += asyncio.run(chaos_run())
+        asyncio.run(breaker_cycle())
+    return {"faults_injected": injected, "trials": trials}
+
+
+# -- leg 3: serving-engine leak check under injected failures ---------------
+
+
+def bench_serving_leaks():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving.backend import LocalEngineBackend
+    from repro.serving.engine import ServingEngine
+    from repro.durability.faults import FaultPlan, InjectedFault
+
+    cfg = get_config("stablelm-3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    engine = ServingEngine(model, params, max_slots=4, max_len=64)
+    free0 = len(engine.free_slots)
+
+    def cache_pages():
+        pc = engine.prefix_cache
+        return pc.stats().get("pages", 0) if pc is not None else 0
+
+    def pages_free():
+        return engine.stats().get("paged", {}).get("pages_free")
+
+    pages0, cached0 = pages_free(), cache_pages()
+    be = LocalEngineBackend(engine,
+                            faults=FaultPlan(error_rate=0.5, seed=11))
+
+    async def drive():
+        ok = fail = 0
+        for i in range(12):
+            try:
+                await be.generate(f"chaos prompt {i}", max_tokens=4,
+                                  temperature=0.0, stop=None)
+                ok += 1
+            except InjectedFault:
+                fail += 1
+        return ok, fail
+
+    ok, fail = asyncio.run(drive())
+    assert ok > 0 and fail > 0, f"need both outcomes, got {ok}/{fail}"
+    assert len(engine.free_slots) == free0, (
+        f"leaked decode slots: {len(engine.free_slots)} != {free0}")
+    assert not engine.active, f"requests stuck active: {engine.active}"
+    if pages0 is not None:
+        # pages missing from the free list must be exactly the ones the
+        # prefix cache retained on purpose — nothing held by a dead request
+        taken = pages0 - pages_free()
+        retained = cache_pages() - cached0
+        assert taken == retained, (
+            f"leaked KV pages: {taken} gone from free list, only "
+            f"{retained} retained by the prefix cache")
+    return {"requests_ok": ok, "requests_faulted": fail}
+
+
+# -- harness ----------------------------------------------------------------
+
+
+def run(out_dir="experiments/apps", trials=2, kill_after=KILL_AFTER,
+        smoke=False):
+    rec = bench_recovery(trials=trials, kill_after=kill_after)
+    print(f"recovery  full {rec['full_s']:.3f}s  resume "
+          f"{rec['resume_s']:.3f}s  replay fraction "
+          f"{rec['recovery_replay_fraction']:.2f}  "
+          f"({rec['resume_speedup']:.2f}× faster)", flush=True)
+    fl = bench_faults(trials=trials)
+    print(f"faults    {fl['faults_injected']} injected over "
+          f"{fl['trials']} trials; results equal, slots balanced, "
+          f"breaker cycled open→probe→close", flush=True)
+    sv = bench_serving_leaks()
+    print(f"serving   {sv['requests_ok']} ok / {sv['requests_faulted']} "
+          f"faulted; decode slots and KV pages balanced", flush=True)
+
+    assert rec["recovery_replay_fraction"] >= REPLAY_FLOOR
+    if not smoke:
+        print(f"\nacceptance: replay fraction "
+              f"{rec['recovery_replay_fraction']:.2f} ≥ {REPLAY_FLOOR} ✓")
+
+    result = {"recovery": rec, "faults": fl, "serving": sv}
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "fig17.json").write_text(json.dumps(result, indent=1))
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", default=None,
+                    help="(internal) run the kill-mode child against this "
+                         "journal path")
+    ap.add_argument("--kill-after", type=int, default=KILL_AFTER)
+    ap.add_argument("--trials", type=int, default=2)
+    args = ap.parse_args()
+    if args.child:
+        raise SystemExit(_child_main(args.child, args.kill_after))
+    run(trials=args.trials, kill_after=args.kill_after)

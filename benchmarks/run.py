@@ -7,6 +7,7 @@
     Fig. 12  auto-batching                 fig12_autobatch
     Fig. 13  prefix-aware prefill          fig13_prefix_prefill
     Fig. 16  speculative execution         fig16_speculation
+    Fig. 17  durability / chaos            fig17_durability
     Fig. 6   ToT execution trace           fig6_trace
     Fig. 7   interpreter overhead          fig7_overhead
     Fig. 8   parallelism scaling           fig8_scaling
@@ -48,7 +49,8 @@ def smoke(out_path=SMOKE_JSON):
     from benchmarks import (fig5_speedup, fig9_dispatch, fig10_sync_offload,
                             fig11_effect_domains, fig12_autobatch,
                             fig13_prefix_prefill, fig14_paged_kv,
-                            fig15_fleet, fig16_speculation, obs_overhead)
+                            fig15_fleet, fig16_speculation, fig17_durability,
+                            obs_overhead)
 
     t0 = time.time()
     figures = {}
@@ -143,6 +145,19 @@ def smoke(out_path=SMOKE_JSON):
             lambda r: {"spec_vs_nonspec":
                        r["branchy"]["speedup_spec_vs_nonspec"],
                        "race": r["race"]["speedup_race"]})
+    # fig17 is the chaos leg: a subprocess is hard-killed (os._exit) mid-
+    # journal and resumed — asserting byte-identical results + ≡_A vs the
+    # uninterrupted run and a ≥80% journal-replay fraction (the gated
+    # recovery_replay_fraction metric, baseline 1.0 with the gate's 0.2
+    # tolerance = the ISSUE's 0.8 floor); plus seeded dispatcher fault
+    # injection with zero leaked admissions and the breaker's full
+    # open → probe → close cycle, and injected serving-backend failures
+    # leaving decode slots / KV pages / prefix pins exactly balanced
+    attempt("fig17", "kill/resume byte-identical + ≡_A + ≥80% replay + "
+                     "zero leaks under injected faults",
+            lambda: fig17_durability.run(trials=1, smoke=True),
+            lambda r: {"recovery_replay_fraction":
+                       r["recovery"]["recovery_replay_fraction"]})
     # obs_overhead asserts the tracing-enabled overhead bar (<5% pairwise
     # delta on fig5 tiny-N) and critical-path attribution soundness; an
     # assertion failure surfaces through the same equivalence machinery
@@ -187,7 +202,7 @@ def main():
                             fig11_effect_domains, fig12_autobatch,
                             fig13_prefix_prefill, fig14_paged_kv,
                             fig15_fleet, fig16_speculation,
-                            table1_characteristics)
+                            fig17_durability, table1_characteristics)
 
     print("=" * 72)
     print("Table 1 — benchmark program characteristics")
@@ -248,6 +263,12 @@ def main():
           "routes, racing rollouts")
     print("=" * 72)
     fig16_speculation.run(trials=trials)
+
+    print("\n" + "=" * 72)
+    print("Fig. 17 — durability: kill/resume recovery, fault injection, "
+          "breaker")
+    print("=" * 72)
+    fig17_durability.run(trials=trials)
 
     print("\n" + "=" * 72)
     print("Fig. 6 — ToT execution trace (queue → dispatch → resolve)")

@@ -32,6 +32,7 @@ from .batching import (  # noqa: F401
 )
 from .engine import OffloadPolicy, current_offload_policy, offload_policy  # noqa: F401
 from .errors import (  # noqa: F401
+    DeadlineExceeded,
     ExternalCallError,
     FirstSuccessError,
     PoppyCompileError,
@@ -55,6 +56,7 @@ __all__ = [
     "sequential_mode", "in_sequential_mode", "PoppyFn",
     "PoppyError", "PoppyCompileError", "PoppyRuntimeError",
     "PoppyUnboundLocalError", "ExternalCallError", "FirstSuccessError",
+    "DeadlineExceeded",
     "UNORDERED", "READONLY", "SEQUENTIAL", "register_immutable_type",
     "Trace", "recording", "equivalent",
     "OffloadPolicy", "offload_policy", "current_offload_policy",

@@ -187,19 +187,20 @@ def _sig_params(fn):
 
 
 def _static_info(cls_name, offload=None, effects=None, imm_result=False,
-                 batchable=None, predictor=None):
+                 batchable=None, predictor=None, deadline_ms=None):
     return lambda fn: registry.ExternalInfo(
         cls=cls_name, name=registry.callable_name(fn), offload=offload,
         effects=effects, params=_sig_params(fn), imm_result=imm_result,
-        batchable=batchable, predictor=predictor)
+        batchable=batchable, predictor=predictor, deadline_ms=deadline_ms)
 
 
 def _static_annotation(cls_name, fn, offload, effects=None,
                        returns_immutable=False, batchable=None,
-                       predictor=None):
+                       predictor=None, deadline_ms=None):
     deco = _external(_static_info(cls_name, offload=offload, effects=effects,
                                   imm_result=returns_immutable,
-                                  batchable=batchable, predictor=predictor))
+                                  batchable=batchable, predictor=predictor,
+                                  deadline_ms=deadline_ms))
     return deco if fn is None else deco(fn)
 
 
@@ -234,7 +235,8 @@ def batch_handler(wrapper):
 
 
 def unordered(fn=None, *, offload=None, effects=None,
-              returns_immutable=False, batchable=None, predictor=None):
+              returns_immutable=False, batchable=None, predictor=None,
+              deadline_ms=None):
     """External call that may execute in any order (stateless externals,
     pure operations on immutable data).
 
@@ -270,32 +272,40 @@ def unordered(fn=None, *, offload=None, effects=None,
     the real call validates it, and a miss rolls the dependents back and
     re-executes them with the actual value.  The predictor must be cheap,
     deterministic-safe to discard, and — enforced — the external must be
-    ``@unordered`` with ``returns_immutable=True``."""
+    ``@unordered`` with ``returns_immutable=True``.
+
+    ``deadline_ms`` caps each call's wall-clock execution (DESIGN.md §2.5):
+    an attempt exceeding it is cooperatively cancelled and the call fails
+    with :class:`~repro.core.errors.DeadlineExceeded`.  Enforced on the
+    awaitable offload paths (async / ``"thread"`` / ``"process"``) —
+    ``"inline"`` externals run on the loop thread and cannot be
+    interrupted."""
     return _static_annotation(registry.UNORDERED, fn, offload, effects,
-                              returns_immutable, batchable, predictor)
+                              returns_immutable, batchable, predictor,
+                              deadline_ms)
 
 
 def readonly(fn=None, *, offload=None, effects=None,
-             returns_immutable=False):
+             returns_immutable=False, deadline_ms=None):
     """External call reorderable among other readonly calls but ordered with
     respect to sequential calls (reads of mutable state).  With ``effects``,
     the ordering applies per effect domain (see ``unordered``)."""
     return _static_annotation(registry.READONLY, fn, offload, effects,
-                              returns_immutable)
+                              returns_immutable, deadline_ms=deadline_ms)
 
 
 def sequential(fn=None, *, offload=None, effects=None,
-               returns_immutable=False):
+               returns_immutable=False, deadline_ms=None):
     """External call that must execute in original program order (mutation,
     I/O).  This is also the default for unannotated externals.  With
     ``effects``, program order is preserved *per effect domain* — two
     sequential calls on disjoint domains may overlap (see ``unordered``)."""
     return _static_annotation(registry.SEQUENTIAL, fn, offload, effects,
-                              returns_immutable)
+                              returns_immutable, deadline_ms=deadline_ms)
 
 
 def external(fn=None, *, classify, offload=None, effects=None,
-             returns_immutable=False, batchable=None):
+             returns_immutable=False, batchable=None, deadline_ms=None):
     """External call with a *dynamic* classifier: ``classify(args, kwargs,
     fresh_mask) -> 'unordered'|'readonly'|'sequential'``.  With
     ``batchable=``, calls that classify *unordered* may coalesce (see
@@ -306,7 +316,8 @@ def external(fn=None, *, classify, offload=None, effects=None,
                                      offload=offload, effects=effects,
                                      params=_sig_params(f),
                                      imm_result=returns_immutable,
-                                     batchable=batchable)
+                                     batchable=batchable,
+                                     deadline_ms=deadline_ms)
     if fn is None:
         return _external(info_factory)
     return _external(info_factory)(fn)

@@ -28,9 +28,9 @@ from __future__ import annotations
 import asyncio
 
 from . import registry
-from .errors import ExternalCallError, PoppyRuntimeError
+from .errors import DeadlineExceeded, ExternalCallError, PoppyRuntimeError
 from .speculate import SpecEpoch, current_scope
-from .trace import safe_repr
+from .trace import current_segment, safe_repr
 from .values import (await_future, check_bound, current_taint, deep_resolve,
                      peek, reset_taint, settled, taint_scope)
 from ..obs.spans import (PHASE_MIN_S, current_span, current_tracer,
@@ -140,6 +140,26 @@ async def invoke_external(rt, fn, pos, kw, ev, *, allow_batch=False,
             # this task belongs to a losing arm and is about to be
             # cancelled — don't race the cancellation with a dispatch
             raise asyncio.CancelledError
+    # write-ahead journal (DESIGN.md §2.5): claim this call's occurrence
+    # *before* the batch window — a replayed call must not occupy batch
+    # capacity or touch the backend at all.  Only wrapped externals in the
+    # committed segment participate: a speculative arm's resolutions are
+    # never journaled (they may lose), and interpreter intrinsics are
+    # cheap to re-execute.
+    jr = rt.journal
+    token = None
+    if jr is not None and hasattr(fn, "__poppy_dispatch__") \
+            and current_segment() == 0:
+        hit, token, val = jr.claim(registry.callable_name(fn), pos, kw)
+        if hit:
+            # replay: the trace records the same dispatch/resolve events a
+            # live run would, so resumed traces stay ≡_A-comparable
+            if rt.trace is not None:
+                rt.trace.dispatched(ev,
+                                    args_repr=safe_repr((tuple(pos), kw)))
+                rt.trace.resolved(ev)
+                _record_declared_effects(rt, fn, ev, pos, kw)
+            return val
     if allow_batch and rt.batching:
         spec = registry.batch_spec(fn)
         if spec is not None:
@@ -148,45 +168,85 @@ async def invoke_external(rt, fn, pos, kw, ev, *, allow_batch=False,
                 # the collector records dispatch/resolve trace events at
                 # flush/scatter time (when the batch actually goes out)
                 with maybe_span("batch.window", cat="external.batch"):
-                    return await rt.batches.submit(fn, spec, key, pos, kw,
-                                                   ev)
+                    result = await rt.batches.submit(fn, spec, key, pos, kw,
+                                                     ev)
+                if token is not None:
+                    jr.append(token, result, effects=_ev_effects(ev),
+                              seq=ev.seq_no if ev is not None else -1)
+                return result
     if rt.trace is not None:
         rt.trace.dispatched(ev, args_repr=safe_repr((tuple(pos), kw)))
         if ev is not None:
             _span_note(seq=ev.seq_no)
     target = unwrap_external(fn)
+    info = getattr(fn, "__poppy_external__", None)
+    deadline = info.deadline_ms if info is not None else None
     try:
         with maybe_span("call", cat="external.call"):
             if registry.is_async_callable(target):
-                result = await target(*pos, **kw)
-            elif rt.offload_mode_for(fn) == "thread":
-                # blocking externals dispatch on the offload executor so
-                # independent calls overlap (real-world sync SDK clients)
-                result = await rt.run_sync(target, pos, kw)
+                coro = target(*pos, **kw)
+                result = await (asyncio.wait_for(coro, deadline / 1e3)
+                                if deadline is not None else coro)
             else:
-                # inline on the loop — the paper's single-interpreter
-                # dispatch (§6.1), right for cheap calls and thread-affine
-                # clients
-                result = target(*pos, **kw)
+                mode = rt.offload_mode_for(fn)
+                if mode == "thread":
+                    # blocking externals dispatch on the offload executor
+                    # so independent calls overlap (sync SDK clients)
+                    fut = rt.run_sync(target, pos, kw)
+                elif mode == "process":
+                    # CPU-bound externals dispatch on the process pool so
+                    # the GIL doesn't serialize them
+                    fut = rt.run_process(fn, pos, kw)
+                else:
+                    # inline on the loop — the paper's single-interpreter
+                    # dispatch (§6.1), right for cheap calls and
+                    # thread-affine clients.  No deadline: the loop thread
+                    # cannot be interrupted mid-call.
+                    fut = None
+                    result = target(*pos, **kw)
+                if fut is not None:
+                    result = await (asyncio.wait_for(fut, deadline / 1e3)
+                                    if deadline is not None else fut)
     except asyncio.CancelledError:
         raise
+    except asyncio.TimeoutError as e:
+        if deadline is not None:
+            # the deadline fired: wait_for already cancelled the attempt
+            # cooperatively; lock chains release via the controller's
+            # ``finally`` blocks like any other failure
+            raise DeadlineExceeded(registry.callable_name(fn),
+                                   deadline) from e
+        raise ExternalCallError(registry.callable_name(fn), e) from e
     except Exception as e:
         raise ExternalCallError(registry.callable_name(fn), e) from e
     if rt.trace is not None:
         rt.trace.resolved(ev)
-        if ev is not None:
-            # record the *declared* effect keys now that arguments are
-            # concrete — locking may have been degraded to "*" while a key
-            # argument was still pending, but the trace must carry the
-            # deterministic declaration so per-domain ≡_A projections
-            # match the plain-Python run
-            info = getattr(fn, "__poppy_external__", None)
-            if info is not None and info.effects is not None:
-                effs = registry.effect_keys(info, pos, kw)
-                if effs is not None:
-                    rt.trace.set_effects(ev, effs)
-                    _span_note(effects=list(effs))
+        _record_declared_effects(rt, fn, ev, pos, kw)
+    if token is not None:
+        jr.append(token, result, effects=_ev_effects(ev),
+                  seq=ev.seq_no if ev is not None else -1)
     return result
+
+
+def _ev_effects(ev):
+    """The effect keys a trace event carries, for journal provenance."""
+    effs = getattr(ev, "effects", None) if ev is not None else None
+    return tuple(str(k) for k in effs) if effs else ("*",)
+
+
+def _record_declared_effects(rt, fn, ev, pos, kw):
+    """Record the *declared* effect keys now that arguments are concrete —
+    locking may have been degraded to ``"*"`` while a key argument was
+    still pending, but the trace must carry the deterministic declaration
+    so per-domain ≡_A projections match the plain-Python run."""
+    if ev is None:
+        return
+    info = getattr(fn, "__poppy_external__", None)
+    if info is not None and info.effects is not None:
+        effs = registry.effect_keys(info, pos, kw)
+        if effs is not None:
+            rt.trace.set_effects(ev, effs)
+            _span_note(effects=list(effs))
 
 
 def _redo_event(rt, ev, fn, callsite, cls, keys):

@@ -17,10 +17,13 @@ from __future__ import annotations
 
 import asyncio
 import contextvars
+import functools
+import importlib
 import os
+import pickle
 import sys
 import threading
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import dataclass
 
 from ..obs.spans import current_tracer as _obs_tracer
@@ -45,7 +48,7 @@ from .lambda_o import (
     PoppyClosure,
 )
 from .speculate import current_scope, current_speculation
-from .trace import Trace, current_trace
+from .trace import Trace, current_segment, current_trace
 from .values import (
     KS_READY,
     STAR,
@@ -88,22 +91,29 @@ class OffloadPolicy:
     """Runtime-wide executor-offload configuration.
 
     ``mode`` — default placement for annotated sync externals that did not
-    pick one themselves: ``"thread"`` (overlap blocking calls) or
-    ``"inline"`` (paper §6.1 single-interpreter dispatch, zero thread
-    overhead — and zero parallelism for blocking calls).
+    pick one themselves: ``"thread"`` (overlap blocking calls),
+    ``"process"`` (ProcessPoolExecutor, for CPU-bound externals the GIL
+    would serialize — arguments/results must be picklable and the target a
+    module-level function), or ``"inline"`` (paper §6.1 single-interpreter
+    dispatch, zero thread overhead — and zero parallelism for blocking
+    calls).
     ``max_workers`` — thread-pool size; bounds how many blocking externals
     overlap (``None`` → min(32, cpu+4, …) heuristic below).
+    ``process_workers`` — process-pool size (``None`` → cpu count).
     """
 
     mode: str = "thread"
     max_workers: int | None = None
+    process_workers: int | None = None
 
     def __post_init__(self):
-        if self.mode not in ("thread", "inline"):
-            raise ValueError(f"offload mode must be 'thread' or 'inline', "
-                             f"got {self.mode!r}")
+        if self.mode not in ("thread", "process", "inline"):
+            raise ValueError(f"offload mode must be 'thread', 'process', "
+                             f"or 'inline', got {self.mode!r}")
         if self.max_workers is not None and self.max_workers < 1:
             raise ValueError("max_workers must be >= 1")
+        if self.process_workers is not None and self.process_workers < 1:
+            raise ValueError("process_workers must be >= 1")
 
 
 _offload_policy: contextvars.ContextVar[OffloadPolicy] = \
@@ -121,8 +131,9 @@ class offload_policy:
     clients); ``offload_policy(max_workers=4)`` caps blocking-call overlap.
     """
 
-    def __init__(self, mode="thread", max_workers=None):
-        self.policy = OffloadPolicy(mode=mode, max_workers=max_workers)
+    def __init__(self, mode="thread", max_workers=None, process_workers=None):
+        self.policy = OffloadPolicy(mode=mode, max_workers=max_workers,
+                                    process_workers=process_workers)
 
     def __enter__(self):
         self._tok = _offload_policy.set(self.policy)
@@ -137,6 +148,22 @@ def _default_pool_size() -> int:
     # the stdlib heuristic, with a floor of 8 so small containers still
     # demonstrate overlap of a typical external-call burst
     return max(8, min(32, (os.cpu_count() or 1) + 4))
+
+
+def _process_call(module: str, qualname: str, pos, kw):
+    """Worker-side trampoline for ``offload="process"`` externals.
+
+    Decorated externals don't pickle (the wrapper is a local closure), so
+    the parent ships ``(module, qualname)`` and the worker re-imports the
+    wrapper and unwraps it to the underlying implementation
+    (``__poppy_dispatch__``).  Runs in a **separate interpreter**: no
+    runtime, trace, or dispatcher context crosses the boundary.
+    """
+    obj = importlib.import_module(module)
+    for part in qualname.split("."):
+        obj = getattr(obj, part)
+    target = getattr(obj, "__poppy_dispatch__", obj)
+    return target(*pos, **kw)
 
 
 class Frame:
@@ -223,12 +250,19 @@ class Runtime:
         self._err_evt: asyncio.Event | None = None
         pol = current_offload_policy()
         self.offload_mode = offload if offload is not None else pol.mode
-        if self.offload_mode not in ("thread", "inline"):
-            raise ValueError(f"offload must be 'thread' or 'inline', "
-                             f"got {self.offload_mode!r}")
+        if self.offload_mode not in ("thread", "process", "inline"):
+            raise ValueError(f"offload must be 'thread', 'process', or "
+                             f"'inline', got {self.offload_mode!r}")
         self.offload_workers = offload_workers if offload_workers is not None \
             else pol.max_workers
+        self.process_workers = pol.process_workers
         self._executor: ThreadPoolExecutor | None = None
+        self._pexecutor: ProcessPoolExecutor | None = None
+        # durability (DESIGN.md §2.5): the ambient write-ahead journal, if
+        # any.  Imported lazily — repro.durability reaches back into the
+        # dispatch layer, which imports this module.
+        from ..durability.journal import current_journal
+        self.journal = current_journal()
         self.batching = current_batching_policy().enabled
         self._batches: BatchCollector | None = None
         # speculation (DESIGN.md §2.4): captured from the ambient
@@ -261,6 +295,15 @@ class Runtime:
                 thread_name_prefix="poppy-offload")
         return self._executor
 
+    @property
+    def process_executor(self) -> ProcessPoolExecutor:
+        """Lazily-created process pool for ``offload="process"`` externals
+        (never spun up for runs that don't use it)."""
+        if self._pexecutor is None:
+            self._pexecutor = ProcessPoolExecutor(
+                max_workers=self.process_workers)
+        return self._pexecutor
+
     def offload_mode_for(self, fn) -> str:
         """Where a *synchronous* external executes: the annotation's explicit
         choice, else this runtime's default ('thread' unless configured)."""
@@ -292,6 +335,31 @@ class Runtime:
 
         return self.loop.run_in_executor(
             self.executor, lambda: ctx.run(offloaded))
+
+    def run_process(self, fn, pos, kw) -> asyncio.Future:
+        """Dispatch a CPU-bound external on the process pool.
+
+        The target must be importable by name (a module-level function —
+        the worker re-imports it) and the arguments picklable; both are
+        validated *here* so a violation fails the call with a clear
+        message instead of a deep BrokenProcessPool traceback.
+        """
+        mod = getattr(fn, "__module__", None)
+        qn = getattr(fn, "__qualname__", None)
+        if not mod or not qn or "<locals>" in qn:
+            raise TypeError(
+                f"offload='process' requires a module-level function "
+                f"(importable by name); {qn or fn!r} is not — nested "
+                f"functions and lambdas cannot cross the process boundary")
+        try:
+            pickle.dumps((tuple(pos), kw))
+        except Exception as e:
+            raise TypeError(
+                f"offload='process' arguments for {qn!r} must be "
+                f"picklable: {e}") from e
+        return self.loop.run_in_executor(
+            self.process_executor,
+            functools.partial(_process_call, mod, qn, tuple(pos), kw))
 
     # -- task management ---------------------------------------------------
 
@@ -392,6 +460,8 @@ class Runtime:
                 # dropped and in-flight blocking calls finish in the
                 # background without holding the program's exit
                 self._executor.shutdown(wait=False, cancel_futures=True)
+            if self._pexecutor is not None:
+                self._pexecutor.shutdown(wait=False, cancel_futures=True)
 
     async def _abort(self):
         for t in list(self.tasks):
@@ -864,6 +934,18 @@ class Runtime:
                                    wrapped=hasattr(fn, "__poppy_dispatch__"))
             self.trace.classified(ev, registry.UNORDERED)
             self.trace.dispatched(ev, args_repr=safe_repr((tuple(pos), kw)))
+        # durability: replay a journaled resolution, or journal the live
+        # one (wrapped externals only — interpreter intrinsics are cheap
+        # to re-execute and their arguments need not be repr-stable)
+        jr = self.journal
+        token = None
+        if jr is not None and hasattr(fn, "__poppy_dispatch__") \
+                and current_segment() == 0:
+            hit, token, val = jr.claim(registry.callable_name(fn), pos, kw)
+            if hit:
+                if ev is not None:
+                    self.trace.resolved(ev)
+                return val
         try:
             with maybe_span(registry.callable_name(fn), cat="external",
                             cls="unordered", inline=True,
@@ -874,6 +956,9 @@ class Runtime:
             raise ExternalCallError(registry.callable_name(fn), e) from e
         if ev is not None:
             self.trace.resolved(ev)
+        if token is not None:
+            jr.append(token, result,
+                      seq=ev.seq_no if ev is not None else -1)
         return result
 
     def _bind_graph_call(self, fn, pos, kw, s_in):

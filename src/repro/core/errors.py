@@ -53,3 +53,17 @@ class ExternalCallError(PoppyRuntimeError):
         self.fn_name = fn_name
         self.original = original
         super().__init__(f"external call {fn_name!r} raised {original!r}")
+
+
+class DeadlineExceeded(PoppyRuntimeError):
+    """An external call exceeded its declared ``deadline_ms`` and was
+    cooperatively cancelled (DESIGN.md §2.5).  The call's lock-chain
+    positions are released normally — a deadline failure never wedges the
+    per-domain ordering machinery."""
+
+    def __init__(self, fn_name, deadline_ms):
+        self.fn_name = fn_name
+        self.deadline_ms = deadline_ms
+        super().__init__(
+            f"external call {fn_name!r} exceeded its {deadline_ms}ms "
+            f"deadline")

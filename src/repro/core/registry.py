@@ -60,12 +60,16 @@ def sequential_forced() -> bool:
 
 #: Offload modes for *synchronous* externals (async externals are always
 #: awaited on the loop).  ``"thread"`` dispatches on the runtime's
-#: ThreadPoolExecutor so blocking calls overlap; ``"inline"`` executes on
-#: the event-loop thread (right for sub-microsecond operators and calls
-#: that must not cross threads).  ``None`` defers to the runtime default.
+#: ThreadPoolExecutor so blocking calls overlap; ``"process"`` dispatches
+#: on a ProcessPoolExecutor for CPU-bound externals the GIL would
+#: serialize (arguments and result must be picklable, and the target must
+#: be a module-level function); ``"inline"`` executes on the event-loop
+#: thread (right for sub-microsecond operators and calls that must not
+#: cross threads).  ``None`` defers to the runtime default.
 OFFLOAD_THREAD = "thread"
+OFFLOAD_PROCESS = "process"
 OFFLOAD_INLINE = "inline"
-_OFFLOADS = (OFFLOAD_THREAD, OFFLOAD_INLINE)
+_OFFLOADS = (OFFLOAD_THREAD, OFFLOAD_PROCESS, OFFLOAD_INLINE)
 
 
 class BatchSpec:
@@ -182,19 +186,31 @@ class ExternalInfo:
     :class:`BatchSpec`; DESIGN.md §2.3).  Accepts a ``BatchSpec``, a
     ``(max_batch, max_wait_ms, key_fn)`` tuple (trailing entries
     optional), ``True`` for defaults, or a kwargs dict.
+
+    ``deadline_ms`` caps the call's wall-clock execution (DESIGN.md §2.5):
+    an attempt exceeding it is cooperatively cancelled and the call fails
+    with :class:`repro.core.errors.DeadlineExceeded`.  Enforced on the
+    awaitable offload paths (async / ``"thread"`` / ``"process"``);
+    ``"inline"`` externals run on the loop thread and cannot be
+    interrupted mid-call.
     """
 
     __slots__ = ("cls", "classify", "name", "offload", "effects", "params",
-                 "imm_result", "batchable", "predictor")
+                 "imm_result", "batchable", "predictor", "deadline_ms")
 
     def __init__(self, cls=None, classify=None, name="", offload=None,
                  effects=None, params=None, imm_result=False,
-                 batchable=None, predictor=None):
+                 batchable=None, predictor=None, deadline_ms=None):
         assert (cls is None) != (classify is None)
         if cls is not None:
             assert cls in _CLASSES, cls
         if offload is not None:
             assert offload in _OFFLOADS, offload
+        if deadline_ms is not None:
+            deadline_ms = float(deadline_ms)
+            if deadline_ms <= 0:
+                raise ValueError(
+                    f"deadline_ms must be positive, got {deadline_ms}")
         if effects is not None and not callable(effects):
             effects = tuple(effects)
             assert all(isinstance(k, str) for k in effects), effects
@@ -218,6 +234,7 @@ class ExternalInfo:
         self.imm_result = bool(imm_result)
         self.batchable = normalize_batchable(batchable)
         self.predictor = predictor
+        self.deadline_ms = deadline_ms
 
 
 def annotated_offload(fn):

@@ -45,6 +45,14 @@ _MISS = object()
 #: dispatch pipeline probes the tiers directly for per-element lookups).
 MISS = _MISS
 
+_CORRUPT = object()
+#: Sentinel for a disk entry that *exists* but failed to parse (torn
+#: write from a crash, bit rot): semantically a miss — the request simply
+#: re-dispatches — but distinguished so callers can count it
+#: (``DispatchStats.disk_corrupt``).  The bad file is unlinked on read so
+#: the next put rebuilds it.
+CORRUPT = _CORRUPT
+
 
 class LRUCache:
     """In-memory LRU over request keys."""
@@ -104,9 +112,21 @@ class DiskCache:
     def get(self, key: str):
         p = self._path(key)
         try:
-            return _decode(json.loads(p.read_text())["value"])
-        except (OSError, ValueError, KeyError):
+            text = p.read_text()
+        except OSError:
             return _MISS
+        try:
+            return _decode(json.loads(text)["value"])
+        except (ValueError, KeyError, TypeError):
+            # entry exists but doesn't parse (torn write, bit rot): drop
+            # the bad file so the next put rebuilds it, and report
+            # CORRUPT so callers can count the event — it is otherwise
+            # treated exactly like a miss
+            try:
+                p.unlink()
+            except OSError:
+                pass
+            return _CORRUPT
 
     def put(self, key: str, value):
         tmp = self._path(key).with_suffix(".tmp")
@@ -191,6 +211,12 @@ class ResultCache:
             # every other in-flight request / admission waiter / hedge timer
             with maybe_span("cache.disk", cat="dispatch.cache"):
                 v = await asyncio.to_thread(self.disk.get, key)
+            if v is _CORRUPT:
+                if stats is not None:
+                    stats.disk_corrupt += 1
+                if trz is not None:
+                    trz.event("cache.disk_corrupt", cat="dispatch.cache")
+                v = _MISS
             if v is not _MISS:
                 self.mem.put(key, v)
                 if stats is not None:

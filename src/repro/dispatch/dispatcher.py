@@ -44,8 +44,9 @@ from repro.obs.spans import current_tracer, maybe_span
 
 from .admission import AdmissionController, AdmissionRejected, make_admission
 from .batcher import BatchStats, MicroBatcher, make_batch_policy
-from .cache import MISS, make_cache, request_key
-from .reliability import HedgePolicy, RetryPolicy, with_hedge, with_retry
+from .cache import CORRUPT, MISS, make_cache, request_key
+from .reliability import (BreakerPolicy, CircuitBreaker, CircuitOpenError,
+                          HedgePolicy, RetryPolicy, with_hedge, with_retry)
 from .router import Replica, make_router
 from .stats import DispatchStats
 
@@ -79,6 +80,8 @@ class Dispatcher(Backend):
                  retry: RetryPolicy | None = None,
                  hedge: HedgePolicy | None = None,
                  batch=None,
+                 breaker: BreakerPolicy | None = None,
+                 faults=None,
                  stats: DispatchStats | None = None):
         self.stats = stats if stats is not None else DispatchStats()
         self.batch_policy = make_batch_policy(batch)
@@ -108,6 +111,40 @@ class Dispatcher(Backend):
         self._gate = {id(r): make_admission(admission) for r in replicas}
         self.retry = retry
         self.hedge = hedge
+        # per-backend circuit breakers (DESIGN.md §2.5): one breaker per
+        # replica, transitions fanned into counters + span events
+        self._breaker = {
+            id(r): CircuitBreaker(breaker, name=r.name,
+                                  on_transition=self._on_breaker)
+            for r in replicas} if breaker is not None else None
+        # fault injection (repro.durability.faults): applied per backend
+        # attempt, inside the retry loop, so retries see fresh draws
+        from repro.durability.faults import make_injector
+        self.faults = make_injector(faults)
+        if self.faults is not None and self.faults.on_fault is None:
+            self.faults.on_fault = self._on_fault
+
+    # -- chaos / breaker event fan-in ---------------------------------------
+
+    def _on_fault(self, backend: str, kind: str):
+        self.stats.faults_injected += 1
+        trz = current_tracer()
+        if trz is not None:
+            trz.event(f"fault.{kind}", cat="dispatch.fault",
+                      backend=backend)
+
+    def _on_breaker(self, backend: str, state: str):
+        st = self.stats
+        if state == CircuitBreaker.OPEN:
+            st.breaker_opens += 1
+        elif state == CircuitBreaker.CLOSED:
+            st.breaker_closes += 1
+        else:
+            st.breaker_probes += 1
+        trz = current_tracer()
+        if trz is not None:
+            trz.event(f"breaker.{state}", cat="dispatch.breaker",
+                      backend=backend)
 
     # -- Backend interface ---------------------------------------------------
 
@@ -239,6 +276,9 @@ class Dispatcher(Backend):
                   for i in misses))
             still = []
             for i, v in zip(misses, probed):
+                if v is CORRUPT:
+                    st.disk_corrupt += 1
+                    v = MISS
                 if v is not MISS:
                     cache.mem.put(keys[i], v)
                     st.cache_hits += 1
@@ -381,6 +421,17 @@ class Dispatcher(Backend):
         replica, gate = self._pick(hint)
         self._note_route(replica, hint)
         st = self.stats
+        # breaker fast-fail *before* admission: a request to a dead
+        # backend must not occupy queue capacity waiting to fail
+        br = self._breaker.get(id(replica)) \
+            if self._breaker is not None else None
+        if br is not None and not br.allow():
+            st.breaker_fastfails += 1
+            trz = current_tracer()
+            if trz is not None:
+                trz.event("breaker.fastfail", cat="dispatch.breaker",
+                          backend=replica.name)
+            raise CircuitOpenError(replica.name)
         if gate is None:
             return await self._attempt(replica, key, call)
         # the admission wait is begin/end-bracketed (not a ``with``) so the
@@ -416,6 +467,9 @@ class Dispatcher(Backend):
         bs = st.backend(replica.name)
         bs.outstanding_peak = max(bs.outstanding_peak, replica.outstanding)
         st.dispatched += 1
+        br = self._breaker.get(id(replica)) \
+            if self._breaker is not None else None
+        fi = self.faults
 
         def on_retry(a):
             st.retries += 1
@@ -424,6 +478,24 @@ class Dispatcher(Backend):
                 trz.event("retry", cat="dispatch", attempt=a,
                           backend=replica.name)
 
+        async def once():
+            # every try perturbs (injected chaos) and reports its own
+            # outcome to the breaker — retries that a policy absorbs must
+            # still count toward the consecutive-failure threshold
+            try:
+                if fi is not None:
+                    await fi.perturb(replica.name)
+                r = await call(backend)
+            except asyncio.CancelledError:
+                raise  # abandoned, not failed: breaker state unchanged
+            except BaseException:
+                if br is not None:
+                    br.record_failure()
+                raise
+            if br is not None:
+                br.record_success()
+            return r
+
         t0 = time.monotonic()
         try:
             with maybe_span("attempt", cat="backend",
@@ -431,7 +503,7 @@ class Dispatcher(Backend):
                             backend=replica.name,
                             outstanding=replica.outstanding):
                 result = await with_retry(
-                    lambda: call(backend), self.retry, key=key,
+                    once, self.retry, key=key,
                     on_retry=on_retry)
         except BaseException as e:
             if isinstance(e, asyncio.CancelledError):

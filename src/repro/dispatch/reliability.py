@@ -1,5 +1,5 @@
-"""Reliability layer: retries with exponential backoff, hedged requests
-(DESIGN.md §5).
+"""Reliability layer: retries with exponential backoff, hedged requests,
+and per-backend circuit breakers (DESIGN.md §5, §2.5).
 
 * :func:`with_retry` — re-dispatch on failure with exponential backoff and
   *deterministic* jitter (derived from the request key and attempt number,
@@ -11,12 +11,19 @@
   completion wins and the rest are cancelled.  Safe because the component
   calls are stateless and deterministic — whichever copy finishes first
   returns the same value.
+* :class:`CircuitBreaker` — per-replica failure isolation: after
+  ``failure_threshold`` consecutive failures the breaker *opens* and new
+  requests fast-fail (:class:`CircuitOpenError`) instead of queuing on a
+  dead backend; after ``cooldown_s`` one half-open probe is admitted, and
+  its outcome closes or re-opens the circuit.
 """
 
 from __future__ import annotations
 
 import asyncio
 import hashlib
+import threading
+import time
 from dataclasses import dataclass
 
 
@@ -111,3 +118,96 @@ async def with_hedge(thunk_factory, policy: HedgePolicy | None, *,
                 continue
             if t.done():
                 t.exception()
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker (DESIGN.md §2.5)
+
+
+class CircuitOpenError(RuntimeError):
+    """Fast-fail: the picked replica's circuit is open (the backend failed
+    ``failure_threshold`` consecutive times and its cooldown has not yet
+    elapsed)."""
+
+    def __init__(self, backend: str):
+        self.backend = backend
+        super().__init__(f"circuit open for backend {backend!r}")
+
+
+@dataclass(frozen=True)
+class BreakerPolicy:
+    failure_threshold: int = 5   # consecutive failures before opening
+    cooldown_s: float = 1.0      # open duration before a half-open probe
+
+    def __post_init__(self):
+        if self.failure_threshold < 1:
+            raise ValueError("failure_threshold must be >= 1")
+        if self.cooldown_s < 0:
+            raise ValueError("cooldown_s must be >= 0")
+
+
+class CircuitBreaker:
+    """closed → (threshold consecutive failures) → open → (cooldown) →
+    half-open probe → closed on success / open on failure.
+
+    Thread-safe: the dispatcher may be driven from the sync-client bridge
+    loop concurrently with the engine loop.  ``on_transition(name, state)``
+    fires on every state change (the dispatcher wires it to counters and
+    span events); ``clock`` is injectable for deterministic tests.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, policy: BreakerPolicy, *, name: str = "",
+                 on_transition=None, clock=time.monotonic):
+        self.policy = policy
+        self.name = name
+        self.on_transition = on_transition
+        self.clock = clock
+        self.state = self.CLOSED
+        self._failures = 0
+        self._opened_at = 0.0
+        self._probing = False
+        self._lock = threading.Lock()
+
+    def _to(self, state: str):
+        self.state = state
+        if self.on_transition is not None:
+            self.on_transition(self.name, state)
+
+    def allow(self) -> bool:
+        """Whether a new attempt may proceed.  In the open state this
+        flips to half-open (admitting exactly one probe) once the cooldown
+        has elapsed; other arrivals fast-fail until the probe settles."""
+        with self._lock:
+            if self.state == self.CLOSED:
+                return True
+            if self.state == self.OPEN:
+                if self.clock() - self._opened_at < self.policy.cooldown_s:
+                    return False
+                self._to(self.HALF_OPEN)
+                self._probing = True
+                return True
+            # half-open: one probe at a time
+            if self._probing:
+                return False
+            self._probing = True
+            return True
+
+    def record_success(self):
+        with self._lock:
+            self._failures = 0
+            self._probing = False
+            if self.state != self.CLOSED:
+                self._to(self.CLOSED)
+
+    def record_failure(self):
+        with self._lock:
+            self._failures += 1
+            self._probing = False
+            if self.state == self.HALF_OPEN or (
+                    self.state == self.CLOSED
+                    and self._failures >= self.policy.failure_threshold):
+                self._opened_at = self.clock()
+                if self.state != self.OPEN:
+                    self._to(self.OPEN)

@@ -118,6 +118,12 @@ class DispatchStats:
     cancelled = InstrumentAttr()     # backend attempts cancelled mid-flight
     races = InstrumentAttr()         # first_success races started
     race_losers = InstrumentAttr()   # rollouts cancelled after a winner
+    disk_corrupt = InstrumentAttr()  # unparseable disk-cache entries dropped
+    faults_injected = InstrumentAttr()   # chaos perturbations applied
+    breaker_fastfails = InstrumentAttr()  # requests refused on open circuit
+    breaker_opens = InstrumentAttr()     # circuit transitions to open
+    breaker_closes = InstrumentAttr()    # circuit transitions to closed
+    breaker_probes = InstrumentAttr()    # half-open probes admitted
 
     def __init__(self, registry: MetricsRegistry | None = None):
         reg = registry if registry is not None else MetricsRegistry()
@@ -135,6 +141,12 @@ class DispatchStats:
         self._i_cancelled = reg.counter("dispatch_cancelled")
         self._i_races = reg.counter("dispatch_races")
         self._i_race_losers = reg.counter("dispatch_race_losers")
+        self._i_disk_corrupt = reg.counter("dispatch_disk_corrupt")
+        self._i_faults_injected = reg.counter("dispatch_faults_injected")
+        self._i_breaker_fastfails = reg.counter("dispatch_breaker_fastfails")
+        self._i_breaker_opens = reg.counter("dispatch_breaker_opens")
+        self._i_breaker_closes = reg.counter("dispatch_breaker_closes")
+        self._i_breaker_probes = reg.counter("dispatch_breaker_probes")
         # admission queue: one gauge carries depth (value) and peak
         self._queue = reg.gauge("dispatch_queue_depth")
         self.per_backend: dict[str, BackendStats] = {}
@@ -246,6 +258,12 @@ class DispatchStats:
             "cancelled": self.cancelled,
             "races": self.races,
             "race_losers": self.race_losers,
+            "disk_corrupt": self.disk_corrupt,
+            "faults_injected": self.faults_injected,
+            "breaker_fastfails": self.breaker_fastfails,
+            "breaker_opens": self.breaker_opens,
+            "breaker_closes": self.breaker_closes,
+            "breaker_probes": self.breaker_probes,
             "queue_peak": self.queue_peak,
             "per_domain": dict(self.per_domain),
             "backends": {
@@ -282,6 +300,13 @@ class DispatchStats:
                 f"  races: {snap['races']} first_success races, "
                 f"{snap['race_losers']} losers cancelled, "
                 f"{snap['cancelled']} attempts cancelled mid-flight")
+        if snap["faults_injected"] or snap["breaker_opens"]:
+            lines.append(
+                f"  chaos: {snap['faults_injected']} faults injected, "
+                f"breaker {snap['breaker_opens']} opens / "
+                f"{snap['breaker_probes']} probes / "
+                f"{snap['breaker_closes']} closes, "
+                f"{snap['breaker_fastfails']} fast-fails")
         if snap["batch"]:
             b = snap["batch"]
             lines.append(

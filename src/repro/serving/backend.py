@@ -32,13 +32,20 @@ def common_prefix_len(token_lists) -> int:
 
 class LocalEngineBackend(Backend):
     def __init__(self, engine, tokenizer=None, *, hedge_timeout=None,
-                 warm_shared_prefix=True, min_shared_prefix=4):
+                 warm_shared_prefix=True, min_shared_prefix=4,
+                 faults=None, name="local"):
         self.engine = engine
         self.tok = tokenizer or ByteTokenizer(engine.cfg.vocab_size)
         self.hedge_timeout = hedge_timeout
         self.warm_shared_prefix = warm_shared_prefix
         self.min_shared_prefix = min_shared_prefix
         self.hedges = 0
+        self.name = name
+        # chaos testing (repro.durability.faults): perturb each request
+        # *before* it touches the engine, so an injected failure never
+        # leaks a decode slot or prefix pin
+        from repro.durability.faults import make_injector
+        self.faults = make_injector(faults)
 
     def prefix_probe(self, prompt: str) -> int:
         """Longest-cached-prefix token count for ``prompt`` — the routing
@@ -48,6 +55,8 @@ class LocalEngineBackend(Backend):
         return self.engine.prefix_probe(self.tok.encode(prompt))
 
     async def generate(self, prompt, *, max_tokens, temperature, stop):
+        if self.faults is not None:
+            await self.faults.perturb(self.name)
         return await self._generate_tokens(
             self.tok.encode(prompt), max_tokens=max_tokens,
             temperature=temperature)
@@ -104,6 +113,8 @@ class LocalEngineBackend(Backend):
             return self.tok.decode(out)
 
     async def embed(self, text):
+        if self.faults is not None:
+            await self.faults.perturb(self.name)
         toks = self.tok.encode(text)[:8]
         return tuple(float(t) / self.tok.vocab_size for t in toks)
 

@@ -168,9 +168,12 @@ def test_offload_policy_caps_workers():
 
 def test_offload_policy_validation():
     with pytest.raises(ValueError):
-        OffloadPolicy(mode="process")
+        OffloadPolicy(mode="fiber")
     with pytest.raises(ValueError):
         OffloadPolicy(max_workers=0)
+    with pytest.raises(ValueError):
+        OffloadPolicy(process_workers=0)
+    assert OffloadPolicy(mode="process").mode == "process"
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,451 @@
+"""repro.durability tests: write-ahead journal record/replay (including a
+kill/resume subprocess and truncation-at-any-byte torn-tail recovery),
+circuit-breaker transitions, fault-injection determinism, per-external
+deadlines, process offload, and disk-cache corruption handling
+(DESIGN.md §2.5)."""
+
+import asyncio
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    DeadlineExceeded,
+    ExternalCallError,
+    equivalent,
+    offload_policy,
+    poppy,
+    recording,
+    sequential,
+    sequential_mode,
+    unordered,
+)
+from repro.durability import KILL_EXIT, Journal, resume, use_journal
+from repro.durability.faults import (
+    FaultInjector,
+    FaultPlan,
+    InjectedFault,
+    InjectedTimeout,
+    make_injector,
+)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# -- a small durable app (module level: journal keys must be stable) --------
+
+CALLS = []
+EFFECTS = []
+
+
+@unordered(returns_immutable=True)
+def up(x):
+    CALLS.append(("up", x))
+    return str(x).upper()
+
+
+@unordered(returns_immutable=True)
+def join2(a, b):
+    CALLS.append(("join", a, b))
+    return f"{a}+{b}"
+
+
+@sequential(effects=("log",))
+def log(x):
+    EFFECTS.append(x)
+    return None
+
+
+@poppy
+def app(items):
+    acc = ()
+    for it in items:
+        acc += (up(it),)
+    merged = acc[0]
+    for nxt in acc[1:]:
+        merged = join2(merged, nxt)
+    log(merged)
+    return merged
+
+
+def _reset():
+    CALLS.clear()
+    EFFECTS.clear()
+
+
+ITEMS = ["a", "b", "c", "a"]          # duplicate: occurrence indexing
+
+
+# -- journal unit behaviour --------------------------------------------------
+
+
+def test_journal_roundtrip_and_occurrence_indexing(tmp_path):
+    jp = tmp_path / "j.journal"
+    j = Journal(jp, mode="record")
+    for i, v in enumerate(["first", "second"]):
+        hit, tok, _ = j.claim("f", ("x",), {})
+        assert not hit
+        j.append(tok, v, effects=("log",), seq=i)
+    j.close()
+
+    r = Journal(jp, mode="resume")
+    assert r.stats.loaded == 2
+    # identical calls replay in append order, one occurrence each
+    assert r.claim("f", ("x",), {}) == (True, None, "first")
+    assert r.claim("f", ("x",), {}) == (True, None, "second")
+    hit, tok, _ = r.claim("f", ("x",), {})   # third occurrence: live
+    assert not hit and tok is not None
+    # different args miss independently
+    assert r.claim("f", ("y",), {})[0] is False
+    r.close()
+
+
+def test_journal_skips_unjournalable_values(tmp_path):
+    j = Journal(tmp_path / "j.journal", mode="record")
+    _, tok, _ = j.claim("f", (), {})
+    j.append(tok, object())               # no JSON round-trip
+    assert j.stats.skipped == 1 and j.stats.appended == 0
+    j.close()
+
+
+def test_record_resume_replays_everything(tmp_path):
+    jp = tmp_path / "run.journal"
+    _reset()
+    with recording() as r1, use_journal(jp) as j1:
+        out1 = app(ITEMS)
+    assert j1.stats.appended == len(CALLS) + len(EFFECTS)
+
+    _reset()
+    with recording() as r2, resume(jp) as j2:
+        out2 = app(ITEMS)
+    assert out2 == out1
+    assert not CALLS and not EFFECTS      # zero live re-execution
+    assert j2.stats.replayed == j2.stats.loaded
+    ok, why = equivalent(r1, r2)
+    assert ok, why
+
+
+def test_resume_truncated_at_any_byte(tmp_path):
+    """Torn-tail property: chop the journal at *any* byte offset and the
+    resume still completes byte-identically — at worst the torn line (and
+    anything after it) re-executes live."""
+    jp = tmp_path / "run.journal"
+    _reset()
+    with use_journal(jp):
+        expect = app(ITEMS)
+    data = jp.read_bytes()
+
+    try:
+        from hypothesis import HealthCheck, given, settings
+        from hypothesis import strategies as st
+
+        @settings(max_examples=25, deadline=None,
+                  suppress_health_check=list(HealthCheck))
+        @given(st.integers(min_value=0, max_value=len(data)))
+        def prop(cut):
+            _check_cut(jp, data, cut, expect)
+
+        prop()
+    except ImportError:
+        # deterministic sweep: every line boundary ±1 plus mid-line cuts
+        offsets = {0, 1, len(data), len(data) - 1, len(data) // 2}
+        pos = 0
+        for line in data.splitlines(keepends=True):
+            pos += len(line)
+            offsets.update({pos - 1, pos, min(pos + 1, len(data))})
+        for cut in sorted(offsets):
+            _check_cut(jp, data, cut, expect)
+
+
+def _check_cut(jp, data, cut, expect):
+    jp.write_bytes(data[:cut])
+    _reset()
+    with resume(jp) as j:
+        got = app(ITEMS)
+    assert got == expect, f"cut={cut}: {got!r} != {expect!r}"
+    assert j.stats.torn <= 1, f"cut={cut}: {j.stats}"
+    jp.write_bytes(data)                  # restore for the next example
+
+
+def test_speculative_segments_never_journal(tmp_path):
+    """Only committed (segment-0) resolutions may enter the journal."""
+    from repro.core.trace import reset_segment, set_segment
+
+    jp = tmp_path / "run.journal"
+    _reset()
+    tok = set_segment(3)                  # pretend we're a speculative arm
+    try:
+        with use_journal(jp) as j:
+            app(ITEMS)
+    finally:
+        reset_segment(tok)
+    assert j.stats.appended == 0
+    assert jp.read_text() == ""
+
+
+def test_kill_resume_subprocess(tmp_path):
+    """End-to-end chaos: a child dies via os._exit mid-journal; resuming
+    from what survived on disk completes byte-identically."""
+    jp = tmp_path / "killed.journal"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(ROOT), str(ROOT / "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "benchmarks" / "fig17_durability.py"),
+         "--child", str(jp), "--kill-after", "6"],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == KILL_EXIT, proc.stderr[-2000:]
+    lines = [ln for ln in jp.read_text().splitlines() if ln.strip()]
+    assert len(lines) >= 6
+
+    # the fig17 pipeline and this module's app differ; resume *its* app
+    # via its own module so keys line up
+    sys.path.insert(0, str(ROOT / "benchmarks"))
+    try:
+        import fig17_durability as f17
+    finally:
+        sys.path.pop(0)
+    f17._reset()
+    with sequential_mode():
+        expect17 = f17.pipeline(f17.TOPICS)
+    f17._reset()
+    with resume(jp) as j:
+        got = f17.pipeline(f17.TOPICS)
+    assert got == expect17
+    assert j.stats.replayed >= 6
+
+
+# -- circuit breaker ---------------------------------------------------------
+
+
+def test_breaker_transitions():
+    from repro.dispatch.reliability import BreakerPolicy, CircuitBreaker
+
+    now = [0.0]
+    seen = []
+    br = CircuitBreaker(BreakerPolicy(failure_threshold=2, cooldown_s=10.0),
+                        name="b", clock=lambda: now[0],
+                        on_transition=lambda *a: seen.append(a))
+    assert br.state == "closed" and br.allow()
+    br.record_failure()
+    assert br.state == "closed"           # below threshold
+    br.record_failure()
+    assert br.state == "open" and not br.allow()
+    now[0] = 9.9
+    assert not br.allow()                 # still cooling down
+    now[0] = 10.1
+    assert br.allow()                     # the single half-open probe
+    assert br.state == "half_open"
+    assert not br.allow()                 # second caller blocked during probe
+    br.record_success()
+    assert br.state == "closed" and br.allow()
+    # a half-open probe failure reopens immediately
+    br.record_failure()
+    br.record_failure()
+    now[0] = 20.2
+    assert br.allow()
+    br.record_failure()
+    assert br.state == "open"
+    states = [state for _, state in seen]
+    assert "open" in states and "half_open" in states and "closed" in states
+
+
+def test_breaker_success_resets_failure_streak():
+    from repro.dispatch.reliability import BreakerPolicy, CircuitBreaker
+
+    br = CircuitBreaker(BreakerPolicy(failure_threshold=3, cooldown_s=1.0))
+    for _ in range(5):
+        br.record_failure()
+        br.record_failure()
+        br.record_success()               # streak broken each time
+    assert br.state == "closed"
+
+
+def test_dispatcher_breaker_fastfails_and_recovers():
+    from repro.core.ai import SimulatedBackend
+    from repro.dispatch import Dispatcher
+    from repro.dispatch.reliability import BreakerPolicy, CircuitOpenError
+
+    fi = FaultInjector(FaultPlan(error_rate=1.0, seed=3))
+    d = Dispatcher([SimulatedBackend(time_scale=0.01)],
+                   breaker=BreakerPolicy(failure_threshold=3,
+                                         cooldown_s=0.05),
+                   faults=fi)
+    kw = dict(max_tokens=4, temperature=0.0, stop=None)
+
+    async def go():
+        for i in range(5):
+            with pytest.raises((InjectedFault, CircuitOpenError)):
+                await d.generate(f"p{i}", **kw)
+        assert d.stats.breaker_opens >= 1
+        assert d.stats.breaker_fastfails >= 1
+        fi.plan = FaultPlan()             # backend heals
+        await asyncio.sleep(0.06)         # cooldown elapses
+        out = await d.generate("healed", **kw)
+        assert out
+        assert d.stats.breaker_probes >= 1
+        assert d.stats.breaker_closes >= 1
+        for r in d.router.replicas:
+            assert r.outstanding == 0
+
+    asyncio.run(go())
+
+
+# -- fault injection ---------------------------------------------------------
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(error_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(timeout_rate=-0.1)
+    with pytest.raises(TypeError):
+        make_injector(42)
+    assert make_injector(None) is None
+    assert isinstance(make_injector({"error_rate": 0.5}), FaultInjector)
+
+
+def test_fault_injection_is_seeded_deterministic():
+    def draw(seed):
+        fi = FaultInjector(FaultPlan(error_rate=0.3, timeout_rate=0.2,
+                                     seed=seed))
+
+        async def go():
+            out = []
+            for _ in range(30):
+                try:
+                    await fi.perturb("b0")
+                    out.append("ok")
+                except InjectedTimeout:
+                    out.append("timeout")
+                except InjectedFault:
+                    out.append("error")
+            return out
+
+        return asyncio.run(go())
+
+    a, b, c = draw(7), draw(7), draw(8)
+    assert a == b                         # same seed, same schedule
+    assert a != c                         # different seed diverges
+    assert "error" in a and "ok" in a
+
+
+# -- per-external deadlines --------------------------------------------------
+
+
+@unordered(deadline_ms=50)
+def stall():
+    time.sleep(2.0)
+    return "never"
+
+
+@poppy
+def deadline_app():
+    return stall()
+
+
+def test_deadline_exceeded_cancels_and_stays_balanced():
+    t0 = time.monotonic()
+    with pytest.raises(DeadlineExceeded) as ei:
+        deadline_app()
+    assert time.monotonic() - t0 < 1.5    # did not wait out the sleep
+    assert "50" in str(ei.value)
+    # the runtime is not poisoned: a normal app on the same effect
+    # domains still runs to completion with balanced lock chains
+    _reset()
+    assert app(ITEMS) == "A+B+C+A"
+    assert EFFECTS == ["A+B+C+A"]
+
+
+# -- process offload ---------------------------------------------------------
+
+
+@unordered(offload="process")
+def square_pid(x):
+    return (x * x, os.getpid())
+
+
+@poppy
+def proc_app(xs):
+    acc = ()
+    for x in xs:
+        acc += (square_pid(x),)
+    return acc
+
+
+def test_process_offload_runs_out_of_process():
+    with offload_policy(mode="thread", process_workers=2):
+        out = proc_app([1, 2, 3])
+    assert [v for v, _ in out] == [1, 4, 9]
+    assert all(pid != os.getpid() for _, pid in out)
+
+
+@unordered(offload="process")
+def identity(x):
+    return x
+
+
+@poppy
+def bad_proc_app():
+    return identity(lambda: 1)
+
+
+def test_process_offload_rejects_unpicklable_args():
+    with pytest.raises(ExternalCallError, match="picklable"):
+        bad_proc_app()
+
+
+def test_process_offload_rejects_local_functions():
+    @unordered(offload="process")
+    def local_fn(x):
+        return x
+
+    @poppy
+    def local_app():
+        return local_fn(1)
+
+    with pytest.raises(ExternalCallError, match="module-level"):
+        local_app()
+
+
+# -- disk-cache corruption ---------------------------------------------------
+
+
+def test_disk_cache_corruption_is_counted_miss(tmp_path):
+    from repro.core.ai import SimulatedBackend
+    from repro.dispatch import Dispatcher
+
+    kw = dict(max_tokens=4, temperature=0.0, stop=None)
+
+    async def one(d, prompt):
+        return await d.generate(prompt, **kw)
+
+    d1 = Dispatcher([SimulatedBackend(time_scale=0.01)],
+                    cache=dict(disk_dir=tmp_path))
+    v1 = asyncio.run(one(d1, "keep me"))
+    files = list(tmp_path.glob("*.json"))
+    assert files
+    for f in files:
+        f.write_text("{ torn json")      # corrupt every entry
+
+    d2 = Dispatcher([SimulatedBackend(time_scale=0.01)],
+                    cache=dict(disk_dir=tmp_path))
+    v2 = asyncio.run(one(d2, "keep me"))
+    assert v2 == v1                       # re-dispatched, same result
+    assert d2.stats.disk_corrupt == 1
+    assert d2.stats.disk_hits == 0
+    # the bad file was dropped and rebuilt by the re-dispatch
+    rebuilt = list(tmp_path.glob("*.json"))
+    assert rebuilt
+    assert json.loads(rebuilt[0].read_text())["value"]
+
+    d3 = Dispatcher([SimulatedBackend(time_scale=0.01)],
+                    cache=dict(disk_dir=tmp_path))
+    v3 = asyncio.run(one(d3, "keep me"))
+    assert v3 == v1
+    assert d3.stats.disk_hits == 1 and d3.stats.disk_corrupt == 0
